@@ -1,0 +1,119 @@
+"""Fig. 12 reproduction: ablation of each PAT design.
+
+  PAT-compute : FastTree-style compute-oriented packing cost model
+  PAT-naive   : every tree node -> its own item (ignores merge overhead)
+  PAT-fixed   : multi-tile kernel disabled; fixed (64,128) tiles
+  PAT-serial  : multi-stream forward disabled; groups execute serially
+
+Metrics: modeled attention latency (A100 constants) + exact global-memory
+read/write bytes, on the paper's synthetic Fig. 10 workloads with the
+Llama-3-8B head configuration (32/8). Paper: naive +10.4% latency /
++16.7% bytes, compute +4.6% / +10.9%, fixed +39% latency, serial +4.8%.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.pack_scheduler import (
+    plan_intermediate_bytes,
+    plan_kv_bytes,
+    schedule,
+)
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import build_work_plan
+from repro.workloads.traces import (
+    FIG10_CONFIGS,
+    conversation_trace,
+    synthetic_decode_batch,
+    toolagent_trace,
+    trace_to_decode_batch,
+)
+from benchmarks.latmodel import HwModel, fixed_tile_latency, plan_latency
+
+PAGE = 16
+HEAD_DIM = 128
+HQ, HKV = 32, 8
+
+
+def _batches():
+    for idx, (B, L) in list(enumerate(FIG10_CONFIGS, 1))[:18]:
+        yield f"fig10_{idx}", synthetic_decode_batch(B, L, PAGE)
+    for name, fn in [("toolagent", toolagent_trace), ("conversation", conversation_trace)]:
+        bt, kv, _ = trace_to_decode_batch(fn(num_requests=48, seed=7), PAGE)
+        yield name, (bt, kv)
+
+
+def run(verbose: bool = True) -> Dict[str, Dict[str, float]]:
+    hw = HwModel()
+    sel = TileSelector(head_dim=HEAD_DIM, page_size=PAGE)
+    G = HQ // HKV
+    agg = {
+        k: {"t": 0.0, "bytes": 0.0}
+        for k in ("pat", "pat_compute", "pat_naive", "pat_fixed", "pat_serial")
+    }
+    for name, (bt, kv) in _batches():
+        def wp_of(strategy):
+            plan = schedule(bt, kv, PAGE, strategy=strategy, rows_per_query=G,
+                            max_query_rows=sel.max_query_rows)
+            return plan, build_work_plan(plan, sel, HQ, HKV, kv_lens=kv)
+
+        plan_pat, wp_pat = wp_of("pat")
+        plan_cmp, wp_cmp = wp_of("pat_compute")
+        plan_nv, wp_nv = wp_of("pat_naive")
+
+        res = {
+            "pat": plan_latency(wp_pat, HEAD_DIM, hw=hw),
+            "pat_compute": plan_latency(wp_cmp, HEAD_DIM, hw=hw),
+            "pat_naive": plan_latency(wp_nv, HEAD_DIM, hw=hw),
+            "pat_fixed": fixed_tile_latency(
+                plan_pat, HEAD_DIM, HQ, HKV, tile=(64, 128), hw=hw, rows_per_query=G
+            ),
+            "pat_serial": plan_latency(wp_pat, HEAD_DIM, hw=hw, serial=True),
+        }
+        byt = {
+            "pat": plan_kv_bytes(plan_pat, HEAD_DIM, HKV)
+            + plan_intermediate_bytes(plan_pat, HEAD_DIM, HQ),
+            "pat_compute": plan_kv_bytes(plan_cmp, HEAD_DIM, HKV)
+            + plan_intermediate_bytes(plan_cmp, HEAD_DIM, HQ),
+            "pat_naive": plan_kv_bytes(plan_nv, HEAD_DIM, HKV)
+            + plan_intermediate_bytes(plan_nv, HEAD_DIM, HQ),
+            "pat_fixed": res["pat_fixed"]["kv_bytes"] + res["pat_fixed"]["merge_bytes"],
+            "pat_serial": plan_kv_bytes(plan_pat, HEAD_DIM, HKV)
+            + plan_intermediate_bytes(plan_pat, HEAD_DIM, HQ),
+        }
+        for k in agg:
+            agg[k]["t"] += res[k]["t_total"]
+            agg[k]["bytes"] += byt[k]
+
+    # Q-padding waste proxy for PAT-fixed (the paper's I_mem dimension):
+    # padded MMA rows per useful row under fixed m=64 vs multi-tile m.
+    pad_fixed, pad_pat = 0.0, 0.0
+    for name, (bt, kv) in _batches():
+        plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=G,
+                        max_query_rows=sel.max_query_rows)
+        for it in plan.items:
+            rows = it.num_queries * G
+            pad_fixed += -(-rows // 64) * 64
+            m_sel = sel.select(rows, it.num_tokens).m
+            pad_pat += m_sel
+    out = {"fixed_row_padding_x": pad_fixed / max(pad_pat, 1)}
+    for k in agg:
+        out[k] = {
+            "latency_vs_pat_pct": 100 * (agg[k]["t"] / agg["pat"]["t"] - 1),
+            "bytes_vs_pat_pct": 100 * (agg[k]["bytes"] / agg["pat"]["bytes"] - 1),
+            "t_total_ms": agg[k]["t"] * 1e3,
+        }
+        if verbose:
+            print(
+                f"{k:12s}: latency {out[k]['latency_vs_pat_pct']:+6.1f}%  "
+                f"bytes {out[k]['bytes_vs_pat_pct']:+6.1f}%",
+                flush=True,
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

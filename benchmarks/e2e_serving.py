@@ -1,0 +1,133 @@
+"""Fig. 11 reproduction: end-to-end serving — TTFT / TPOT across backends.
+
+Runs the real continuous-batching engine (serving/engine.py) on the
+toolagent and conversation traces with a reduced llama-family model,
+comparing attention backends under identical traffic:
+
+  PAT            (strategy=pat)
+  FlashAttention (strategy=query_centric)
+  Relay          (strategy=relay)
+
+Two views are reported per backend:
+  * measured-on-CPU mean TTFT / mean+P99 TPOT (trend sanity: same engine,
+    same requests; CPU magnitudes are not GPU latencies), and
+  * the modeled attention time per decode step (A100 constants) summed
+    over the run — the paper's actual claim surface.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.attention import PatConfig
+from repro.models import transformer as T
+from repro.serving.engine import Engine
+from repro.workloads.traces import conversation_trace, toolagent_trace
+from benchmarks.latmodel import HwModel, plan_latency
+
+PAGE = 16
+
+
+def run(
+    num_requests: int = 12,
+    trace_names=("toolagent", "conversation"),
+    backends=("pat", "query_centric", "relay"),
+    verbose: bool = True,
+) -> List[Dict]:
+    # latency-model dims: Llama-3-8B-class (the paper's e2e model);
+    # the engine executes the reduced config, the plan structure is shared
+    full_cfg = get_config("llava-next-mistral-7b")  # 32H/8KV/128hd, 32L
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    hw = HwModel()
+    rows = []
+    for tname in trace_names:
+        fn = toolagent_trace if tname == "toolagent" else conversation_trace
+        # scale prompts down so CPU prefill stays tractable
+        # few prefix-group combinations so the reduced-scale batch still
+        # collides on shared prefixes the way a production batch does
+        reqs = fn(
+            num_requests=num_requests, vocab=cfg.vocab_size, seed=3,
+            **(
+                dict(num_tools=3, sessions_per_tool=2,
+                     tool_prompt_range=(256, 640), session_template=64,
+                     prompt_mean=24, output_mean=12)
+                if tname == "toolagent"
+                else dict(num_languages=2, num_countries=2,
+                          prefix_lens=(32, 128, 512), prompt_mean=24,
+                          output_mean=12)
+            ),
+        )
+        for backend in backends:
+            eng = Engine(
+                params, cfg, num_pages=4096,
+                pat_config=PatConfig(impl="xla", merge_impl="xla",
+                                     strategy=backend, page_size=PAGE),
+                eos_id=-1,
+            )
+            modeled_attn_s = 0.0
+            t_start = time.perf_counter()
+            for r in reqs:
+                eng.submit(r.tokens, max_new_tokens=min(r.max_new_tokens, 16))
+            # drain, accumulating the modeled per-step attention latency
+            while eng.waiting or eng.running:
+                eng.step()
+                if eng.running:
+                    wp = eng.backend.cache._plan
+                    if wp is not None and wp.groups:
+                        # model at FULL-arch scale: the plan's page/sharing
+                        # structure is scale-invariant, so full head dims +
+                        # layer count give the production-magnitude claim
+                        modeled_attn_s += plan_latency(
+                            wp, full_cfg.head_dim, kv_bytes_per_el=2, hw=hw,
+                            num_kv_heads=full_cfg.num_kv_heads,
+                            num_q_heads=full_cfg.num_heads,
+                        )["t_total"] * full_cfg.num_layers
+            wall = time.perf_counter() - t_start
+            fin = eng.metrics.finished
+            ttft = [r.t_first_token - r.arrival for r in fin if r.t_first_token]
+            tpot = []
+            for r in fin:
+                if r.t_finished and r.t_first_token and len(r.generated) > 1:
+                    tpot.append(
+                        (r.t_finished - r.t_first_token) / (len(r.generated) - 1)
+                    )
+            row = {
+                "trace": tname,
+                "backend": backend,
+                "requests": len(fin),
+                "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+                "mean_tpot_ms": 1e3 * float(np.mean(tpot)) if tpot else 0.0,
+                "p99_tpot_ms": 1e3 * float(np.percentile(tpot, 99)) if tpot else 0.0,
+                "modeled_attn_ms": modeled_attn_s * 1e3,
+                "wall_s": wall,
+                "plan_hit_rate": eng.backend.cache.stats.hit_rate,
+            }
+            rows.append(row)
+            if verbose:
+                print(
+                    f"{tname:13s} {backend:14s}: TTFT={row['mean_ttft_s']:.2f}s "
+                    f"TPOT={row['mean_tpot_ms']:.1f}ms "
+                    f"modeled_attn={row['modeled_attn_ms']:.2f}ms "
+                    f"hit={row['plan_hit_rate']:.2f}",
+                    flush=True,
+                )
+    # TPOT reduction summary (modeled attention, PAT vs baselines)
+    for tname in trace_names:
+        base = {r["backend"]: r for r in rows if r["trace"] == tname}
+        if "pat" in base:
+            for b, r in base.items():
+                if b != "pat" and r["modeled_attn_ms"] > 0:
+                    red = 100 * (1 - base["pat"]["modeled_attn_ms"] / r["modeled_attn_ms"])
+                    if verbose:
+                        print(f"{tname}: modeled attention reduction vs {b}: {red:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,105 @@
+"""Final assembly: merge dry-run artifacts, render §Dry-run and §Roofline
+tables (with the per-cell 'what moves the dominant term' sentence), and
+splice them into EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.finalize_experiments
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import subprocess
+import sys
+
+MERGE_INPUTS = (
+    ["dryrun_single_pod.log", "dryrun_multi_pod.log",
+     "dryrun_single_pod_b.json", "dryrun_multi_pod_b.json"]
+    + sorted(glob.glob("fill_sp_*.json"))
+    + sorted(glob.glob("fill_mp_*.json"))
+)
+
+
+def lever(r) -> str:
+    """One sentence: what would move this cell's dominant term down."""
+    rf = r["roofline"]
+    dom, shape, arch = rf["dominant"], r["shape"], r["arch"]
+    moe = arch in ("deepseek-v2-236b", "llama4-scout-17b-a16e", "jamba-v0.1-52b")
+    ssm = arch in ("mamba2-1.3b", "jamba-v0.1-52b")
+    if "decode" in shape or shape == "long_500k":
+        if dom == "collective":
+            return "split-KV-over-model sharding (§Perf A2 measured this at -330x t_coll on qwen3)"
+        if dom == "memory":
+            return "decode reads are near-minimal (cache+params); raise batch per chip to amortise"
+        return "batch more queries per step (MXU under-fed at one token/seq)"
+    if shape == "prefill_32k":
+        if dom == "memory":
+            return "chunked/flash attention (§Perf B1: -7.5x t_mem on qwen3)"
+        return "flatten GQA head dims so 16-way TP shards heads without resharding gathers"
+    # train
+    if moe and dom == "collective":
+        return "token-dispatch all-to-all instead of FSDP expert-weight gathers (§Perf C2 napkin: ~30x)"
+    if ssm and dom == "collective":
+        return "shard SSD heads (not the packed in_proj concat dim) to kill conv resharding"
+    if dom == "collective":
+        return "overlap grad all-reduce with backward (scan already enables; raise per-chip batch)"
+    if dom == "memory":
+        return "relax remat policy (save attention outputs) to trade HBM reads for recompute"
+    return "raise per-chip batch (compute-bound is the healthy endpoint)"
+
+
+def fmt(x):
+    return f"{x:.2e}"
+
+
+def main():
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.reconstruct_dryrun"]
+        + [p for p in MERGE_INPUTS if glob.glob(p) or p in MERGE_INPUTS and __import__("os").path.exists(p)]
+        + ["--out", "dryrun_all.json"],
+        check=True,
+    )
+    rows = json.load(open("dryrun_all.json"))
+    # fixed cells override earlier rows of the same key
+    fixed = {}
+    for r in rows:
+        fixed[(r["arch"], r["shape"], r["mesh"])] = r
+    rows = sorted(fixed.values(), key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+
+    dry = [
+        "| arch | shape | mesh | compiles | compile_s | args/dev GiB |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        dry.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{'yes' if r.get('ok') else '**NO**'} | {r.get('compile_s', '-')} | "
+            f"{r.get('per_device_arg_gib', '-')} |"
+        )
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    dry.append(f"\n**{n_ok}/{len(rows)} cells compile** "
+               "(34 per mesh: long_500k applies to jamba+mamba2 only).\n")
+
+    roof = [
+        "| arch | shape | t_comp | t_mem | t_coll | dominant | useful | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != "16x16" or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        roof.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rf['t_comp_s'])} | "
+            f"{fmt(rf['t_mem_s'])} | {fmt(rf['t_coll_s'])} | {rf['dominant']} | "
+            f"{rf['useful_ratio']:.3f} | {lever(r)} |"
+        )
+
+    md = open("EXPERIMENTS.md").read()
+    md = md.replace("RESULTS_TABLE_DRYRUN_PLACEHOLDER", "\n".join(dry))
+    md = md.replace("RESULTS_TABLE_ROOFLINE_PLACEHOLDER", "\n".join(roof))
+    open("EXPERIMENTS.md", "w").write(md)
+    print(f"EXPERIMENTS.md updated: {n_ok}/{len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""§Perf hillclimb driver: re-lowers the three chosen cells at successive
+optimization levels and records the roofline-term deltas.
+
+Cells (chosen from the baseline table):
+  A qwen3-32b  decode_32k  — most PAT-representative + collective-bound
+  B qwen3-32b  prefill_32k — worst memory-roofline fraction
+  C deepseek-v2-236b train_4k — MoE: dispatch waste + collective-bound
+
+Levels (launch/dryrun.py):
+  0 baseline; 1 +scatter cache update; 2 +chunked seq attention
+  +split-KV-over-model decode sharding.  MoE dispatch: cumsum vs sort.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.hillclimb --out hillclimb.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+CELLS = [
+    # (arch, shape, [(tag, opt_level, dispatch)])
+    ("qwen3-32b", "decode_32k", [("opt1_scatter", 1, None), ("opt2_splitkv", 2, None)]),
+    ("qwen3-32b", "prefill_32k", [("opt2_chunked_attn", 2, None)]),
+    ("deepseek-v2-236b", "train_4k",
+     [("dispatch_cumsum", 0, "cumsum"), ("dispatch_sort", 0, "sort")]),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="hillclimb.json")
+    ap.add_argument("--only", default=None, help="arch:shape:tag filter")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun
+
+    results = []
+    for arch, shape, variants in CELLS:
+        for tag, level, dispatch in variants:
+            if args.only and args.only not in f"{arch}:{shape}:{tag}":
+                continue
+            dryrun.apply_opt_level(level, dispatch)
+            r = dryrun.run_cell(arch, shape, multi_pod=False)
+            r["variant"] = tag
+            r["opt_level"] = level
+            results.append(r)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

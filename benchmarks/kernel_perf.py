@@ -1,0 +1,104 @@
+"""Fig. 10 reproduction: kernel performance across decode-batch configs.
+
+For each of the paper's 20 (B, L) configurations x 4 head configs, builds
+the decode batch, packs it with each backend's strategy, and reports the
+modeled attention latency (benchmarks/latmodel.py, A100 constants — the
+paper's testbed) plus the exact KV bytes. Normalised performance =
+latency(PAT) / latency(backend), as in the paper (higher is better,
+PAT = 1.0).
+
+Backends: PAT, FlashAttention (query-centric fixed (64,128)), FlashInfer
+(query-centric fixed (16,128) + KV-split load balance ~ same byte model),
+RelayAttention (single-level pack + FA kernel), PAT-compute (FastTree-ish).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.pack_scheduler import schedule
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import build_work_plan
+from repro.workloads.traces import FIG10_CONFIGS, synthetic_decode_batch
+from benchmarks.latmodel import HwModel, fixed_tile_latency, plan_latency
+
+HEAD_CONFIGS = [(32, 32), (16, 8), (32, 8), (64, 8)]
+PAGE = 16
+HEAD_DIM = 128
+
+
+def run(head_configs=HEAD_CONFIGS, configs=None, verbose=True) -> List[Dict]:
+    hw = HwModel()
+    rows = []
+    cfgs = configs if configs is not None else list(enumerate(FIG10_CONFIGS, 1))
+    for hq, hkv in head_configs:
+        G = hq // hkv
+        sel = TileSelector(head_dim=HEAD_DIM, page_size=PAGE)
+        for idx, (B, L) in cfgs:
+            if idx >= 19:  # no-prefix configs
+                bt, kv = synthetic_decode_batch(
+                    None, None, PAGE, no_share_batch=32 if idx == 19 else 64,
+                    no_share_len=1024,
+                )
+            else:
+                bt, kv = synthetic_decode_batch(B, L, PAGE)
+
+            def pat_like(strategy, serial=False):
+                plan = schedule(bt, kv, PAGE, strategy=strategy,
+                                rows_per_query=G, max_query_rows=sel.max_query_rows)
+                wp = build_work_plan(plan, sel, hq, hkv, kv_lens=kv)
+                return plan_latency(wp, HEAD_DIM, hw=hw, serial=serial)
+
+            def fixed(strategy, tile):
+                plan = schedule(bt, kv, PAGE, strategy=strategy,
+                                rows_per_query=G, max_query_rows=tile[0],
+                                split_long_kv=False)
+                return fixed_tile_latency(plan, HEAD_DIM, hq, hkv, tile=tile,
+                                          hw=hw, rows_per_query=G)
+
+            res = {
+                "pat": pat_like("pat"),
+                "flashattention": fixed("query_centric", (64, 128)),
+                "flashinfer": fixed("query_centric", (16, 128)),
+                "relay": fixed("relay", (64, 128)),
+                "pat_compute": pat_like("pat_compute"),
+            }
+            t_pat = res["pat"]["t_total"]
+            row = {
+                "config": idx, "heads": f"{hq}/{hkv}",
+                **{f"norm_{k}": t_pat / v["t_total"] for k, v in res.items()},
+                **{f"us_{k}": v["t_total"] * 1e6 for k, v in res.items()},
+                **{f"bytes_{k}": v["kv_bytes"] for k, v in res.items()},
+            }
+            rows.append(row)
+            if verbose:
+                print(
+                    f"heads {hq:2d}/{hkv:2d} cfg {idx:2d}: "
+                    f"PAT {t_pat*1e6:8.1f}us | "
+                    + " ".join(
+                        f"{k}={row[f'norm_{k}']:.2f}x"
+                        for k in ("flashattention", "flashinfer", "relay", "pat_compute")
+                    ),
+                    flush=True,
+                )
+    return rows
+
+
+def summarize(rows: List[Dict]) -> Dict[str, float]:
+    shared = [r for r in rows if r["config"] <= 18]
+    out = {}
+    for k in ("flashattention", "flashinfer", "relay", "pat_compute"):
+        # norm_{k} = t_pat / t_k (the paper's normalised performance of
+        # backend k relative to PAT; < 1 means k is slower than PAT)
+        norms = [r[f"norm_{k}"] for r in shared]
+        reds = [1 - n for n in norms if n > 0]  # PAT latency reduction
+        out[f"latency_reduction_vs_{k}_pct"] = 100 * float(np.mean(reds))
+        out[f"max_speedup_vs_{k}"] = float(np.max([1 / n for n in norms if n > 0]))
+    return out
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(summarize(rows))

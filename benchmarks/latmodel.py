@@ -1,0 +1,131 @@
+"""Analytic latency model for decode-attention work plans.
+
+CPU wall-clock cannot stand in for GPU/TPU kernel latency, but the paper's
+mechanism — bytes across the slow-memory boundary — is exactly computable
+from a work plan. This model turns plans into normalised latencies
+(Fig. 10/12-style) using the paper's own A100 testbed constants by default:
+
+  t_group      = max(kv_bytes_g / BW, flops_g / peak) + t_launch
+  multi-stream = max_g(stream serialisation) ~ max(total_bytes/BW,
+                 max_g flops_g/peak) + t_launch   (streams overlap)
+  serial       = sum_g t_group                     (PAT-serial ablation)
+  merge        = intermediate_bytes / BW + t_launch
+
+Fixed-tile ablations (PAT-fixed / FlashAttention) additionally pay padded
+DMA: per item, KV bytes round up to the tile, and the Q-tile padding adds
+MMA work. All knobs are explicit so EXPERIMENTS.md can cite the formula.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pack_scheduler import PackPlan
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import WorkPlan
+
+
+@dataclass(frozen=True)
+class HwModel:
+    name: str = "a100"
+    mem_bw: float = 2.0e12  # B/s global-memory bandwidth
+    peak_flops: float = 312e12  # fp16 tensor-core peak
+    launch_s: float = 5e-6  # kernel launch overhead
+    # effective fraction of peak BW decode attention sustains (paper: 83-94%)
+    bw_eff: float = 0.85
+
+
+TPU_V5E = HwModel(name="tpu_v5e", mem_bw=819e9, peak_flops=197e12, launch_s=2e-6)
+
+
+def plan_latency(
+    wp: WorkPlan,
+    head_dim: int,
+    kv_bytes_per_el: int = 2,
+    hw: HwModel = HwModel(),
+    serial: bool = False,
+    v_head_dim: Optional[int] = None,
+    num_kv_heads: Optional[int] = None,
+    num_q_heads: Optional[int] = None,
+) -> Dict[str, float]:
+    """Models one decode-attention step from a built WorkPlan. Head counts
+    can be overridden to model a full-size arch from a reduced-model plan
+    (the plan's page structure is scale-invariant)."""
+    dv = v_head_dim if v_head_dim is not None else head_dim
+    page = wp.page_size
+    Hkv = num_kv_heads if num_kv_heads is not None else wp.num_kv_heads
+    Hq = num_q_heads if num_q_heads is not None else wp.num_q_heads
+    bw = hw.mem_bw * hw.bw_eff
+
+    group_times = []
+    total_bytes = 0.0
+    max_flops_t = 0.0
+    for g in wp.groups:
+        n_pages = int(g.step_pages.size)  # pages DMA'd incl. tile padding
+        kv_bytes = n_pages * page * (head_dim + dv) * Hkv * kv_bytes_per_el
+        m = g.tile.m
+        flops = 2.0 * g.num_steps * m * g.tile.n * (head_dim + dv) * Hkv
+        t_g = max(kv_bytes / bw, flops / hw.peak_flops) + hw.launch_s
+        group_times.append(t_g)
+        total_bytes += kv_bytes
+        max_flops_t = max(max_flops_t, flops / hw.peak_flops)
+
+    if serial:
+        t_fwd = float(sum(group_times))
+    else:
+        t_fwd = max(total_bytes / bw, max_flops_t) + hw.launch_s
+
+    inter_rows = wp.total_partial_rows
+    merge_bytes = inter_rows * (dv + 2) * 4 * 2  # fp32, write + read
+    t_merge = merge_bytes / bw + hw.launch_s
+    return {
+        "t_total": t_fwd + t_merge,
+        "t_forward": t_fwd,
+        "t_merge": t_merge,
+        "kv_bytes": total_bytes,
+        "merge_bytes": merge_bytes,
+        "num_groups": len(wp.groups),
+    }
+
+
+def fixed_tile_latency(
+    plan: PackPlan,
+    head_dim: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    tile=(64, 128),
+    kv_bytes_per_el: int = 2,
+    hw: HwModel = HwModel(),
+    rows_per_query: int = 1,
+) -> Dict[str, float]:
+    """One-size-fits-all kernel model (FlashAttention / PAT-fixed): items
+    pad KV to n-granularity and queries to the fixed m tile."""
+    m_fix, n_fix = tile
+    bw = hw.mem_bw * hw.bw_eff
+    page = plan.page_size
+    total_bytes = 0.0
+    total_flops = 0.0
+    rows_total = 0
+    for it in plan.items:
+        kv_padded = -(-it.num_tokens // n_fix) * n_fix
+        total_bytes += kv_padded * 2 * head_dim * num_kv_heads * kv_bytes_per_el
+        rows = -(-max(1, it.num_queries * rows_per_query) // m_fix) * m_fix
+        total_flops += 2.0 * rows * kv_padded * 2 * head_dim * num_kv_heads
+        rows_total += it.num_queries * rows_per_query
+    t_fwd = max(total_bytes / bw, total_flops / hw.peak_flops) + hw.launch_s
+    merge_bytes = (
+        sum(it.num_queries for it in plan.items)
+        * num_q_heads * (head_dim + 2) * 4 * 2
+    )
+    t_merge = (merge_bytes / bw + hw.launch_s) if len(plan.items) > plan.batch_size else 0.0
+    return {
+        "t_total": t_fwd + t_merge,
+        "t_forward": t_fwd,
+        "t_merge": t_merge,
+        "kv_bytes": total_bytes,
+        "merge_bytes": merge_bytes,
+        "num_groups": 1,
+    }

@@ -1,0 +1,72 @@
+"""Fig. 5a reproduction: KV-cache bytes per decode step vs the theoretical
+minimum, on the toolagent and conversation traces.
+
+Exact computation (no model): bytes = pages loaded x page bytes, from each
+strategy's pack plan. Paper claims FlashAttention loads 4.3-8.7x the
+theoretical minimum and 4.1-7.6x PAT's traffic; PAT sits near the optimum
+(the gap is merge-profit-motivated prefix re-loads + intermediate I/O).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.pack_scheduler import (
+    plan_intermediate_bytes,
+    plan_kv_bytes,
+    schedule,
+    theoretical_min_kv_bytes,
+)
+from repro.workloads.traces import (
+    conversation_trace,
+    toolagent_trace,
+    trace_to_decode_batch,
+)
+
+PAGE = 16
+HEAD_DIM = 128
+HQ, HKV = 32, 8  # Llama-3-8B heads
+
+
+def run(num_requests: int = 48, verbose: bool = True) -> List[Dict]:
+    rows = []
+    variants = [
+        ("toolagent", toolagent_trace, {}),
+        ("conversation", conversation_trace, {}),
+        # production-like sharing ratio (Mooncake reports 40-62% KV reuse;
+        # higher concurrency + shorter private prompts): probes the paper's
+        # 4.3-8.7x band
+        ("toolagent_hot", toolagent_trace,
+         dict(num_tools=6, prompt_mean=40, output_mean=24, sessions_per_tool=3)),
+        ("conversation_hot", conversation_trace,
+         dict(prompt_mean=48, output_mean=24)),
+    ]
+    for name, trace_fn, kw in variants:
+        n = num_requests if not kw else 2 * num_requests
+        reqs = trace_fn(num_requests=n, seed=7, **kw)
+        bt, kv, npages = trace_to_decode_batch(reqs, PAGE)
+        mn = theoretical_min_kv_bytes(bt, kv, PAGE, HEAD_DIM, HKV)
+        row = {"trace": name, "batch": len(reqs), "min_gb": mn / 1e9}
+        for strat in ("query_centric", "relay", "pat", "pat_naive", "pat_compute"):
+            plan = schedule(bt, kv, PAGE, strategy=strat, rows_per_query=HQ // HKV)
+            b = plan_kv_bytes(plan, HEAD_DIM, HKV)
+            inter = plan_intermediate_bytes(plan, HEAD_DIM, HQ)
+            row[f"{strat}_x_min"] = b / mn
+            row[f"{strat}_gb"] = b / 1e9
+            row[f"{strat}_inter_mb"] = inter / 1e6
+        row["fa_x_pat"] = row["query_centric_gb"] / row["pat_gb"]
+        rows.append(row)
+        if verbose:
+            print(
+                f"{name:13s} B={row['batch']:3d}: FA={row['query_centric_x_min']:.2f}x min, "
+                f"PAT={row['pat_x_min']:.2f}x min, FA/PAT={row['fa_x_pat']:.2f}x, "
+                f"relay={row['relay_x_min']:.2f}x, naive={row['pat_naive_x_min']:.2f}x",
+                flush=True,
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Fig. 14 reproduction: pack-scheduler overhead + lazy-update efficacy.
+
+Measures, on the toolagent and conversation traces:
+  * wall-clock of a cold `schedule()` + work-plan build per decode step,
+  * the lazy-update path (fingerprint hit + O(items) length refresh),
+  * the preprocessing proxy it must hide under (block-table construction +
+    Q packing, the engine's pre-attention host work).
+Paper: scheduling latency is 81.6-88.8% below preprocessing latency once
+lazy updates + async execution apply; we additionally report the cache
+hit rate over a simulated continuous-batching run.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core.attention import PatAttentionBackend, PatConfig
+from repro.core.lazy_update import PlanCache
+from repro.core.pack_scheduler import schedule
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import build_work_plan, plan_fingerprint
+from repro.workloads.traces import (
+    conversation_trace,
+    toolagent_trace,
+    trace_to_decode_batch,
+)
+
+PAGE = 16
+HQ, HKV, HEAD_DIM = 32, 8, 128
+
+
+def run(num_requests: int = 48, steps: int = 32, verbose: bool = True) -> Dict:
+    out = {}
+    for name, fn in [("toolagent", toolagent_trace), ("conversation", conversation_trace)]:
+        reqs = fn(num_requests=num_requests, seed=7)
+        bt, kv, _ = trace_to_decode_batch(reqs, PAGE)
+        # vLLM-style pre-allocation: each request's generation budget is in
+        # the block table up front (the engine does the same)
+        budget_pages = -(-steps // PAGE) + 1
+        ext = -np.ones((bt.shape[0], budget_pages), np.int32)
+        next_page = int(bt.max()) + 1
+        for i in range(bt.shape[0]):
+            used = int(np.sum(bt[i] >= 0))
+            free_slots = int(bt.shape[1] - used)
+            row = list(range(next_page, next_page + budget_pages))
+            next_page += budget_pages
+            ext[i] = row
+        bt = np.concatenate([bt, ext], axis=1)
+        sel = TileSelector(head_dim=HEAD_DIM, page_size=PAGE)
+        cache = PlanCache(sel, HQ, HKV, strategy="pat")
+
+        # cold schedule
+        t0 = time.perf_counter()
+        wp = cache.get(bt, kv, PAGE)
+        t_cold = time.perf_counter() - t0
+
+        # simulated continuous batching: every request grows one token per
+        # step; the pre-allocated table keeps the plan fingerprint stable,
+        # so only the O(steps) length refresh runs
+        t_lazy = 0.0
+        for s in range(steps):
+            kv = kv + 1
+            t0 = time.perf_counter()
+            wp = cache.get(bt, kv, PAGE)
+            t_lazy += time.perf_counter() - t0
+        t_lazy /= steps
+
+        # preprocessing proxy: block-table assembly + Q-row packing indices
+        t0 = time.perf_counter()
+        for _ in range(5):
+            _bt = np.ascontiguousarray(bt)
+            _lens = -(-kv // PAGE)
+            for g in wp.groups:
+                _ = np.take(np.arange(len(kv) * (HQ // HKV)), np.maximum(g.row_query, 0))
+        t_prep = (time.perf_counter() - t0) / 5
+
+        st = cache.stats
+        out[name] = {
+            "cold_schedule_ms": t_cold * 1e3,
+            "lazy_step_ms": t_lazy * 1e3,
+            "preprocess_ms": t_prep * 1e3,
+            "hit_rate": st.hit_rate,
+            "sched_below_prep_pct": 100 * (1 - t_lazy / max(t_prep, 1e-9)),
+        }
+        if verbose:
+            o = out[name]
+            print(
+                f"{name:13s}: cold={o['cold_schedule_ms']:.2f}ms "
+                f"lazy={o['lazy_step_ms']:.3f}ms prep={o['preprocess_ms']:.3f}ms "
+                f"hit_rate={o['hit_rate']:.2f} "
+                f"sched_below_prep={o['sched_below_prep_pct']:.1f}%",
+                flush=True,
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

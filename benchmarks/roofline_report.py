@@ -1,0 +1,52 @@
+"""Renders the §Dry-run / §Roofline tables for EXPERIMENTS.md from the
+dry-run JSON artifacts.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.roofline_report \
+      dryrun_single_pod.json [dryrun_multi_pod.json] > roofline.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def fmt(x, n=2):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.{n}e}"
+
+
+def render(paths: List[str]) -> str:
+    rows = []
+    for p in paths:
+        with open(p) as f:
+            rows += json.load(f)
+    out = []
+    out.append("| arch | shape | mesh | ok | compile_s | t_comp | t_mem | t_coll | dominant | useful | roofline_frac | args/dev GiB |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("ok"):
+            rf = r["roofline"]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | yes | "
+                f"{r.get('compile_s','-')} | {fmt(rf['t_comp_s'])} | "
+                f"{fmt(rf['t_mem_s'])} | {fmt(rf['t_coll_s'])} | "
+                f"{rf['dominant']} | {rf['useful_ratio']:.3f} | "
+                f"{rf['roofline_fraction']:.4f} | {r.get('per_device_arg_gib','-')} |"
+            )
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **NO** | - | - | - | - | - | - | - | - |"
+            )
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    out.append(f"\n{n_ok}/{len(rows)} cells compiled.\n")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1:]))

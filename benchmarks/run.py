@@ -1,0 +1,95 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = the modeled or
+measured latency central to that figure; derived = the headline claim
+metric reproduced).
+
+  fig5a_*   — KV bytes vs theoretical minimum (memory_traffic.py)
+  fig7b     — feasible tile table size (tile_table.py)
+  fig10_*   — kernel perf vs baselines (kernel_perf.py)
+  fig11_*   — e2e serving TTFT/TPOT (e2e_serving.py)
+  fig12_*   — ablations (ablation.py)
+  fig14_*   — scheduler overhead + lazy update (overhead.py)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip the e2e engine run")
+    args = ap.parse_args()
+
+    rows = []
+
+    from benchmarks import memory_traffic
+
+    for r in memory_traffic.run(verbose=False):
+        rows.append((f"fig5a_{r['trace']}_fa_x_min", 0.0, round(r["query_centric_x_min"], 3)))
+        rows.append((f"fig5a_{r['trace']}_pat_x_min", 0.0, round(r["pat_x_min"], 3)))
+        rows.append((f"fig5a_{r['trace']}_fa_x_pat", 0.0, round(r["fa_x_pat"], 3)))
+
+    from benchmarks import tile_table
+
+    tt = tile_table.run(verbose=False)
+    rows.append(("fig7b_feasible_tiles", 0.0, sum(1 for *_, ok, _ in [(m, n, ok, w) for m, n, ok, w in tt] if ok)))
+
+    from benchmarks import kernel_perf
+
+    kp = kernel_perf.run(verbose=False)
+    s = kernel_perf.summarize(kp)
+    pat_us = [r["us_pat"] for r in kp if r["config"] <= 18]
+    rows.append(("fig10_pat_mean", round(sum(pat_us) / len(pat_us), 1),
+                 round(s["latency_reduction_vs_flashattention_pct"], 1)))
+    for k in ("flashattention", "flashinfer", "relay", "pat_compute"):
+        rows.append((f"fig10_reduction_vs_{k}_pct", 0.0,
+                     round(s[f"latency_reduction_vs_{k}_pct"], 1)))
+        rows.append((f"fig10_max_speedup_vs_{k}", 0.0,
+                     round(s[f"max_speedup_vs_{k}"], 2)))
+
+    from benchmarks import ablation
+
+    ab = ablation.run(verbose=False)
+    for k in ("pat_compute", "pat_naive", "pat_fixed", "pat_serial"):
+        rows.append((f"fig12_{k}_latency_pct", round(ab[k]["t_total_ms"] * 1e3, 1),
+                     round(ab[k]["latency_vs_pat_pct"], 2)))
+        rows.append((f"fig12_{k}_bytes_pct", 0.0, round(ab[k]["bytes_vs_pat_pct"], 2)))
+    rows.append(("fig12_fixed_row_padding_x", 0.0, round(ab["fixed_row_padding_x"], 2)))
+
+    from benchmarks import overhead
+
+    ov = overhead.run(verbose=False)
+    for t, o in ov.items():
+        rows.append((f"fig14_{t}_lazy_step", round(o["lazy_step_ms"] * 1e3, 1),
+                     round(o["sched_below_prep_pct"], 1)))
+        rows.append((f"fig14_{t}_hit_rate", round(o["cold_schedule_ms"] * 1e3, 1),
+                     round(o["hit_rate"], 3)))
+
+    if not args.fast:
+        from benchmarks import e2e_serving
+
+        e2e = e2e_serving.run(verbose=False, num_requests=8)
+        by = {}
+        for r in e2e:
+            by.setdefault(r["trace"], {})[r["backend"]] = r
+        for t, b in by.items():
+            if "pat" in b:
+                for k, r in b.items():
+                    if k == "pat":
+                        rows.append((f"fig11_{t}_pat_tpot", round(r["mean_tpot_ms"] * 1e3, 1),
+                                     round(r["modeled_attn_ms"], 2)))
+                    elif r["modeled_attn_ms"] > 0:
+                        red = 100 * (1 - b["pat"]["modeled_attn_ms"] / r["modeled_attn_ms"])
+                        rows.append((f"fig11_{t}_attn_reduction_vs_{k}_pct",
+                                     round(r["mean_tpot_ms"] * 1e3, 1), round(red, 1)))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig. 7b analogue: the feasible multi-tile configuration table for the
+TPU v5e target, with per-constraint annotations, plus the modeled
+bandwidth-equivalence check behind the tile selector's thresholds."""
+
+from __future__ import annotations
+
+from repro.core.tile_config import TpuSpec, tile_table, vmem_working_set
+from repro.core.tile_selector import TileSelector, derive_rules
+
+
+def run(verbose: bool = True):
+    spec = TpuSpec()
+    rows = tile_table(spec)
+    if verbose:
+        print(f"target={spec.name}  VMEM={spec.vmem_bytes//2**20}MiB "
+              f"budget={spec.vmem_budget_frac:.0%}  d=128 page=16 bf16")
+        ms = sorted({m for m, _, _, _ in rows})
+        ns = sorted({n for _, n, _, _ in rows})
+        header = "m\\n  " + " ".join(f"{n:>5d}" for n in ns)
+        print(header)
+        for m in ms:
+            line = f"{m:4d} "
+            for n in ns:
+                ok, why = next((o, w) for mm, nn, o, w in rows if mm == m and nn == n)
+                line += f"{'  ok ' if ok else '  ' + why[1] + '  '}"
+            print(line)
+        sel = TileSelector()
+        print("feasible:", sel.tiles)
+        print("selector m choices:", sel.rules.m_choices)
+        print("selector n thresholds:", list(zip(sel.rules.n_thresholds, sel.rules.n_choices)))
+        for m, n, ok, why in rows:
+            if not ok and verbose:
+                pass
+    return rows
+
+
+if __name__ == "__main__":
+    run()

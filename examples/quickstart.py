@@ -1,0 +1,62 @@
+"""Quickstart: PAT decode attention on a synthetic shared-prefix batch.
+
+Builds a decode batch with a 2-level shared prefix, packs it with the
+memory-centric TreeHeuristic, runs the multi-tile Pallas kernel
+(interpret mode on CPU), verifies against the paged-attention oracle, and
+prints the KV-traffic savings vs a query-centric (FlashAttention-style)
+plan.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.pack_scheduler import (
+    plan_kv_bytes, schedule, theoretical_min_kv_bytes,
+)
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import build_work_plan
+from repro.kernels.ops import pat_paged_attention
+from repro.kernels.ref import paged_attention_ref
+from repro.workloads.traces import synthetic_decode_batch
+
+
+def main():
+    page, head_dim, hq, hkv = 16, 128, 32, 8
+    # 16 queries: one 1024-token system prompt, two 256-token sub-prompts,
+    # 512 private tokens each
+    bt, kv = synthetic_decode_batch((1, 2, 16), (1024, 256, 512), page)
+    num_pages = int(bt.max()) + 1
+    rng = np.random.default_rng(0)
+    k_pages = jnp.asarray(rng.normal(size=(hkv, num_pages, page, head_dim)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(hkv, num_pages, page, head_dim)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(bt.shape[0], hq, head_dim)), jnp.float32)
+
+    sel = TileSelector(head_dim=head_dim, page_size=page, q_bytes=4, kv_bytes=4)
+    plan = schedule(bt, kv, page, strategy="pat", rows_per_query=hq // hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, hq, hkv, kv_lens=kv, block_tables=bt)
+    print(f"packed {bt.shape[0]} queries -> {wp.num_items} work items in "
+          f"{len(wp.groups)} tile groups: "
+          + ", ".join(f"{g.tile}x{g.num_items}" for g in wp.groups))
+
+    out = pat_paged_attention(q, k_pages, v_pages, wp, impl="pallas")
+    ref = paged_attention_ref(q, k_pages, v_pages, jnp.asarray(np.maximum(bt, 0)),
+                              jnp.asarray(kv))
+    err = float(jnp.max(jnp.abs(out - ref)))
+    print(f"max |PAT - oracle| = {err:.2e}")
+    assert err < 1e-4
+
+    qc = schedule(bt, kv, page, strategy="query_centric")
+    b_pat = plan_kv_bytes(plan, head_dim, hkv)
+    b_qc = plan_kv_bytes(qc, head_dim, hkv)
+    b_min = theoretical_min_kv_bytes(bt, kv, page, head_dim, hkv)
+    print(f"KV bytes/step: query-centric {b_qc/1e6:.1f} MB | "
+          f"PAT {b_pat/1e6:.1f} MB | theoretical min {b_min/1e6:.1f} MB")
+    print(f"PAT cuts KV traffic {b_qc/b_pat:.2f}x "
+          f"({b_pat/b_min:.2f}x of optimum)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Every assigned architecture is a module in this package exposing CONFIG;
+`get_config(arch_id)` resolves ids (dots/dashes normalised to underscores).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig  # re-export
+
+ARCHS = {
+    "whisper-small": "whisper_small",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "qwen3-32b": "qwen3_32b",
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    key = arch if arch in ARCHS else arch.replace("_", "-").replace("-v0-1", "-v0.1")
+    if key not in ARCHS:
+        # try module-name form directly
+        for aid, mod in ARCHS.items():
+            if mod == arch:
+                key = aid
+                break
+    if key not in ARCHS:
+        raise KeyError(f"unknown arch '{arch}'; available: {list(ARCHS)}")
+    module = importlib.import_module(f"repro.configs.{ARCHS[key]}")
+    return module.CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def applicable_shapes(arch: str) -> List[str]:
+    """Assigned shape cells for this arch (assignment rules: long_500k only
+    for SSM/hybrid families; decode shapes for all — none are encoder-only)."""
+    cfg = get_config(arch)
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in ("ssm", "hybrid"):
+        shapes.append("long_500k")
+    return shapes

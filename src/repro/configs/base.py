@@ -1,0 +1,223 @@
+"""Model/architecture configuration schema.
+
+One dataclass covers the full assigned pool: dense GQA transformers, MoE
+(with shared experts and top-k routing), MLA (DeepSeek compressed KV),
+hybrid SSM/attention (Jamba), pure SSM (Mamba2), encoder-decoder (Whisper)
+and VLM backbones (LLaVA). `configs/<arch>.py` instantiates one per arch;
+`reduced()` derives the CPU smoke-test variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0
+    # apply MoE every k-th layer (1 = every layer, 2 = alternate, ...)
+    every: int = 1
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    # SSD chunk size: 64 keeps the intra-chunk quadratic form's transient
+    # ([B, S/ch, ch, ch, nh]) within per-device HBM at dry-run scale
+    chunk: int = 64
+    # hybrid interleave: one attention layer every `attn_every` layers
+    # (0 = attention-free / pure SSM)
+    attn_every: int = 0
+    attn_offset: int = 0
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    num_encoder_layers: int = 12
+    encoder_len: int = 1500  # whisper: 30s audio -> 1500 frames
+    frontend: str = "stub"  # conv frontend stubbed per assignment
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    mlp: str = "swiglu"  # swiglu | gelu
+    positions: str = "rope"  # rope | sinusoidal
+    tie_embeddings: bool = False
+    vocab_pad_multiple: int = 256
+    max_seq_len: int = 131072
+    dtype: str = "bfloat16"
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm_stub: bool = False
+    # layers are scanned in homogeneous blocks of this size (lcm of the
+    # interleave patterns); num_layers % scan_block == 0
+    scan_block: int = 1
+    source: str = ""  # provenance note ([source; verified-tier])
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def attention_layers(self) -> int:
+        if self.ssm is None:
+            return self.num_layers
+        if self.ssm.attn_every == 0:
+            return 0
+        return self.num_layers // self.ssm.attn_every
+
+    def layer_is_attention(self, i: int) -> bool:
+        if self.ssm is None:
+            return True
+        if self.ssm.attn_every == 0:
+            return False
+        return i % self.ssm.attn_every == self.ssm.attn_offset
+
+    def layer_is_moe(self, i: int) -> bool:
+        return self.moe is not None and i % self.moe.every == self.moe.every - 1
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embedding + layers), for rooflines."""
+        d, dff, V = self.d_model, self.d_ff, self.padded_vocab
+        Hq, Hkv, hd = self.num_heads, self.num_kv_heads, self.head_dim
+        total = V * d * (1 if self.tie_embeddings else 2)
+        if self.encdec is not None:
+            total += V * d * 0  # decoder shares schema below
+        for i in range(self.num_layers):
+            if self.layer_is_attention(i):
+                if self.mla is not None:
+                    m = self.mla
+                    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+                    total += d * m.q_lora_rank + m.q_lora_rank * Hq * qk_dim
+                    total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    total += m.kv_lora_rank * Hq * (m.qk_nope_head_dim + m.v_head_dim)
+                    total += Hq * m.v_head_dim * d
+                else:
+                    total += d * Hq * hd + 2 * d * Hkv * hd + Hq * hd * d
+            elif self.ssm is not None:
+                s = self.ssm
+                d_in = s.expand * d
+                nheads = d_in // s.head_dim
+                conv_dim = d_in + 2 * s.d_state
+                total += d * (2 * d_in + 2 * s.d_state + nheads)  # in_proj
+                total += conv_dim * s.conv_kernel + d_in * d  # conv + out_proj
+            if self.layer_is_moe(i):
+                moe = self.moe
+                total += d * moe.num_experts  # router
+                total += moe.num_experts * 3 * d * moe.d_ff_expert
+                if moe.num_shared_experts:
+                    total += 3 * d * moe.d_ff_shared * moe.num_shared_experts
+            elif dff > 0:
+                # every non-MoE layer (attention AND ssm) carries the dense
+                # MLP when d_ff > 0 (jamba's mamba layers included)
+                mult = 3 if self.mlp == "swiglu" else 2
+                total += mult * d * dff
+        if self.encdec is not None:
+            e = self.encdec
+            for _ in range(e.num_encoder_layers):
+                total += 4 * d * Hq * hd + (3 if self.mlp == "swiglu" else 2) * d * dff
+            # decoder cross-attention
+            total += self.num_layers * 4 * d * Hq * hd
+        return total
+
+    def active_params(self) -> int:
+        """Active (per-token) parameter count for MoE rooflines."""
+        if self.moe is None:
+            return self.num_params()
+        dense_total = self.num_params()
+        moe = self.moe
+        d = self.d_model
+        n_moe_layers = sum(
+            1 for i in range(self.num_layers) if self.layer_is_moe(i)
+        )
+        all_expert = n_moe_layers * moe.num_experts * 3 * d * moe.d_ff_expert
+        active_expert = n_moe_layers * moe.top_k * 3 * d * moe.d_ff_expert
+        return dense_total - all_expert + active_expert
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Small same-family variant for CPU smoke tests."""
+        changes = dict(
+            num_layers=max(2, self.scan_block),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads < self.num_heads else 4,
+            head_dim=32,
+            d_ff=256 if self.d_ff > 0 else 0,
+            vocab_size=512,
+            vocab_pad_multiple=64,
+            max_seq_len=512,
+        )
+        if self.moe is not None:
+            changes["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=min(2, self.moe.top_k),
+                d_ff_expert=128, d_ff_shared=128 if self.moe.num_shared_experts else 0,
+            )
+        if self.mla is not None:
+            changes["mla"] = MLAConfig(
+                q_lora_rank=64, kv_lora_rank=64, qk_nope_head_dim=32,
+                qk_rope_head_dim=16, v_head_dim=32,
+            )
+        if self.ssm is not None:
+            changes["ssm"] = dataclasses.replace(
+                self.ssm, d_state=32, head_dim=16, chunk=64
+            )
+        if self.encdec is not None:
+            changes["encdec"] = dataclasses.replace(
+                self.encdec, num_encoder_layers=2, encoder_len=64
+            )
+        changes.update(overrides)
+        return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode | long_decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "long_decode"),
+}

@@ -1,0 +1,22 @@
+"""deepseek-v2-236b [moe]: MLA (kv_lora=512) + 2 shared + 160 routed top-6
+experts every layer (the real model's dense first layer is folded into the
+uniform stack for scan-ability; parameter delta < 0.1%).
+[arXiv:2405.04434; hf]"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=102400,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_head_dim=128,
+                  qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(num_experts=160, top_k=6, d_ff_expert=1536,
+                  num_shared_experts=2, d_ff_shared=1536, every=1),
+    source="[arXiv:2405.04434; hf]",
+)

@@ -1,0 +1,21 @@
+"""jamba-v0.1-52b [hybrid]: Mamba+attention 1:7 interleave, MoE every other
+layer (16 experts, top-2). scan_block=8 = lcm(attn_every=8, moe every=2).
+[arXiv:2403.19887; hf]"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=14336, every=2),
+    ssm=SSMConfig(d_state=16, head_dim=64, expand=2, conv_kernel=4,
+                  attn_every=8, attn_offset=4),
+    scan_block=8,
+    source="[arXiv:2403.19887; hf]",
+)

@@ -1,0 +1,20 @@
+"""llama4-scout-17b-a16e [moe]: 16 routed experts top-1 + shared expert,
+early-fusion multimodal (text backbone only per assignment).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    rope_theta=500000.0,
+    moe=MoEConfig(num_experts=16, top_k=1, d_ff_expert=8192,
+                  num_shared_experts=1, d_ff_shared=8192, every=1),
+    source="[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]",
+)

@@ -1,0 +1,19 @@
+"""llava-next-mistral-7b [vlm]: Mistral-7B backbone; anyres patch frontend
+stubbed (input_specs supply patch embeddings).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=1e6,
+    vlm_stub=True,
+    source="[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]",
+)

@@ -1,0 +1,19 @@
+"""mamba2-1.3b [ssm]: attention-free SSD. PAT is inapplicable (no KV cache)
+— implemented without it per DESIGN.md §Arch-applicability.
+[arXiv:2405.21060; unverified]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,   # unused (attention-free)
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=0,
+    vocab_size=50280,
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_kernel=4, attn_every=0),
+    source="[arXiv:2405.21060; unverified]",
+)

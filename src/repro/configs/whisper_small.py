@@ -1,0 +1,23 @@
+"""whisper-small [audio]: enc-dec transformer backbone; conv frontend is a
+stub per assignment (input_specs supply precomputed frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from repro.configs.base import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    norm="layernorm",
+    mlp="gelu",
+    positions="sinusoidal",
+    qkv_bias=True,
+    max_seq_len=32768,  # assigned decode shapes exceed whisper's native 448
+    encdec=EncDecConfig(num_encoder_layers=12, encoder_len=1500, frontend="stub"),
+    source="[arXiv:2212.04356; unverified]",
+)

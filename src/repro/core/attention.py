@@ -1,0 +1,101 @@
+"""PAT attention backend: the engine/model-facing API.
+
+Ties together the pack scheduler (host, cached/lazy), the work-plan
+builder, and the forward/merge kernels. One backend instance serves all
+layers of a model (they share the block table, so they share the plan —
+the paper's lazy update amortises scheduling across layers and steps).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.lazy_update import PlanCache
+from repro.core.tile_config import TpuSpec
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import WorkPlan
+from repro.kernels import ops
+
+
+@dataclass
+class PatConfig:
+    strategy: str = "pat"  # pat | query_centric | relay | pat_naive | pat_compute
+    impl: str = "pallas"  # pallas | xla
+    merge_impl: str = "pallas"
+    page_size: int = 16
+    split_long_kv: bool = True
+    alpha: float = 4.0
+    interpret: bool = True  # CPU container: Pallas runs in interpret mode
+
+
+class PatAttentionBackend:
+    """Decode-attention backend with prefix-aware packing.
+
+    Usage per decode step (once per model, shared by layers):
+        wp = backend.plan(block_tables, kv_lens)      # host, cached
+        out = backend.attend(q, k_pages, v_pages, wp) # per layer
+    """
+
+    def __init__(
+        self,
+        num_q_heads: int,
+        num_kv_heads: int,
+        head_dim: int,
+        v_head_dim: Optional[int] = None,
+        kv_dtype_bytes: int = 2,
+        config: Optional[PatConfig] = None,
+        spec: Optional[TpuSpec] = None,
+    ):
+        self.config = config or PatConfig()
+        self.num_q_heads = num_q_heads
+        self.num_kv_heads = num_kv_heads
+        self.head_dim = head_dim
+        self.v_head_dim = v_head_dim if v_head_dim is not None else head_dim
+        selector = TileSelector(
+            head_dim=head_dim,
+            page_size=self.config.page_size,
+            q_bytes=kv_dtype_bytes,
+            kv_bytes=kv_dtype_bytes,
+            spec=spec,
+            v_head_dim=self.v_head_dim,
+        )
+        self.selector = selector
+        self.cache = PlanCache(
+            selector,
+            num_q_heads,
+            num_kv_heads,
+            strategy=self.config.strategy,
+            alpha=self.config.alpha,
+            split_long_kv=self.config.split_long_kv,
+        )
+
+    def plan(self, block_tables: np.ndarray, kv_lens: np.ndarray) -> WorkPlan:
+        return self.cache.get(block_tables, kv_lens, self.config.page_size)
+
+    def attend(
+        self,
+        q: jax.Array,  # [B, Hq, dk]
+        k_pages: jax.Array,  # [Hkv, P, page, dk]
+        v_pages: Optional[jax.Array],  # None => MLA shared-KV
+        wp: WorkPlan,
+        scale: Optional[float] = None,
+    ) -> jax.Array:
+        return ops.pat_paged_attention(
+            q,
+            k_pages,
+            v_pages,
+            wp,
+            scale=scale,
+            impl=self.config.impl,
+            merge_impl=self.config.merge_impl,
+            v_head_dim=self.v_head_dim,
+            interpret=self.config.interpret,
+        )
+
+    def __call__(self, q, k_pages, v_pages, block_tables, kv_lens, scale=None):
+        wp = self.plan(np.asarray(block_tables), np.asarray(kv_lens))
+        return self.attend(q, k_pages, v_pages, wp, scale=scale)

@@ -1,0 +1,106 @@
+"""Lazy-update plan cache (paper §5.1).
+
+The pack scheduler's output is reused across continuous-batching iterations
+until the page-granular structure of the batch changes (arrivals,
+departures, or a query crossing a page boundary). Within-page growth is
+handled by `work_plan.refresh_lengths`, which patches tail-item lengths in
+O(items) — so reuse never affects numerics, matching the paper's "without
+affecting model accuracy".
+
+In a real deployment `schedule()` runs on an async host thread, overlapped
+with pre-attention work (LayerNorm / QKV projection); here the cache also
+serves the single-process engine and the overhead benchmark (Fig. 14).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import pack_scheduler, work_plan
+from repro.core.tile_selector import TileSelector
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    refreshes: int = 0
+    schedule_time_s: float = 0.0
+    refresh_time_s: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PlanCache:
+    """Caches (fingerprint -> WorkPlan) for one attention configuration.
+
+    One instance is shared by all transformer layers of a model: the paper's
+    lazy update reduces scheduler invocations from once per layer to once
+    per (several) continuous-batching iterations; layers share the plan
+    because they share the block table.
+    """
+
+    def __init__(
+        self,
+        selector: TileSelector,
+        num_q_heads: int,
+        num_kv_heads: int,
+        strategy: str = "pat",
+        alpha: float = pack_scheduler.MERGE_ALPHA_DEFAULT,
+        split_long_kv: bool = True,
+    ):
+        self.selector = selector
+        self.num_q_heads = num_q_heads
+        self.num_kv_heads = num_kv_heads
+        self.strategy = strategy
+        self.alpha = alpha
+        self.split_long_kv = split_long_kv
+        self.stats = CacheStats()
+        self._key: Optional[int] = None
+        self._plan: Optional[work_plan.WorkPlan] = None
+        self._kv_lens: Optional[np.ndarray] = None
+
+    def get(
+        self, block_tables: np.ndarray, kv_lens: np.ndarray, page_size: int
+    ) -> work_plan.WorkPlan:
+        kv_lens = np.asarray(kv_lens, np.int64)
+        key = work_plan.plan_fingerprint(
+            block_tables, kv_lens, page_size, self.strategy
+        )
+        if key == self._key and self._plan is not None:
+            self.stats.hits += 1
+            if self._kv_lens is None or not np.array_equal(self._kv_lens, kv_lens):
+                t0 = time.perf_counter()
+                self._plan = work_plan.refresh_lengths(self._plan, kv_lens)
+                self.stats.refresh_time_s += time.perf_counter() - t0
+                self.stats.refreshes += 1
+                self._kv_lens = kv_lens.copy()
+            return self._plan
+
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        rows_per_query = self.num_q_heads // self.num_kv_heads
+        pack = pack_scheduler.schedule(
+            block_tables,
+            kv_lens,
+            page_size,
+            strategy=self.strategy,
+            rows_per_query=rows_per_query,
+            max_query_rows=self.selector.max_query_rows,
+            alpha=self.alpha,
+            split_long_kv=self.split_long_kv,
+        )
+        plan = work_plan.build_work_plan(
+            pack, self.selector, self.num_q_heads, self.num_kv_heads,
+            kv_lens=kv_lens, block_tables=block_tables,
+        )
+        self.stats.schedule_time_s += time.perf_counter() - t0
+        self._key, self._plan, self._kv_lens = key, plan, kv_lens.copy()
+        return plan

@@ -1,0 +1,408 @@
+"""PAT pack scheduler (paper §5.1, Algorithm 1) + baseline packers.
+
+Turns the prefix forest into a partition of *work items* (the paper's CTAs;
+here: contiguous runs of a Pallas ragged grid). The memory-centric profit
+model decides, per tree edge, whether to *split* (parent and child execute
+in separate items; the child's queries receive the parent's KV contribution
+through the online-softmax merge) or to *merge* (the child's item re-loads
+the parent's short prefix to avoid intermediate read/write traffic).
+
+Published decision rule (Alg. 1): merge child ``c`` into parent ``u`` iff
+``4 * s_c >= l_u`` where ``l_u`` is the token length of the parent item's
+accumulated KV and ``s_c`` the child's query count. The constant 4 comes
+from the per-query intermediate-result overhead (fp32 partial output +
+softmax stats, written once and read once by the merge kernel).
+
+Also implements:
+  * long-KV split (paper §6): items longer than the batch-mean KV length
+    are split into equal page-aligned parts,
+  * query chunking: items whose packed query rows exceed the largest
+    feasible Q-tile are chunked (each chunk re-loads the pages — accounted
+    by the bytes model),
+  * baseline packers: query-centric (FlashAttention-style), single-level
+    KV-centric (RelayAttention-style), PAT-naive and PAT-compute ablations.
+
+Everything here is host-side numpy/python (async-friendly, no jax).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.prefix_tree import PrefixNode, build_forest
+
+# Per-query intermediate-result overhead in "token equivalents" (paper Alg. 1
+# uses 4; the §5.1 text derivation uses 8 — both are exposed, Alg. 1 wins by
+# default because it is the published algorithm).
+MERGE_ALPHA_DEFAULT = 4
+
+
+@dataclass
+class WorkItem:
+    """One unit of forward work: ``query_ids`` attend to ``pages``.
+
+    ``num_tokens`` counts the valid tokens covered (the last page may be
+    partial); all earlier pages are full by the shared-page invariant.
+    """
+
+    query_ids: List[int]
+    pages: List[int]
+    num_tokens: int
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.query_ids)
+
+
+@dataclass
+class PackPlan:
+    """A partition of a decode batch into work items plus bookkeeping."""
+
+    items: List[WorkItem]
+    batch_size: int
+    page_size: int
+    # How the plan was produced (for benchmarks / debugging).
+    strategy: str = "pat"
+    meta: dict = field(default_factory=dict)
+
+    def coverage(self) -> List[int]:
+        """Total valid tokens covered per query (for invariant checks)."""
+        out = [0] * self.batch_size
+        for it in self.items:
+            for q in it.query_ids:
+                out[q] += it.num_tokens
+        return out
+
+
+# ---------------------------------------------------------------------------
+# PAT TreeHeuristic (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def _tree_heuristic(
+    node: PrefixNode,
+    acc_pages: List[int],
+    acc_tokens: int,
+    items: List[WorkItem],
+    alpha: float,
+) -> None:
+    """Recursive TreeHeuristic. ``acc_pages``/``acc_tokens`` is the KV this
+    node's pack must cover (its own segment plus any merged ancestors)."""
+    if node.is_leaf:
+        if acc_tokens > 0:
+            items.append(
+                WorkItem(list(node.query_ids), list(acc_pages), acc_tokens)
+            )
+        return
+
+    remaining = list(node.query_ids)
+    for child in node.children:
+        if alpha * child.num_queries < acc_tokens:
+            # Scheme 1 (split): child's subtree packs only its own blocks;
+            # its queries keep receiving this node's KV from this node's item.
+            _tree_heuristic(child, child.pages, child.num_tokens, items, alpha)
+        else:
+            # Scheme 2 (merge): child's subtree re-loads this node's (short)
+            # accumulated prefix, eliminating this node's intermediate
+            # results for the child's queries.
+            _tree_heuristic(
+                child,
+                acc_pages + child.pages,
+                acc_tokens + child.num_tokens,
+                items,
+                alpha,
+            )
+            child_set = set(child.query_ids)
+            remaining = [q for q in remaining if q not in child_set]
+
+    if remaining and acc_tokens > 0:
+        items.append(WorkItem(remaining, list(acc_pages), acc_tokens))
+
+
+def pack_pat(
+    forest: Sequence[PrefixNode],
+    batch_size: int,
+    page_size: int,
+    alpha: float = MERGE_ALPHA_DEFAULT,
+) -> PackPlan:
+    """Packs a decode batch with the paper's TreeHeuristic."""
+    items: List[WorkItem] = []
+    for root in forest:
+        _tree_heuristic(root, root.pages, root.num_tokens, items, alpha)
+    return PackPlan(items, batch_size, page_size, strategy="pat")
+
+
+# ---------------------------------------------------------------------------
+# Baseline / ablation packers (paper §8.3, §8.5)
+# ---------------------------------------------------------------------------
+
+
+def pack_query_centric(
+    block_tables: np.ndarray, kv_lens: np.ndarray, page_size: int
+) -> PackPlan:
+    """One-query-per-item (FlashAttention/FlashInfer-style)."""
+    items = []
+    for q in range(block_tables.shape[0]):
+        n_pages = -(-int(kv_lens[q]) // page_size)
+        pages = [int(p) for p in block_tables[q, :n_pages]]
+        items.append(WorkItem([q], pages, int(kv_lens[q])))
+    return PackPlan(
+        items, block_tables.shape[0], page_size, strategy="query_centric"
+    )
+
+
+def pack_relay(
+    forest: Sequence[PrefixNode],
+    block_tables: np.ndarray,
+    kv_lens: np.ndarray,
+    page_size: int,
+) -> PackPlan:
+    """Single-level KV-centric packing (RelayAttention-style): pack only the
+    first-level shared prefix; everything below is one-item-per-query."""
+    items: List[WorkItem] = []
+    for root in forest:
+        if root.num_queries > 1 and root.num_tokens > 0:
+            items.append(
+                WorkItem(list(root.query_ids), list(root.pages), root.num_tokens)
+            )
+            skip = len(root.pages)
+        else:
+            skip = 0
+        for q in root.query_ids:
+            n_pages = -(-int(kv_lens[q]) // page_size)
+            pages = [int(p) for p in block_tables[q, skip:n_pages]]
+            tokens = int(kv_lens[q]) - skip * page_size
+            if tokens > 0:
+                items.append(WorkItem([q], pages, tokens))
+    return PackPlan(items, block_tables.shape[0], page_size, strategy="relay")
+
+
+def pack_naive_tree(
+    forest: Sequence[PrefixNode], batch_size: int, page_size: int
+) -> PackPlan:
+    """PAT-naive ablation: every tree node becomes its own item (always
+    split), ignoring the intermediate-result overhead."""
+    items: List[WorkItem] = []
+
+    def walk(node: PrefixNode):
+        if node.num_tokens > 0:
+            items.append(
+                WorkItem(list(node.query_ids), list(node.pages), node.num_tokens)
+            )
+        for c in node.children:
+            walk(c)
+
+    for root in forest:
+        walk(root)
+    return PackPlan(items, batch_size, page_size, strategy="pat_naive")
+
+
+def pack_compute_oriented(
+    forest: Sequence[PrefixNode],
+    batch_size: int,
+    page_size: int,
+    rows_per_query: int = 1,
+    q_tiles: Sequence[int] = (8, 16, 32, 64, 128),
+) -> PackPlan:
+    """PAT-compute ablation (FastTree-style): split/merge decided by a
+    compute-oriented cost model — minimise padded MMA work — which is
+    ill-suited to memory-bound decode (paper §8.5)."""
+
+    def pad_rows(s: int) -> int:
+        rows = max(1, s * rows_per_query)
+        for t in q_tiles:
+            if rows <= t:
+                return t
+        return -(-rows // q_tiles[-1]) * q_tiles[-1]
+
+    items: List[WorkItem] = []
+
+    def walk(node: PrefixNode, acc_pages: List[int], acc_tokens: int):
+        if node.is_leaf:
+            if acc_tokens > 0:
+                items.append(
+                    WorkItem(list(node.query_ids), list(acc_pages), acc_tokens)
+                )
+            return
+        remaining = list(node.query_ids)
+        for child in node.children:
+            s_u, s_c = node.num_queries, child.num_queries
+            # Padded-flop cost of each scheme (per unit head dim).
+            cost_split = pad_rows(s_u) * acc_tokens + pad_rows(s_c) * child.num_tokens
+            cost_merge = pad_rows(s_u - s_c) * acc_tokens + pad_rows(s_c) * (
+                acc_tokens + child.num_tokens
+            )
+            if cost_merge < cost_split:
+                walk(child, acc_pages + child.pages, acc_tokens + child.num_tokens)
+                child_set = set(child.query_ids)
+                remaining = [q for q in remaining if q not in child_set]
+            else:
+                walk(child, child.pages, child.num_tokens)
+        if remaining and acc_tokens > 0:
+            items.append(WorkItem(remaining, list(acc_pages), acc_tokens))
+
+    for root in forest:
+        walk(root, root.pages, root.num_tokens)
+    return PackPlan(items, batch_size, page_size, strategy="pat_compute")
+
+
+# ---------------------------------------------------------------------------
+# Post-passes: long-KV split (paper §6) and query chunking
+# ---------------------------------------------------------------------------
+
+
+def long_kv_split(plan: PackPlan, mean_cap: Optional[float] = None) -> PackPlan:
+    """Splits items whose KV length exceeds the batch-mean KV length into
+    equal page-aligned parts (paper §6). Splitting never changes results:
+    parts merge through online softmax like any other partial."""
+    if not plan.items:
+        return plan
+    page = plan.page_size
+    mean_tokens = mean_cap if mean_cap is not None else float(
+        np.mean([it.num_tokens for it in plan.items])
+    )
+    # Cap must cover at least one page.
+    cap_pages = max(1, int(mean_tokens // page))
+    out: List[WorkItem] = []
+    for it in plan.items:
+        n_pages = len(it.pages)
+        if it.num_tokens <= mean_tokens or n_pages <= 1:
+            out.append(it)
+            continue
+        k = -(-n_pages // cap_pages)
+        per = -(-n_pages // k)
+        for j in range(0, n_pages, per):
+            pages = it.pages[j : j + per]
+            start_tok = j * page
+            end_tok = min((j + len(pages)) * page, it.num_tokens)
+            # Parts covering only pre-allocated (not yet filled) pages are
+            # kept with 0 valid tokens: the kernel masks them, and keeping
+            # them makes the plan stable as kv_len grows (lazy update).
+            out.append(
+                WorkItem(
+                    list(it.query_ids), pages, max(0, end_tok - start_tok)
+                )
+            )
+    return PackPlan(
+        out,
+        plan.batch_size,
+        plan.page_size,
+        strategy=plan.strategy,
+        meta=dict(plan.meta, long_kv_split=True),
+    )
+
+
+def chunk_queries(plan: PackPlan, max_queries: int) -> PackPlan:
+    """Chunks items with more packed queries than the largest feasible
+    Q-tile. Each chunk re-loads the item's pages (the bytes model charges
+    this; it is unavoidable on any tiled hardware)."""
+    out: List[WorkItem] = []
+    for it in plan.items:
+        if it.num_queries <= max_queries:
+            out.append(it)
+            continue
+        for j in range(0, it.num_queries, max_queries):
+            out.append(
+                WorkItem(it.query_ids[j : j + max_queries], list(it.pages), it.num_tokens)
+            )
+    return PackPlan(
+        out, plan.batch_size, plan.page_size, strategy=plan.strategy, meta=plan.meta
+    )
+
+
+# ---------------------------------------------------------------------------
+# Top-level scheduling entry point
+# ---------------------------------------------------------------------------
+
+
+def schedule(
+    block_tables: np.ndarray,
+    kv_lens: np.ndarray,
+    page_size: int,
+    *,
+    strategy: str = "pat",
+    rows_per_query: int = 1,
+    max_query_rows: int = 128,
+    alpha: float = MERGE_ALPHA_DEFAULT,
+    split_long_kv: bool = True,
+) -> PackPlan:
+    """Packs one decode batch. ``rows_per_query`` is the GQA group size (a
+    query contributes that many MMA rows per KV head); ``max_query_rows``
+    bounds the Q-tile."""
+    batch = int(block_tables.shape[0])
+    forest = build_forest(block_tables, kv_lens, page_size)
+    if strategy == "pat":
+        plan = pack_pat(forest, batch, page_size, alpha=alpha)
+    elif strategy == "query_centric":
+        plan = pack_query_centric(block_tables, kv_lens, page_size)
+    elif strategy == "relay":
+        plan = pack_relay(forest, block_tables, kv_lens, page_size)
+    elif strategy == "pat_naive":
+        plan = pack_naive_tree(forest, batch, page_size)
+    elif strategy == "pat_compute":
+        plan = pack_compute_oriented(
+            forest, batch, page_size, rows_per_query=rows_per_query
+        )
+    else:
+        raise ValueError(f"unknown pack strategy: {strategy}")
+
+    max_q = max(1, max_query_rows // max(1, rows_per_query))
+    plan = chunk_queries(plan, max_q)
+    if split_long_kv and strategy != "query_centric":
+        plan = long_kv_split(plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Analytic memory-traffic model (paper Fig. 5a / Fig. 12b metric)
+# ---------------------------------------------------------------------------
+
+
+def plan_kv_bytes(
+    plan: PackPlan, head_dim: int, num_kv_heads: int, kv_bytes_per_el: int = 2
+) -> int:
+    """KV bytes crossing the HBM boundary for one decode step: each item
+    loads its full pages once (DMA moves whole pages)."""
+    page_tokens = plan.page_size
+    total_pages = sum(len(it.pages) for it in plan.items)
+    return total_pages * page_tokens * head_dim * num_kv_heads * 2 * kv_bytes_per_el
+
+
+def plan_intermediate_bytes(
+    plan: PackPlan, head_dim: int, num_q_heads: int, batch_parts: Optional[dict] = None
+) -> int:
+    """Merge-stage traffic: per (item, query) a partial fp32 output plus
+    softmax stats is written by the forward kernel and read by merge."""
+    per_row = (head_dim + 2) * 4  # fp32 numerator + (max, denom)
+    writes_reads = 2
+    rows = sum(it.num_queries for it in plan.items)
+    return rows * num_q_heads * per_row * writes_reads
+
+
+def theoretical_min_kv_bytes(
+    block_tables: np.ndarray,
+    kv_lens: np.ndarray,
+    page_size: int,
+    head_dim: int,
+    num_kv_heads: int,
+    kv_bytes_per_el: int = 2,
+) -> int:
+    """Every distinct physical page loaded exactly once (paper's optimum)."""
+    pages = set()
+    for q in range(block_tables.shape[0]):
+        n_pages = -(-int(kv_lens[q]) // page_size)
+        pages.update(int(p) for p in block_tables[q, :n_pages])
+    return len(pages) * page_size * head_dim * num_kv_heads * 2 * kv_bytes_per_el
+
+
+def plan_total_bytes(
+    plan: PackPlan, head_dim: int, num_q_heads: int, num_kv_heads: int,
+    kv_bytes_per_el: int = 2,
+) -> int:
+    kv = plan_kv_bytes(plan, head_dim, num_kv_heads, kv_bytes_per_el)
+    inter = plan_intermediate_bytes(plan, head_dim, num_q_heads)
+    return kv + inter

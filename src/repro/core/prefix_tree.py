@@ -1,0 +1,186 @@
+"""Tree-structured block table (paper §5.1, Fig. 6b).
+
+Converts a decode batch's two-dimensional block table into a forest of
+path-compressed prefix trees. Each internal node represents a run of KV
+pages shared by every query in its subtree; each leaf is one query's
+non-shared suffix. The forest is the input to the pack scheduler.
+
+This module is host-side (pure python/numpy): in a real deployment it runs
+asynchronously on the CPU alongside pre-attention work (paper §5.1, "lazy
+update"), so it must not touch jax device state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class PrefixNode:
+    """A node of the tree-structured block table.
+
+    Attributes:
+      pages: physical page ids of this node's segment (a run shared by all
+        queries below it; for a leaf, the query's private suffix pages).
+      num_tokens: valid tokens covered by ``pages`` (l_u in the paper). For
+        internal nodes this is always ``len(pages) * page_size`` because a
+        page can only be shared once it is full; a leaf's final page may be
+        partially filled.
+      query_ids: ids of queries whose KV passes through this node (s_u =
+        ``len(query_ids)``).
+      children: child nodes; empty for a leaf.
+    """
+
+    pages: List[int]
+    num_tokens: int
+    query_ids: List[int]
+    children: List["PrefixNode"] = field(default_factory=list)
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.query_ids)
+
+    def count_nodes(self) -> int:
+        return 1 + sum(c.count_nodes() for c in self.children)
+
+
+def _page_list(row: Sequence[int]) -> List[int]:
+    """Strips the -1 padding from one block-table row."""
+    out = []
+    for p in row:
+        if p < 0:
+            break
+        out.append(int(p))
+    return out
+
+
+def build_forest(
+    block_tables: np.ndarray,
+    kv_lens: np.ndarray,
+    page_size: int,
+) -> List[PrefixNode]:
+    """Builds the path-compressed prefix forest for a decode batch.
+
+    Args:
+      block_tables: int array [B, max_pages]; row b lists the physical page
+        ids of query b's KV cache in order, padded with -1. A shared prefix
+        appears as identical leading page ids across rows (vLLM-style
+        prefix reuse maps shared logical prefixes to one physical copy).
+      kv_lens: int array [B]; number of valid KV tokens per query.
+      page_size: tokens per KV page.
+
+    Returns:
+      A list of tree roots (forest): one root per distinct first-level
+      prefix, as in the paper's pack scheduler.
+    """
+    assert block_tables.ndim == 2 and kv_lens.ndim == 1
+    assert block_tables.shape[0] == kv_lens.shape[0]
+    batch = block_tables.shape[0]
+
+    rows = [_page_list(block_tables[b]) for b in range(batch)]
+    for b in range(batch):
+        need = -(-int(kv_lens[b]) // page_size)  # ceil
+        if len(rows[b]) < need:
+            raise ValueError(
+                f"query {b}: block table has {len(rows[b])} pages but kv_len "
+                f"{int(kv_lens[b])} needs {need} (page_size={page_size})"
+            )
+        # Rows may contain MORE pages than kv_len uses: vLLM-style block
+        # tables pre-allocate the generation budget. Keeping future pages in
+        # the plan (valid-length masking handles them) makes the plan
+        # *stable across decode steps* — the lazy-update cache then hits on
+        # every step without arrivals/departures (paper §5.1).
+
+    def tokens_in(qid: int, start_page: int, end_page: int) -> int:
+        """Valid tokens of query qid within its pages [start_page, end_page)."""
+        total = int(kv_lens[qid])
+        lo = start_page * page_size
+        hi = min(end_page * page_size, total)
+        return max(0, hi - lo)
+
+    def build(query_ids: List[int], depth: int) -> List[PrefixNode]:
+        """Recursively groups ``query_ids`` (which agree on pages[:depth])."""
+        nodes: List[PrefixNode] = []
+        # Group queries by the page id at the current depth. Queries that
+        # are exhausted at this depth become leaves with an empty suffix.
+        groups: dict = {}
+        exhausted: List[int] = []
+        for q in query_ids:
+            if depth >= len(rows[q]):
+                exhausted.append(q)
+            else:
+                groups.setdefault(rows[q][depth], []).append(q)
+
+        for q in exhausted:
+            # A query whose whole page list is a shared prefix of others
+            # (or an exact duplicate): empty private suffix.
+            nodes.append(PrefixNode(pages=[], num_tokens=0, query_ids=[q]))
+
+        for first_page, qs in groups.items():
+            if len(qs) == 1:
+                q = qs[0]
+                pages = rows[q][depth:]
+                nodes.append(
+                    PrefixNode(
+                        pages=pages,
+                        num_tokens=tokens_in(q, depth, len(rows[q])),
+                        query_ids=[q],
+                    )
+                )
+                continue
+            # Path compression: extend the shared run while every query in
+            # the group has the same page id (and none is exhausted).
+            end = depth + 1
+            while True:
+                if any(end >= len(rows[q]) for q in qs):
+                    break
+                page = rows[qs[0]][end]
+                if any(rows[q][end] != page for q in qs[1:]):
+                    break
+                end += 1
+            pages = rows[qs[0]][depth:end]
+            children = build(qs, end)
+            # A shared run only covers full pages: every page in a shared
+            # run is full by construction (min over queries of tokens).
+            num_tokens = len(pages) * page_size
+            node = PrefixNode(
+                pages=pages,
+                num_tokens=num_tokens,
+                query_ids=list(qs),
+                children=children,
+            )
+            nodes.append(node)
+        return nodes
+
+    return build(list(range(batch)), 0)
+
+
+def forest_stats(forest: List[PrefixNode]) -> dict:
+    """Summary statistics used by benchmarks and the lazy-update heuristics."""
+    n_nodes = sum(r.count_nodes() for r in forest)
+    n_internal = 0
+    shared_pages = 0
+
+    def walk(node: PrefixNode):
+        nonlocal n_internal, shared_pages
+        if not node.is_leaf:
+            n_internal += 1
+            shared_pages += len(node.pages) * (node.num_queries - 1)
+        for c in node.children:
+            walk(c)
+
+    for r in forest:
+        walk(r)
+    return {
+        "num_roots": len(forest),
+        "num_nodes": n_nodes,
+        "num_internal": n_internal,
+        "dedup_saved_pages": shared_pages,
+    }

@@ -1,0 +1,157 @@
+"""Multi-tile kernel configuration solver (paper §5.2, Fig. 7b) — TPU port.
+
+The paper derives feasible (m, n) = (Q-tile, KV-tile) pairs per GPU from
+three constraints: ① shared-memory/register capacity, ② a bandwidth
+in-flight lower bound, ③ MMA granularity. This module re-derives the
+constraints for the TPU memory hierarchy (HBM -> VMEM -> VREG, MXU):
+
+  ① VMEM capacity: the kernel's resident working set — double-buffered K
+     and V page blocks, the packed Q tile, the fp32 accumulator, the score
+     tile and softmax stats — must fit the per-core VMEM budget.
+  ② Bandwidth in-flight bound: with double buffering the bytes in flight
+     per step (K+V blocks of the *next* step) must cover HBM latency x
+     per-core bandwidth x a utilisation target, otherwise the DMA pipeline
+     cannot saturate the HBM bus. This is the paper's D_flight >= L*B with
+     the per-SM concurrency C degenerated to 1 (one kernel per TPU core).
+  ③ Granularity: m a multiple of the sublane tile (8 for fp32 / 16 for
+     bf16 packing), n a multiple of the KV page size, both powers of two,
+     last dim = 128 lanes. Mirrors the CUTLASS pow2>=16 rule.
+
+The solver is hardware-parametric (``TpuSpec``); `feasible_tiles()` emits
+the Fig. 7b-style table for the target chip, and the tile selector
+(`tile_selector.py`) consumes it at runtime.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class TpuSpec:
+    """Roofline-relevant constants for the target chip (default: TPU v5e)."""
+
+    name: str = "tpu_v5e"
+    peak_bf16_flops: float = 197e12  # FLOP/s
+    hbm_bandwidth: float = 819e9  # B/s per chip
+    ici_link_bandwidth: float = 50e9  # B/s per link
+    vmem_bytes: int = 16 * 1024 * 1024  # per-core VMEM
+    vmem_budget_frac: float = 0.6  # leave room for Mosaic spills/other refs
+    hbm_latency_s: float = 0.8e-6  # DMA issue->first-byte latency
+    # Fraction of peak bandwidth double-buffering must be able to cover on
+    # its own; the grid pipeline keeps >1 step in flight (one DMA per page,
+    # ppb pages per step, 2 steps deep) so a modest target suffices
+    # (validated against the modeled profiler in benchmarks/tile_table.py).
+    bandwidth_util_target: float = 0.025
+    lane: int = 128
+    sublane_f32: int = 8
+    sublane_bf16: int = 16
+    mxu_dim: int = 128
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    m: int  # Q-tile rows (packed query rows = queries x GQA group size)
+    n: int  # KV-tile rows (pages_per_block x page_size)
+
+    def __repr__(self):
+        return f"({self.m},{self.n})"
+
+
+def vmem_working_set(
+    m: int,
+    n: int,
+    head_dim: int,
+    q_bytes: int,
+    kv_bytes: int,
+    v_head_dim: int | None = None,
+) -> int:
+    """Bytes of VMEM the multi-tile kernel holds resident for a (m, n) pair."""
+    d = head_dim
+    dv = v_head_dim if v_head_dim is not None else head_dim
+    kv_blocks = 2 * (n * d * kv_bytes + n * dv * kv_bytes)  # K+V, double buffered
+    q_block = m * d * q_bytes
+    acc = m * dv * 4  # fp32 accumulator
+    scores = m * n * 4  # fp32 score tile
+    stats = 2 * m * 128 * 4  # running max + denom, lane-replicated
+    out_stage = m * dv * 4 + 2 * m * 4  # output + stats staging
+    return kv_blocks + q_block + acc + scores + stats + out_stage
+
+
+def feasible_tiles(
+    spec: TpuSpec = TpuSpec(),
+    head_dim: int = 128,
+    page_size: int = 16,
+    q_bytes: int = 2,
+    kv_bytes: int = 2,
+    m_candidates: Tuple[int, ...] = (8, 16, 32, 64, 128, 256),
+    n_candidates: Tuple[int, ...] = (16, 32, 64, 128, 256, 512, 1024),
+    v_head_dim: int | None = None,
+) -> List[TileConfig]:
+    """Solves ①-③ and returns the feasible (m, n) set for this hardware.
+
+    Returns configs sorted by (m, n). Infeasibility reasons mirror the
+    paper's Fig. 7b annotations and are available via `tile_table()`.
+    """
+    out = []
+    for m in m_candidates:
+        for n in n_candidates:
+            ok, _ = check_tile(
+                m, n, spec, head_dim, page_size, q_bytes, kv_bytes, v_head_dim
+            )
+            if ok:
+                out.append(TileConfig(m, n))
+    return out
+
+
+def check_tile(
+    m: int,
+    n: int,
+    spec: TpuSpec,
+    head_dim: int,
+    page_size: int,
+    q_bytes: int,
+    kv_bytes: int,
+    v_head_dim: int | None = None,
+) -> Tuple[bool, str]:
+    """Checks one (m, n) pair against constraints ①-③."""
+    sublane = spec.sublane_bf16 if q_bytes == 2 else spec.sublane_f32
+    # ③ granularity
+    if m % sublane and m < sublane:
+        return False, "③ m below sublane tile"
+    if m & (m - 1) or n & (n - 1):
+        return False, "③ not a power of two"
+    if n % page_size:
+        return False, "③ n not page aligned"
+    if n < page_size:
+        return False, "③ n below page size"
+    # ① VMEM capacity
+    ws = vmem_working_set(m, n, head_dim, q_bytes, kv_bytes, v_head_dim)
+    if ws > spec.vmem_bytes * spec.vmem_budget_frac:
+        return False, "① VMEM working set exceeds budget"
+    # ② bandwidth in-flight lower bound (K+V next-step blocks in flight)
+    dv = v_head_dim if v_head_dim is not None else head_dim
+    in_flight = n * (head_dim + dv) * kv_bytes
+    need = spec.hbm_latency_s * spec.hbm_bandwidth * spec.bandwidth_util_target
+    if in_flight < need:
+        return False, "② in-flight bytes below latency-bandwidth product"
+    return True, "ok"
+
+
+def tile_table(
+    spec: TpuSpec = TpuSpec(),
+    head_dim: int = 128,
+    page_size: int = 16,
+    q_bytes: int = 2,
+    kv_bytes: int = 2,
+    m_candidates: Tuple[int, ...] = (8, 16, 32, 64, 128, 256),
+    n_candidates: Tuple[int, ...] = (16, 32, 64, 128, 256, 512, 1024),
+) -> List[Tuple[int, int, bool, str]]:
+    """Fig. 7b analogue: (m, n, feasible, reason) for every candidate."""
+    rows = []
+    for m in m_candidates:
+        for n in n_candidates:
+            ok, why = check_tile(m, n, spec, head_dim, page_size, q_bytes, kv_bytes)
+            rows.append((m, n, ok, why))
+    return rows

@@ -1,0 +1,118 @@
+"""Online tile-size selector (paper §5.2 "Tile Selector").
+
+Given a packed work item, picks the (m, n) kernel configuration:
+
+  * Q-tile m — the *round-up rule*: the smallest feasible m that covers the
+    item's packed query rows. Larger (performance-equivalent) tiles are
+    avoided to preserve VMEM for the KV tile.
+  * KV-tile n — a piecewise rule on the item's KV length, derived offline
+    (benchmarks/tile_table.py sweeps the modeled latency): short KV favours
+    a small n (the final partial tile otherwise wastes DMA + compute —
+    the paper's "compute bubble in the last tile"), long KV favours a large
+    n (bigger in-flight transfers, fewer grid steps, lower fixed overhead).
+
+The selector is a constant-time lookup per item, exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.tile_config import TileConfig, TpuSpec, feasible_tiles
+
+
+@dataclass(frozen=True)
+class SelectorRules:
+    """Piecewise decision rule: kv_len <= thresholds[i] -> n_choices[i]."""
+
+    m_choices: Tuple[int, ...]
+    n_thresholds: Tuple[int, ...]
+    n_choices: Tuple[int, ...]
+
+    def select_m(self, rows: int) -> int:
+        i = bisect.bisect_left(self.m_choices, rows)
+        if i == len(self.m_choices):
+            raise ValueError(
+                f"{rows} query rows exceed the largest feasible Q-tile "
+                f"{self.m_choices[-1]}; chunk_queries() must run first"
+            )
+        return self.m_choices[i]
+
+    def select_n(self, kv_len: int) -> int:
+        i = bisect.bisect_left(self.n_thresholds, kv_len)
+        i = min(i, len(self.n_choices) - 1)
+        return self.n_choices[i]
+
+
+def derive_rules(
+    tiles: Sequence[TileConfig],
+    page_size: int,
+    spec: TpuSpec = TpuSpec(),
+) -> SelectorRules:
+    """Derives the piecewise rules from a feasible tile set.
+
+    The n thresholds follow the offline profiling logic of the paper: use
+    the largest feasible n whose final-tile waste stays under ~50% for the
+    given KV length, i.e. switch to tile n once kv_len >= 2 * n_prev.
+    """
+    ms = tuple(sorted({t.m for t in tiles}))
+    ns = tuple(sorted({t.n for t in tiles}))
+    if not ms or not ns:
+        raise ValueError("empty feasible tile set")
+    thresholds = []
+    for i, n in enumerate(ns[:-1]):
+        # Prefer n while kv_len < 2 * next_n (avoids a >=50% empty last tile
+        # for the larger config; below that the small tile's extra steps are
+        # free because the item is latency- rather than bandwidth-bound).
+        thresholds.append(2 * ns[i + 1] - 1)
+    return SelectorRules(m_choices=ms, n_thresholds=tuple(thresholds), n_choices=ns)
+
+
+class TileSelector:
+    """Runtime selector bound to one hardware spec + dtype + head_dim."""
+
+    def __init__(
+        self,
+        head_dim: int = 128,
+        page_size: int = 16,
+        q_bytes: int = 2,
+        kv_bytes: int = 2,
+        spec: TpuSpec | None = None,
+        v_head_dim: int | None = None,
+    ):
+        self.spec = spec or TpuSpec()
+        self.page_size = page_size
+        self.tiles = feasible_tiles(
+            self.spec,
+            head_dim=head_dim,
+            page_size=page_size,
+            q_bytes=q_bytes,
+            kv_bytes=kv_bytes,
+            v_head_dim=v_head_dim,
+        )
+        if not self.tiles:
+            raise ValueError(
+                f"no feasible tiles for head_dim={head_dim} page={page_size}"
+            )
+        self.rules = derive_rules(self.tiles, page_size, self.spec)
+        self._feasible = {(t.m, t.n) for t in self.tiles}
+
+    @property
+    def max_query_rows(self) -> int:
+        return max(t.m for t in self.tiles)
+
+    def select(self, query_rows: int, kv_len: int) -> TileConfig:
+        m = self.rules.select_m(query_rows)
+        n = self.rules.select_n(kv_len)
+        # Joint feasibility: a huge m can evict the largest n from VMEM.
+        while (m, n) not in self._feasible and n > self.page_size:
+            n //= 2
+        if (m, n) not in self._feasible:
+            raise ValueError(f"no feasible tile for rows={query_rows} kv={kv_len}")
+        return TileConfig(m, n)
+
+    def group_items(self, rows_and_lens: Sequence[Tuple[int, int]]) -> List[TileConfig]:
+        """Vectorised select() for a list of (query_rows, kv_len) items."""
+        return [self.select(r, l) for r, l in rows_and_lens]

@@ -1,0 +1,294 @@
+"""Work-plan construction: pack plan -> device-ready arrays (paper §5-§7).
+
+Bridges the host-side pack scheduler and the Pallas forward/merge kernels.
+Items are grouped by their selected (m, n) tile configuration; each group
+becomes one `pallas_call` whose grid is a *flattened ragged work list* (CSR
+over per-item KV steps) — the TPU-native realisation of the paper's
+multi-stream forward: no inter-item padding steps, no tail bubbles
+(DESIGN.md §2).
+
+Arrays produced per tile group g (numpy; ops.py moves them to device):
+
+  step_item   [S]        item index of each flattened KV step
+  step_pages  [S, ppb]   physical page ids the step's DMA fetches
+  step_len    [S]        valid tokens in the step (1..n; masks the tail)
+  step_start  [S]        1 on an item's first step (reset accumulator)
+  step_end    [S]        1 on an item's last step (flush partials)
+  row_query   [T, m]     query id per packed Q row (-1 = padding row)
+  row_group   [T, m]     GQA within-group head index per row
+  item_kv_len [T]        valid tokens per item
+
+plus a global merge table:
+
+  part_rows   [B, Hq, P] indices into the concatenated partial-output rows
+                         (group-major, then ((t*Hkv + h)*m + r)); -1 = pad.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pack_scheduler import PackPlan, WorkItem
+from repro.core.tile_config import TileConfig
+from repro.core.tile_selector import TileSelector
+
+
+@dataclass
+class TileGroupPlan:
+    tile: TileConfig
+    pages_per_block: int
+    num_items: int
+    num_steps: int
+    step_item: np.ndarray
+    step_pages: np.ndarray
+    step_len: np.ndarray
+    step_start: np.ndarray
+    step_end: np.ndarray
+    row_query: np.ndarray
+    row_group: np.ndarray
+    item_kv_len: np.ndarray
+    item_pages: np.ndarray  # [T, max_item_pages] (XLA fallback path)
+    item_num_pages: np.ndarray  # [T]
+    # Lazy-update support: single-query items may cover the query's growing
+    # region (its final partial page + vLLM-style pre-allocated pages);
+    # their lengths are refreshed in O(steps) from fresh kv_lens without
+    # re-packing (paper §5.1 lazy update, accuracy-preserving).
+    item_tail_query: np.ndarray = None  # [T], -1 = static item
+    item_tok_offset: np.ndarray = None  # [T] query tokens before this item
+    item_step_begin: np.ndarray = None  # [T] first flattened step index
+
+
+@dataclass
+class WorkPlan:
+    groups: List[TileGroupPlan]
+    part_rows: np.ndarray  # [B, Hq, P]
+    batch_size: int
+    num_q_heads: int
+    num_kv_heads: int
+    page_size: int
+    strategy: str
+    total_partial_rows: int
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def num_items(self) -> int:
+        return sum(g.num_items for g in self.groups)
+
+    @property
+    def num_steps(self) -> int:
+        return sum(g.num_steps for g in self.groups)
+
+
+def build_work_plan(
+    plan: PackPlan,
+    selector: TileSelector,
+    num_q_heads: int,
+    num_kv_heads: int,
+    kv_lens: Optional[np.ndarray] = None,
+    block_tables: Optional[np.ndarray] = None,
+) -> WorkPlan:
+    """Lays out a pack plan as per-tile-group CSR arrays + the merge table."""
+    assert num_q_heads % num_kv_heads == 0
+    group_size = num_q_heads // num_kv_heads
+    page = plan.page_size
+
+    # page -> index within each query's page list (for tail-item offsets)
+    page_pos = {}
+    if block_tables is not None:
+        for b in range(block_tables.shape[0]):
+            row = {}
+            for j, p in enumerate(block_tables[b]):
+                if p < 0:
+                    break
+                row[int(p)] = j
+            page_pos[b] = row
+
+    # --- assign a tile config to every item (constant-time per item) -------
+    buckets: dict = {}
+    for it in plan.items:
+        rows = it.num_queries * group_size
+        cfg = selector.select(rows, it.num_tokens)
+        buckets.setdefault((cfg.m, cfg.n), []).append(it)
+
+    groups: List[TileGroupPlan] = []
+    # merge bookkeeping: per (query, q_head) a list of global partial-row ids
+    parts: List[List[List[int]]] = [
+        [[] for _ in range(num_q_heads)] for _ in range(plan.batch_size)
+    ]
+    row_base = 0  # global offset into the concatenated partial rows
+
+    for (m, n), items in sorted(buckets.items()):
+        ppb = n // page
+        T = len(items)
+        steps_per_item = [max(1, -(-len(it.pages) // ppb)) for it in items]
+        S = int(sum(steps_per_item))
+
+        step_item = np.zeros(S, np.int32)
+        step_pages = np.zeros((S, ppb), np.int32)
+        step_len = np.zeros(S, np.int32)
+        step_start = np.zeros(S, np.int32)
+        step_end = np.zeros(S, np.int32)
+        row_query = np.full((T, m), -1, np.int32)
+        row_group = np.zeros((T, m), np.int32)
+        item_kv_len = np.zeros(T, np.int32)
+        max_item_pages = max(1, max(len(it.pages) for it in items))
+        item_pages = np.zeros((T, max_item_pages), np.int32)
+        item_num_pages = np.zeros(T, np.int32)
+        item_tail_query = np.full(T, -1, np.int32)
+        item_tok_offset = np.zeros(T, np.int32)
+        item_step_begin = np.zeros(T, np.int32)
+
+        s = 0
+        for t, it in enumerate(items):
+            item_kv_len[t] = it.num_tokens
+            item_num_pages[t] = len(it.pages)
+            if (
+                kv_lens is not None
+                and it.num_queries == 1
+                and it.num_tokens < len(it.pages) * page
+            ):
+                # Single-query item covering the query's growing region
+                # (partial final page and/or pre-allocated pages): its
+                # valid length tracks the query's kv_len.
+                q0 = it.query_ids[0]
+                if block_tables is not None and it.pages:
+                    item_tok_offset[t] = page_pos[q0][it.pages[0]] * page
+                else:
+                    item_tok_offset[t] = int(kv_lens[q0]) - it.num_tokens
+                item_tail_query[t] = q0
+            if it.pages:
+                item_pages[t, : len(it.pages)] = it.pages
+            r = 0
+            for q in it.query_ids:
+                for g in range(group_size):
+                    row_query[t, r] = q
+                    row_group[t, r] = g
+                    # global partial row ids are appended after we know the
+                    # group's layout; record (t, r) for now via closure list
+                    r += 1
+            k = steps_per_item[t]
+            item_step_begin[t] = s
+            for j in range(k):
+                step_item[s] = t
+                lo = j * ppb
+                pg = it.pages[lo : lo + ppb]
+                if pg:
+                    step_pages[s, : len(pg)] = pg
+                covered_before = lo * page
+                step_len[s] = max(0, min(n, it.num_tokens - covered_before))
+                step_start[s] = 1 if j == 0 else 0
+                step_end[s] = 1 if j == k - 1 else 0
+                s += 1
+        assert s == S
+
+        # merge table entries: row id = base + ((t*Hkv + h)*m + r)
+        for t, it in enumerate(items):
+            r = 0
+            for q in it.query_ids:
+                for g in range(group_size):
+                    for h in range(num_kv_heads):
+                        qhead = h * group_size + g
+                        rid = row_base + (t * num_kv_heads + h) * m + r
+                        parts[q][qhead].append(rid)
+                    r += 1
+        row_base += T * num_kv_heads * m
+
+        groups.append(
+            TileGroupPlan(
+                tile=TileConfig(m, n),
+                pages_per_block=ppb,
+                num_items=T,
+                num_steps=S,
+                step_item=step_item,
+                step_pages=step_pages,
+                step_len=step_len,
+                step_start=step_start,
+                step_end=step_end,
+                row_query=row_query,
+                row_group=row_group,
+                item_kv_len=item_kv_len,
+                item_pages=item_pages,
+                item_num_pages=item_num_pages,
+                item_tail_query=item_tail_query,
+                item_tok_offset=item_tok_offset,
+                item_step_begin=item_step_begin,
+            )
+        )
+
+    # --- merge table --------------------------------------------------------
+    P = 1
+    for q in range(plan.batch_size):
+        for h in range(num_q_heads):
+            P = max(P, len(parts[q][h]))
+    part_rows = np.full((plan.batch_size, num_q_heads, P), -1, np.int32)
+    for q in range(plan.batch_size):
+        for h in range(num_q_heads):
+            ids = parts[q][h]
+            part_rows[q, h, : len(ids)] = ids
+
+    return WorkPlan(
+        groups=groups,
+        part_rows=part_rows,
+        batch_size=plan.batch_size,
+        num_q_heads=num_q_heads,
+        num_kv_heads=num_kv_heads,
+        page_size=page,
+        strategy=plan.strategy,
+        total_partial_rows=row_base,
+        meta=dict(plan.meta),
+    )
+
+
+def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
+    """O(steps) lazy-update refresh: re-derives tail-item valid lengths
+    from fresh ``kv_lens`` without re-packing. Valid exactly while the
+    block-table structure (the plan fingerprint) is unchanged."""
+    new_groups = []
+    for g in wp.groups:
+        tail = g.item_tail_query
+        if tail is None or not (tail >= 0).any():
+            new_groups.append(g)
+            continue
+        item_kv_len = g.item_kv_len.copy()
+        step_len = g.step_len.copy()
+        n = g.tile.n
+        (idxs,) = np.nonzero(tail >= 0)
+        for t in idxs:
+            cap = int(g.item_num_pages[t]) * wp.page_size
+            valid = int(
+                np.clip(kv_lens[tail[t]] - g.item_tok_offset[t], 0, cap)
+            )
+            item_kv_len[t] = valid
+            k = max(1, -(-int(g.item_num_pages[t]) // g.pages_per_block))
+            s0 = int(g.item_step_begin[t])
+            for j in range(k):
+                step_len[s0 + j] = max(0, min(n, valid - j * n))
+        ng = TileGroupPlan(
+            **{**g.__dict__, "item_kv_len": item_kv_len, "step_len": step_len}
+        )
+        new_groups.append(ng)
+    return WorkPlan(
+        groups=new_groups,
+        part_rows=wp.part_rows,
+        batch_size=wp.batch_size,
+        num_q_heads=wp.num_q_heads,
+        num_kv_heads=wp.num_kv_heads,
+        page_size=wp.page_size,
+        strategy=wp.strategy,
+        total_partial_rows=wp.total_partial_rows,
+        meta=wp.meta,
+    )
+
+
+def plan_fingerprint(
+    block_tables: np.ndarray, kv_lens: np.ndarray, page_size: int, strategy: str
+) -> int:
+    """Fingerprint for the lazy-update cache: the plan depends only on the
+    block-table structure. With vLLM-style pre-allocated tables the
+    fingerprint is stable across every decode step of a batch (kv growth is
+    handled by `refresh_lengths` masking); only arrivals/departures/new
+    block assignments change it — exactly the paper's trigger set."""
+    return hash((strategy, page_size, block_tables.shape, block_tables.tobytes()))

@@ -1,0 +1,196 @@
+"""Sharding rules: parameter/activation PartitionSpecs with divisibility
+fallback.
+
+Megatron-style tensor parallelism over the `model` axis:
+  column-parallel: wq/wk/wv, w_gate/w_up, w_uq/w_uk/w_uv, lm_head
+  row-parallel:    wo, w_down, out_proj
+  vocab-parallel:  embedding table
+  expert-parallel: MoE expert stacks sharded on the expert dim
+Optimizer state gets ZeRO-1: each param's spec plus the `data` axis on the
+largest remaining divisible dim.
+
+Every rule checks divisibility and falls back to replication (e.g.
+whisper's 12 heads on a 16-way model axis) — sharding choices never change
+numerics under GSPMD, only layout, so the fallback is always safe.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def path_key(path) -> str:
+    """Stable 'a/b/c' key for a tree path (DictKey / GetAttrKey /
+    SequenceKey all normalised)."""
+    parts = []
+    for p in path:
+        for attr in ("key", "name", "idx"):
+            v = getattr(p, attr, None)
+            if v is not None:
+                parts.append(str(v))
+                break
+        else:
+            parts.append(str(p).strip(".[]'\""))
+    return "/".join(parts)
+
+
+def _div(dim: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and dim % _axis_size(mesh, axis) == 0
+
+
+# name -> (shard_dim_from_end, role) for 2D weights (ignoring stack dims)
+_COLUMN = {"wq", "wk", "wv", "w_gate", "w_up", "w_uq", "w_uk", "w_uv", "w_in",
+           "w_dq", "in_proj", "w"}
+_ROW = {"wo", "w_down", "w_out", "out_proj"}
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh) -> P:
+    """PartitionSpec for one parameter leaf, by path name + shape."""
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+    nd = len(shape)
+    spec = [None] * nd
+
+    def try_shard(dim_idx: int, axis: str = "model") -> bool:
+        if spec[dim_idx] is None and _div(shape[dim_idx], mesh, axis):
+            spec[dim_idx] = axis
+            return True
+        return False
+
+    if name == "table":  # embedding [V, d] (maybe stacked)
+        try_shard(nd - 2)
+    elif parent in ("w_gate", "w_up", "w_down") or (
+        name in ("w_gate", "w_up", "w_down")
+        and nd >= 3
+        and "moe" in path
+        and "shared" not in path
+    ):
+        # MoE expert stacks [.., E, d, f]: expert-parallel on E, plus
+        # FSDP-style `data` sharding on the feature dim — a 236B-class
+        # expert pool does not fit TP-only sharding in 16 GB HBM
+        # (gathers are inserted by GSPMD per layer; ZeRO-3 semantics).
+        try_shard(nd - 3)
+        if spec[nd - 3] is None:
+            # fewer experts than the axis: fall back to per-expert TP
+            if name == "w_down":
+                try_shard(nd - 2)
+            else:
+                try_shard(nd - 1)
+        try_shard(nd - 2, "data")
+    elif name in _ROW:
+        try_shard(nd - 2)
+    elif name in _COLUMN:
+        try_shard(nd - 1)
+    elif nd >= 2:
+        # generic fallback: shard the largest non-stack dim that divides
+        order = sorted(range(max(nd - 2, 0), nd), key=lambda i: -shape[i])
+        for i in order:
+            if try_shard(i):
+                break
+    return P(*spec)
+
+
+def params_shardings(params_shapes: Any, mesh) -> Any:
+    """Tree of NamedShardings matching a (possibly abstract) param tree."""
+
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(path_key(path), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def zero1_shardings(opt_shapes: Any, params_shapes: Any, mesh) -> Any:
+    """ZeRO-1: optimizer moments/master sharded like the param *plus* the
+    `data` axis on the largest remaining divisible dim."""
+
+    param_flat = {
+        path_key(path): leaf
+        for path, leaf in jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    }
+
+    def one(path, leaf):
+        key = path_key(path)
+        # match the underlying param by stripping the opt-state prefix
+        pkey = re.sub(r"^(step|mu|nu|master|\d+)/", "", key)
+        if pkey not in param_flat or np.prod(leaf.shape) <= 1:
+            return NamedSharding(mesh, P())
+        base = param_spec(pkey, leaf.shape, mesh)
+        spec = list(base) + [None] * (len(leaf.shape) - len(base))
+        if "data" not in spec:  # param may already be FSDP-sharded on data
+            order = sorted(range(len(leaf.shape)), key=lambda i: -leaf.shape[i])
+            for i in order:
+                if spec[i] is None and _div(leaf.shape[i], mesh, "data"):
+                    spec[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+def batch_spec(mesh, extra_dims: int = 1) -> P:
+    """[B, ...] sharded over all data-parallel axes."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp = dp if len(dp) > 1 else dp[0]
+    return P(dp, *([None] * extra_dims))
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def cache_spec(
+    mesh, kind: str, shape: Tuple[int, ...], batch_ok: bool,
+    seq_shard: bool = False, seq_over_model: bool = False,
+) -> P:
+    """Decode-cache shardings with divisibility fallback.
+
+    Dense caches [B, L, Hkv, hd]: batch over data when it divides;
+    otherwise (long-context batch=1) the *sequence* dim goes over data —
+    the cluster-scope generalisation of the paper's long-KV split (partial
+    attention per shard + online-softmax merge, inserted by GSPMD).
+    On the model axis: KV heads when divisible, else head_dim, else
+    replicate (e.g. qwen3's 8 KV heads on a 16-way axis -> head_dim)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dpa = dp if len(dp) > 1 else dp[0]
+    nd = len(shape)
+    spec = [None] * nd
+    if kind in ("kv", "mla", "conv"):
+        if batch_ok and not seq_shard:
+            spec[0] = dpa
+        elif _div(shape[1], mesh, "data"):
+            spec[1] = dpa  # sequence / rolling-window sharding
+        if (
+            seq_over_model
+            and kind in ("kv", "mla")
+            and nd >= 3
+            and _div(shape[1], mesh, "model")
+        ):
+            # split-KV over the TP axis (§Perf lever): decode attention
+            # becomes per-shard partial softmax + tiny merge collectives,
+            # the cluster-scope form of the paper's long-KV split.
+            prev = spec[1]
+            if prev is None:
+                spec[1] = "model"
+            elif isinstance(prev, tuple):
+                spec[1] = prev + ("model",)
+            else:
+                spec[1] = (prev, "model")
+            return P(*spec)
+    elif kind == "ssm":
+        if batch_ok:
+            spec[0] = dpa
+    # model axis on heads / feature dims (last two), with fallback
+    for i in ([2, 3] if nd >= 4 else [nd - 1]):
+        if i < nd and spec[i] is None and _div(shape[i], mesh, "model"):
+            spec[i] = "model"
+            break
+    return P(*spec)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  pat_decode    — multi-tile prefix-aware decode attention (paged DMA,
+                  flattened ragged grid) — the paper's contribution
+  merge         — online-softmax partial merge (paper §7)
+  flash_prefill — tiled causal prefill attention (substrate)
+  ops           — jit wrappers (+ XLA fallback with identical semantics)
+  ref           — pure-jnp oracles for all of the above
+"""

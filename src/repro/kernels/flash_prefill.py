@@ -1,0 +1,136 @@
+"""Flash-attention prefill kernel (substrate; the paper optimises decode).
+
+Standard tiled causal attention with online softmax, written with explicit
+BlockSpec VMEM tiling. Used by the serving engine's prefill path and the
+training stack's attention layers when Pallas execution is requested;
+`ref.dense_attention_ref` is the oracle. Supports GQA via a KV-head grid
+axis (q heads of one group are processed together as extra rows).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(
+    q_ref,  # (1, 1, bq, G, dk)
+    k_ref,  # (1, 1, bk, dk)
+    v_ref,  # (1, 1, bk, dv)
+    o_ref,  # (1, 1, bq, G, dv)
+    m_scr,  # VMEM (bq*G, 128)
+    l_scr,  # VMEM (bq*G, 128)
+    acc_scr,  # VMEM (bq*G, dv)
+    *,
+    bq: int,
+    bk: int,
+    group: int,
+    scale: float,
+    causal: bool,
+    kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    rows = bq * group
+    q = q_ref[0, 0].reshape(rows, q_ref.shape[-1])
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    s = (
+        jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * scale
+    )  # (rows, bk)
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (rows, bk), 0) // group
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (rows, bk), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scr[:, 0:1]
+    l_prev = l_scr[:, 0:1]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_cur), m_cur, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe), 0.0)
+    l_cur = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = jnp.broadcast_to(m_cur, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_cur, l_scr.shape)
+
+    @pl.when(ki == kv_blocks - 1)
+    def _():
+        out = acc_scr[...] / jnp.maximum(l_scr[:, 0:1], 1e-30)
+        o_ref[0, 0] = out.reshape(o_ref.shape[2:]).astype(o_ref.dtype)
+
+
+def flash_prefill(
+    q: jax.Array,  # [B, S, Hq, dk]
+    k: jax.Array,  # [B, L, Hkv, dk]
+    v: jax.Array,  # [B, L, Hkv, dv]
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, Hq, dk = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (dk**0.5)
+    bq = min(block_q, S)
+    bk = min(block_k, L)
+    assert S % bq == 0 and L % bk == 0, "pad seq lens to block multiples"
+    q5 = q.reshape(B, S, Hkv, G, dk).transpose(0, 2, 1, 3, 4)  # [B,Hkv,S,G,dk]
+    kt = k.transpose(0, 2, 1, 3)  # [B, Hkv, L, dk]
+    vt = v.transpose(0, 2, 1, 3)
+    kv_blocks = L // bk
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            bq=bq,
+            bk=bk,
+            group=G,
+            scale=scale,
+            causal=causal,
+            kv_blocks=kv_blocks,
+        ),
+        grid=(B, Hkv, S // bq, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, G, dk), lambda b, h, qi, ki: (b, h, qi, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dk), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dv), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, G, dv), lambda b, h, qi, ki: (b, h, qi, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, S, G, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 128), jnp.float32),
+            pltpu.VMEM((bq * G, 128), jnp.float32),
+            pltpu.VMEM((bq * G, dv), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_prefill",
+    )(q5, kt, vt)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, S, Hq, dv)

@@ -1,0 +1,81 @@
+"""Output-merge kernel (paper §7): online-softmax combine of partials.
+
+The forward stage emits, per packed row, an unnormalised fp32 numerator
+``o`` plus ``(max, denom)`` stats. For each (query, head) the merge combines
+its P partial rows:
+
+    M   = max_p m_p
+    w_p = exp(m_p - M)
+    out = (sum_p w_p * o_p) / (sum_p w_p * l_p)
+
+The gather of partial rows (indexed by the plan's ``part_rows`` table) is
+done by XLA (`jnp.take`) — on TPU a flat gather fuses well — and the
+combine itself runs as a small Pallas kernel over row blocks. A pure-jnp
+path (`ref.merge_partials_ref`) is the oracle and the dry-run fallback.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _merge_kernel(o_ref, st_ref, valid_ref, out_ref, *, P: int):
+    # o_ref: (rb, P, dv) fp32; st_ref: (rb, P, 2); valid_ref: (rb, P) int32
+    m_p = st_ref[..., 0]  # (rb, P)
+    l_p = st_ref[..., 1]
+    valid = valid_ref[...] > 0
+    m_p = jnp.where(valid, m_p, NEG_INF)
+    m_max = jnp.max(m_p, axis=1, keepdims=True)  # (rb, 1)
+    m_safe = jnp.where(jnp.isfinite(m_max), m_max, 0.0)
+    w = jnp.where(valid, jnp.exp(m_p - m_safe), 0.0)  # (rb, P)
+    den = jnp.sum(w * jnp.where(valid, l_p, 0.0), axis=1, keepdims=True)
+    num = jnp.einsum(
+        "rp,rpd->rd", w, o_ref[...], preferred_element_type=jnp.float32
+    )
+    out_ref[...] = num / jnp.maximum(den, 1e-30)
+
+
+def merge_partials(
+    partial_o: jax.Array,  # [R, dv] fp32
+    partial_stats: jax.Array,  # [R, 2] fp32
+    part_rows: jax.Array,  # [B, Hq, P] int32 (-1 pad)
+    *,
+    rows_block: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns [B, Hq, dv] fp32 merged outputs."""
+    B, Hq, P = part_rows.shape
+    dv = partial_o.shape[-1]
+    R = B * Hq
+    Rpad = -(-R // rows_block) * rows_block
+
+    flat = part_rows.reshape(R, P)
+    if Rpad != R:
+        flat = jnp.concatenate(
+            [flat, jnp.full((Rpad - R, P), -1, flat.dtype)], axis=0
+        )
+    idx = jnp.maximum(flat, 0)
+    g_o = jnp.take(partial_o, idx.reshape(-1), axis=0).reshape(Rpad, P, dv)
+    g_st = jnp.take(partial_stats, idx.reshape(-1), axis=0).reshape(Rpad, P, 2)
+    valid = (flat >= 0).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_merge_kernel, P=P),
+        grid=(Rpad // rows_block,),
+        in_specs=[
+            pl.BlockSpec((rows_block, P, dv), lambda r: (r, 0, 0)),
+            pl.BlockSpec((rows_block, P, 2), lambda r: (r, 0, 0)),
+            pl.BlockSpec((rows_block, P), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_block, dv), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rpad, dv), jnp.float32),
+        interpret=interpret,
+        name="pat_merge",
+    )(g_o, g_st, valid)
+    return out[:R].reshape(B, Hq, dv)

@@ -1,0 +1,166 @@
+"""Jit-ready wrappers around the PAT kernels.
+
+`pat_paged_attention` executes a WorkPlan: per tile group it packs the Q
+rows, runs the forward kernel (Pallas, or an XLA fallback with identical
+semantics for the multi-device dry-run), then merges partials per query.
+
+The XLA fallback exists because Pallas TPU kernels cannot be compiled for a
+CPU host-platform target; it computes the same unnormalised partials from
+the same plan arrays, so tests assert the two paths are numerically
+identical and the dry-run's memory/collective profile stays representative.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import merge as merge_mod
+from repro.kernels import pat_decode
+from repro.kernels import ref as ref_mod
+from repro.core.work_plan import TileGroupPlan, WorkPlan
+
+
+def pack_q_rows(
+    q: jax.Array,  # [B, Hq, dk]
+    row_query: jax.Array,  # [T, m] int32 (-1 pad)
+    row_group: jax.Array,  # [T, m] int32
+    num_kv_heads: int,
+) -> jax.Array:
+    """Packs query rows for one tile group -> [T, Hkv, m, dk].
+
+    Row (t, r) holds query ``row_query[t,r]``'s head ``h*G + row_group[t,r]``
+    for each KV head h of the grid.
+    """
+    B, Hq, dk = q.shape
+    G = Hq // num_kv_heads
+    # [B, Hkv, G, dk] -> [B, G, Hkv, dk] -> [B*G, Hkv, dk]
+    qr = q.reshape(B, num_kv_heads, G, dk).transpose(0, 2, 1, 3).reshape(B * G, num_kv_heads, dk)
+    idx = jnp.maximum(row_query, 0) * G + row_group  # [T, m]
+    T, m = row_query.shape
+    packed = jnp.take(qr, idx.reshape(-1), axis=0)  # [T*m, Hkv, dk]
+    return packed.reshape(T, m, num_kv_heads, dk).transpose(0, 2, 1, 3)
+
+
+def xla_group_forward(
+    q_packed: jax.Array,  # [T, Hkv, m, dk]
+    k_pages: jax.Array,  # [Hkv, P, page, dk]
+    v_pages: Optional[jax.Array],
+    item_pages: jax.Array,  # [T, maxp] int32
+    item_kv_len: jax.Array,  # [T] int32
+    *,
+    scale: float,
+    v_head_dim: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """XLA-only forward with kernel-identical semantics (unnormalised
+    partials + stats)."""
+    T, Hkv, m, dk = q_packed.shape
+    share_kv = v_pages is None
+    dv = v_head_dim if share_kv else v_pages.shape[-1]
+    maxp, page = item_pages.shape[1], k_pages.shape[2]
+    L = maxp * page
+
+    k_it = jnp.take(k_pages, item_pages.reshape(-1), axis=1)  # [Hkv, T*maxp, page, dk]
+    k_it = k_it.reshape(Hkv, T, L, dk).transpose(1, 0, 2, 3)  # [T, Hkv, L, dk]
+    if share_kv:
+        v_it = k_it[..., :dv]
+    else:
+        v_it = jnp.take(v_pages, item_pages.reshape(-1), axis=1)
+        v_it = v_it.reshape(Hkv, T, L, dv).transpose(1, 0, 2, 3)
+
+    scores = (
+        jnp.einsum(
+            "thmd,thld->thml",
+            q_packed.astype(jnp.float32),
+            k_it.astype(jnp.float32),
+        )
+        * scale
+    )
+    mask = jnp.arange(L)[None, :] < item_kv_len[:, None]  # [T, L]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    m_i = jnp.max(scores, axis=-1)  # [T, Hkv, m]
+    # all-masked items (0 valid tokens: pre-allocated pages only) must not
+    # produce NaNs; their (m=-inf, l=0) partials carry zero merge weight
+    m_safe = jnp.where(jnp.isfinite(m_i), m_i, 0.0)
+    p = jnp.exp(scores - m_safe[..., None])
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    l_i = jnp.sum(p, axis=-1)  # [T, Hkv, m]
+    num = jnp.einsum("thml,thld->thmd", p, v_it.astype(jnp.float32))
+    stats = jnp.stack([m_i, l_i], axis=2)  # [T, Hkv, 2, m]
+    return num, stats
+
+
+def _group_arrays(g: TileGroupPlan):
+    return (
+        jnp.asarray(g.step_item),
+        jnp.asarray(g.step_pages),
+        jnp.asarray(g.step_len),
+        jnp.asarray(g.step_start),
+        jnp.asarray(g.step_end),
+        jnp.asarray(g.row_query),
+        jnp.asarray(g.row_group),
+        jnp.asarray(g.item_pages),
+        jnp.asarray(g.item_kv_len),
+    )
+
+
+def pat_paged_attention(
+    q: jax.Array,  # [B, Hq, dk]
+    k_pages: jax.Array,  # [Hkv, P, page, dk]
+    v_pages: Optional[jax.Array],  # None => MLA-style shared KV
+    wp: WorkPlan,
+    *,
+    scale: Optional[float] = None,
+    impl: str = "pallas",  # "pallas" | "xla"
+    merge_impl: str = "pallas",  # "pallas" | "xla"
+    v_head_dim: Optional[int] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Full pack->forward->merge decode attention. Returns [B, Hq, dv]."""
+    B, Hq, dk = q.shape
+    Hkv = wp.num_kv_heads
+    if scale is None:
+        scale = 1.0 / (dk**0.5)
+    dv = v_head_dim if v_pages is None else v_pages.shape[-1]
+
+    os, sts = [], []
+    for g in wp.groups:
+        (si, sp, sl, ss, se, rq, rg, ip, ikl) = _group_arrays(g)
+        qp = pack_q_rows(q, rq, rg, Hkv)
+        if impl == "pallas":
+            o, st = pat_decode.pat_decode_forward(
+                qp,
+                k_pages,
+                v_pages,
+                si,
+                sp,
+                sl,
+                ss,
+                se,
+                kv_tile=g.tile.n,
+                scale=scale,
+                v_head_dim=dv,
+                interpret=interpret,
+            )
+        elif impl == "xla":
+            o, st = xla_group_forward(
+                qp, k_pages, v_pages, ip, ikl, scale=scale, v_head_dim=dv
+            )
+        else:
+            raise ValueError(impl)
+        T, _, m, _ = qp.shape
+        os.append(o.reshape(T * Hkv * m, dv))
+        sts.append(st.transpose(0, 1, 3, 2).reshape(T * Hkv * m, 2))
+
+    big_o = jnp.concatenate(os, axis=0)
+    big_st = jnp.concatenate(sts, axis=0)
+    part_rows = jnp.asarray(wp.part_rows)
+    if merge_impl == "pallas":
+        out = merge_mod.merge_partials(big_o, big_st, part_rows, interpret=interpret)
+    else:
+        out = ref_mod.merge_partials_ref(big_o, big_st, part_rows)
+    return out.astype(q.dtype)

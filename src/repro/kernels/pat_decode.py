@@ -1,0 +1,278 @@
+"""PAT multi-tile prefix-aware decode attention — Pallas TPU kernel.
+
+One `pallas_call` executes one tile group (all work items that selected the
+same (m, n) configuration). The grid is the *flattened ragged work list*:
+
+    grid = (num_kv_heads, total_kv_steps)
+
+where ``total_kv_steps`` is the sum over items of their KV-step counts —
+the TPU-native equivalent of the paper's multi-stream forward: there are no
+inter-item padding steps, so the execution bubble the GPU design fights
+never materialises (DESIGN.md §2).
+
+Memory movement (the part the paper optimises):
+  * K/V pages live in HBM (`memory_space=ANY`); each grid step DMAs the
+    ``pages_per_block`` pages of its KV tile into a double-buffered VMEM
+    scratch via `pltpu.make_async_copy` — the `cp_async` + double-buffering
+    structure of the paper, driven by scalar-prefetched page tables.
+  * The packed Q tile [m, dk] is a regular BlockSpec input; because
+    consecutive steps of one item share the block index, Pallas keeps it
+    resident in VMEM (loaded once per item, not once per step).
+  * Outputs are *unnormalised* partial numerators + (max, denom) stats per
+    packed row; the merge kernel (merge.py) combines them per query.
+
+GQA packing: a query contributes ``group_size = Hq // Hkv`` rows per KV
+head, so even single-query items present >=4 MMA rows on typical GQA
+models — the TPU twist that makes packed decode MXU-friendly.
+
+MLA sharing: with ``share_kv=True`` the V tile is a prefix-slice of the K
+tile (DeepSeek-style compressed KV: V = c_kv = K[:, :dv]) and the kernel
+skips the V DMA entirely — halving HBM traffic for MLA decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(
+    # --- scalar prefetch (SMEM) ---
+    step_item_ref,  # [S]
+    step_pages_ref,  # [S, ppb]
+    step_len_ref,  # [S]
+    step_start_ref,  # [S]
+    step_end_ref,  # [S]
+    # --- inputs ---
+    q_ref,  # VMEM block (1, 1, m, dk)
+    k_hbm,  # ANY [Hkv, P, page, dk]
+    v_hbm,  # ANY [Hkv, P, page, dv] (aliases k_hbm when share_kv)
+    # --- outputs ---
+    o_ref,  # VMEM block (1, 1, m, dv) fp32
+    stats_ref,  # VMEM block (1, 1, 2, m) fp32
+    # --- scratch ---
+    k_buf,  # VMEM (2, ppb, page, dk)
+    v_buf,  # VMEM (2, ppb, page, dv) (unused when share_kv)
+    acc_ref,  # VMEM (m, dv) fp32
+    m_scr,  # VMEM (m, 128) fp32
+    l_scr,  # VMEM (m, 128) fp32
+    k_sems,  # DMA sems (2, ppb)
+    v_sems,  # DMA sems (2, ppb)
+    *,
+    ppb: int,
+    page: int,
+    m: int,
+    n: int,
+    dk: int,
+    dv: int,
+    scale: float,
+    total_steps: int,
+    num_kv_heads: int,
+    share_kv: bool,
+):
+    h = pl.program_id(0)
+    s = pl.program_id(1)
+    # Double-buffer slot follows the *linear* grid index so parity stays
+    # consistent across the (h, S-1) -> (h+1, 0) wrap even for odd S.
+    lin = h * total_steps + s
+    slot = jax.lax.rem(lin, 2)
+
+    def start_copies(head_idx, step_idx, buf_slot):
+        for j in range(ppb):
+            pid = step_pages_ref[step_idx, j]
+            pltpu.make_async_copy(
+                k_hbm.at[head_idx, pid], k_buf.at[buf_slot, j], k_sems.at[buf_slot, j]
+            ).start()
+            if not share_kv:
+                pltpu.make_async_copy(
+                    v_hbm.at[head_idx, pid],
+                    v_buf.at[buf_slot, j],
+                    v_sems.at[buf_slot, j],
+                ).start()
+
+    def wait_copies(buf_slot):
+        for j in range(ppb):
+            pltpu.make_async_copy(
+                k_hbm.at[h, 0], k_buf.at[buf_slot, j], k_sems.at[buf_slot, j]
+            ).wait()
+            if not share_kv:
+                pltpu.make_async_copy(
+                    v_hbm.at[h, 0], v_buf.at[buf_slot, j], v_sems.at[buf_slot, j]
+                ).wait()
+
+    # Warm-up: the very first step of the whole grid issues its own copies.
+    @pl.when(lin == 0)
+    def _():
+        start_copies(0, 0, 0)
+
+    wait_copies(slot)
+
+    # Prefetch the next grid step's pages into the other buffer. At the
+    # (h, S-1) -> (h+1, 0) wrap the *next head's* step-0 pages are fetched.
+    is_last_overall = lin == num_kv_heads * total_steps - 1
+
+    @pl.when(jnp.logical_not(is_last_overall))
+    def _():
+        wrap = s == total_steps - 1
+        nxt_s = jnp.where(wrap, 0, s + 1)
+        nxt_h = jnp.where(wrap, h + 1, h)
+        start_copies(nxt_h, nxt_s, 1 - slot)
+
+    # --- flash-attention step over this KV tile ----------------------------
+    @pl.when(step_start_ref[s] == 1)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    valid = step_len_ref[s]
+
+    # Steps over pre-allocated (not yet filled) pages carry 0 valid tokens
+    # (lazy-update plans are stable across decode steps); they skip compute
+    # entirely — the DMA pipeline above still advances for simplicity.
+    @pl.when(valid > 0)
+    def _():
+        q = q_ref[0, 0]  # (m, dk)
+        k = k_buf[slot].reshape(n, dk)  # (n, dk)
+        scores = (
+            jax.lax.dot_general(
+                q,
+                k,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )  # (m, n) fp32
+
+        col = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+        scores = jnp.where(col < valid, scores, NEG_INF)
+
+        m_prev = m_scr[:, 0:1]  # (m, 1)
+        l_prev = l_scr[:, 0:1]
+        m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+        # A valid step has >= 1 unmasked column, so m_cur is finite; on the
+        # item's first valid tile m_prev = -inf and alpha = 0.
+        alpha = jnp.exp(m_prev - m_cur)
+        alpha = jnp.where(jnp.isfinite(m_prev), alpha, 0.0)
+        p = jnp.exp(scores - m_cur)
+        p = jnp.where(col < valid, p, 0.0)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+
+        if share_kv:
+            v = k_buf[slot].reshape(n, dk)[:, :dv]
+        else:
+            v = v_buf[slot].reshape(n, dv)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype),
+            v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (m, dv)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_cur, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_cur, l_scr.shape)
+
+    # --- flush partials on the item's final step ---------------------------
+    @pl.when(step_end_ref[s] == 1)
+    def _():
+        o_ref[0, 0] = acc_ref[...]
+        stats_ref[0, 0, 0, :] = m_scr[:, 0]
+        stats_ref[0, 0, 1, :] = l_scr[:, 0]
+
+
+def pat_decode_forward(
+    q_packed: jax.Array,  # [T, Hkv, m, dk]
+    k_pages: jax.Array,  # [Hkv, P, page, dk]
+    v_pages: Optional[jax.Array],  # [Hkv, P, page, dv]; None => share_kv
+    step_item: jax.Array,  # [S] int32
+    step_pages: jax.Array,  # [S, ppb] int32
+    step_len: jax.Array,  # [S] int32
+    step_start: jax.Array,  # [S] int32
+    step_end: jax.Array,  # [S] int32
+    *,
+    kv_tile: int,
+    scale: float,
+    v_head_dim: Optional[int] = None,
+    interpret: bool = True,
+):
+    """Runs one tile group; returns (partial_o [T,Hkv,m,dv] fp32,
+    stats [T,Hkv,2,m] fp32)."""
+    T, Hkv, m, dk = q_packed.shape
+    share_kv = v_pages is None
+    if share_kv:
+        assert v_head_dim is not None, "share_kv needs explicit v_head_dim"
+        dv = v_head_dim
+    else:
+        dv = v_pages.shape[-1]
+    P, page = k_pages.shape[1], k_pages.shape[2]
+    n = kv_tile
+    ppb = n // page
+    assert ppb * page == n, (n, page)
+    S = step_item.shape[0]
+
+    kernel = functools.partial(
+        _kernel,
+        ppb=ppb,
+        page=page,
+        m=m,
+        n=n,
+        dk=dk,
+        dv=dv,
+        scale=scale,
+        total_steps=S,
+        num_kv_heads=Hkv,
+        share_kv=share_kv,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(Hkv, S),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, m, dk),
+                lambda h, s, si, sp, sl, ss, se: (si[s], h, 0, 0),
+            ),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, 1, m, dv),
+                lambda h, s, si, sp, sl, ss, se: (si[s], h, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, 2, m),
+                lambda h, s, si, sp, sl, ss, se: (si[s], h, 0, 0),
+            ),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, ppb, page, dk), k_pages.dtype),
+            pltpu.VMEM((2, ppb, page, dv), k_pages.dtype),
+            pltpu.VMEM((m, dv), jnp.float32),
+            pltpu.VMEM((m, 128), jnp.float32),
+            pltpu.VMEM((m, 128), jnp.float32),
+            pltpu.SemaphoreType.DMA((2, ppb)),
+            pltpu.SemaphoreType.DMA((2, ppb)),
+        ],
+    )
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((T, Hkv, m, dv), jnp.float32),
+        jax.ShapeDtypeStruct((T, Hkv, 2, m), jnp.float32),
+    ]
+    v_in = k_pages if share_kv else v_pages
+    partial_o, stats = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+        name=f"pat_decode_m{m}_n{n}",
+    )(step_item, step_pages, step_len, step_start, step_end, q_packed, k_pages, v_in)
+    return partial_o, stats

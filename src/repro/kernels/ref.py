@@ -1,0 +1,175 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth for all allclose tests: paged decode attention
+over block tables, the online-softmax partial merge, and dense (prefill)
+attention. They are written for clarity, not speed.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(
+    q: jax.Array,  # [B, Hq, dk]
+    k_pages: jax.Array,  # [Hkv, P, page, dk]
+    v_pages: jax.Array,  # [Hkv, P, page, dv]
+    block_tables: jax.Array,  # [B, max_pages] int32 (pad: any valid id)
+    kv_lens: jax.Array,  # [B] int32
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention over a paged KV cache (one query token per request).
+
+    The oracle for the full PAT pipeline (pack -> forward -> merge must
+    reproduce this bit-for-bit up to float tolerance).
+    """
+    B, Hq, dk = q.shape
+    Hkv, P, page, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (dk**0.5)
+    max_pages = block_tables.shape[1]
+    L = max_pages * page
+
+    def one_query(b):
+        # Gather this query's pages: [Hkv, max_pages, page, d] -> [Hkv, L, d]
+        k = k_pages[:, block_tables[b]].reshape(Hkv, L, dk)
+        v = v_pages[:, block_tables[b]].reshape(Hkv, L, dv)
+        qb = q[b].reshape(Hkv, group, dk).astype(jnp.float32)
+        scores = jnp.einsum("hgd,hld->hgl", qb, k.astype(jnp.float32)) * scale
+        mask = jnp.arange(L) < kv_lens[b]
+        scores = jnp.where(mask[None, None, :], scores, -jnp.inf)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("hgl,hld->hgd", p, v.astype(jnp.float32))
+        return out.reshape(Hq, dv)
+
+    return jax.vmap(one_query)(jnp.arange(B)).astype(q.dtype)
+
+
+def merge_partials_ref(
+    partial_o: jax.Array,  # [R, dv] fp32 unnormalised numerators
+    partial_stats: jax.Array,  # [R, 2] fp32 (running max, denominator)
+    part_rows: jax.Array,  # [B, Hq, P] int32, -1 = padding
+) -> jax.Array:
+    """Online-softmax merge of per-item partial results (paper §7)."""
+    B, Hq, P = part_rows.shape
+    dv = partial_o.shape[-1]
+    idx = jnp.maximum(part_rows, 0)
+    valid = (part_rows >= 0)[..., None]  # [B, Hq, P, 1]
+    o = jnp.take(partial_o, idx.reshape(-1), axis=0).reshape(B, Hq, P, dv)
+    st = jnp.take(partial_stats, idx.reshape(-1), axis=0).reshape(B, Hq, P, 2)
+    m_p = jnp.where(valid[..., 0], st[..., 0], -jnp.inf)
+    l_p = jnp.where(valid[..., 0], st[..., 1], 0.0)
+    o = jnp.where(valid, o, 0.0)
+    m_max = jnp.max(m_p, axis=-1, keepdims=True)  # [B, Hq, 1]
+    # guard all-invalid rows (cannot happen for live queries)
+    m_max_safe = jnp.where(jnp.isfinite(m_max), m_max, 0.0)
+    w = jnp.where(jnp.isfinite(m_p), jnp.exp(m_p - m_max_safe), 0.0)  # [B,Hq,P]
+    num = jnp.einsum("bhp,bhpd->bhd", w, o)
+    den = jnp.sum(w * l_p, axis=-1, keepdims=True)
+    return num / jnp.maximum(den, 1e-30)
+
+
+def dense_attention_chunked(
+    q: jax.Array,  # [B, S, Hq, dk]
+    k: jax.Array,  # [B, L, Hkv, dk]
+    v: jax.Array,  # [B, L, Hkv, dv]
+    causal: bool = True,
+    scale: Optional[float] = None,
+    kv_lens: Optional[jax.Array] = None,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style chunked attention in pure JAX: `lax.scan` over KV blocks
+    with an online-softmax carry. Same math as `dense_attention_ref` but
+    the working set is O(S * chunk) instead of O(S * L) — the §Perf lever
+    that collapses the prefill memory-roofline term (EXPERIMENTS.md)."""
+    B, S, Hq, dk = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (dk**0.5)
+    c = min(kv_chunk, L)
+    assert L % c == 0, "pad KV length to a chunk multiple"
+    nchunks = L // c
+    qq = q.reshape(B, S, Hkv, group, dk).astype(jnp.float32)
+    kc = k.reshape(B, nchunks, c, Hkv, dk)
+    vc = v.reshape(B, nchunks, c, Hkv, dv)
+    # queries sit at the END of the KV range (same convention as
+    # dense_attention_ref's default q_offset = L - S)
+    q_pos = (L - S) + jnp.arange(S)
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        ki, vi, ci = inputs  # [B, c, Hkv, dk], [B, c, Hkv, dv], scalar idx
+        s = jnp.einsum("bshgd,blhd->bhgsl", qq, ki.astype(jnp.float32)) * scale
+        kv_pos = ci * c + jnp.arange(c)[None, :]  # [1, c]
+        msk = jnp.ones((B, c), bool)
+        if kv_lens is not None:
+            msk = kv_pos < kv_lens[:, None]
+        if causal:
+            cm = kv_pos[:, None, :] <= q_pos[None, :, None]  # [1, S, c]
+            s = jnp.where(cm[:, None, None, :, :], s, -jnp.inf)
+        s = jnp.where(msk[:, None, None, None, :], s, -jnp.inf)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_cur), m_cur, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgsl,blhd->bhgsd", p, vi.astype(jnp.float32)
+        )
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((B, Hkv, group, S), -jnp.inf)
+    l0 = jnp.zeros((B, Hkv, group, S))
+    a0 = jnp.zeros((B, Hkv, group, S, dv))
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nchunks)),
+    )
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, dv)
+    return out.astype(q.dtype)
+
+
+def dense_attention_ref(
+    q: jax.Array,  # [B, S, Hq, dk]
+    k: jax.Array,  # [B, L, Hkv, dk]
+    v: jax.Array,  # [B, L, Hkv, dv]
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: Optional[jax.Array] = None,  # [B] position of q[:,0] within L
+    kv_lens: Optional[jax.Array] = None,  # [B]
+) -> jax.Array:
+    """Dense (prefill) attention oracle with GQA and causal masking."""
+    B, S, Hq, dk = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (dk**0.5)
+    qq = q.reshape(B, S, Hkv, group, dk).astype(jnp.float32)
+    scores = jnp.einsum("bshgd,blhd->bhgsl", qq, k.astype(jnp.float32)) * scale
+    kv_pos = jnp.arange(L)[None, :]  # [1, L]
+    if kv_lens is not None:
+        len_mask = kv_pos < kv_lens[:, None]  # [B, L]
+    else:
+        len_mask = jnp.ones((B, L), bool)
+    if causal:
+        off = q_offset[:, None] if q_offset is not None else jnp.full((B, 1), L - S)
+        q_pos = off + jnp.arange(S)[None, :]  # [B, S]
+        causal_mask = kv_pos[:, None, :] <= q_pos[:, :, None]  # [B, S, L]
+        mask = causal_mask & len_mask[:, None, :]
+    else:
+        mask = jnp.broadcast_to(len_mask[:, None, :], (B, S, L))
+    scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows (padding)
+    out = jnp.einsum("bhgsl,blhd->bshgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, dv).astype(q.dtype)

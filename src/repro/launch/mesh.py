@@ -1,0 +1,53 @@
+"""Production mesh construction.
+
+`make_production_mesh` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state. The dry-run
+(`launch/dryrun.py`) sets XLA_FLAGS=--xla_force_host_platform_device_count
+=512 before any jax import; real launches get the same topology from the
+TPU runtime.
+
+Axis semantics:
+  pod   — data parallelism across pods (gradient reduction crosses DCI)
+  data  — data parallelism within a pod; also the KV-sequence axis for
+          long-context decode (split-KV + online-softmax merge)
+  model — tensor parallelism (heads / ffn / vocab / experts)
+
+Elasticity: meshes are size-parametric; checkpoints are mesh-independent
+(training/checkpoint.py), so a job restarted on a different topology
+re-shards on load.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(
+    data: int, model: int, pod: Optional[int] = None
+):
+    """Elastic variant: any (pod) x data x model factorisation."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model),
+            ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The axes that jointly form data parallelism."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,280 @@
+"""Model-level attention: GQA (with qk_norm / bias variants) and MLA.
+
+Two execution modes per variant:
+  * ``*_train``: dense causal attention over the full sequence (used by
+    train/prefill paths; oracle = kernels.ref.dense_attention_ref, and the
+    Pallas flash_prefill kernel can be swapped in).
+  * ``*_decode``: one-token decode against a cache. The model-level cache
+    here is dense ([B, L, Hkv, hd]) for pjit-friendliness at dry-run scale;
+    the serving engine uses the paged PAT backend instead (core/attention).
+
+MLA (DeepSeek-V2) decode uses the weight-absorbed latent formulation: the
+cache stores the compressed c_kv (kv_lora_rank) plus the shared RoPE key —
+the representation PAT's share_kv kernel mode exploits.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ref import dense_attention_chunked, dense_attention_ref
+from repro.models import layers as L
+
+# --- execution-policy flags (perf levers, EXPERIMENTS.md §Perf) -----------
+# cache update: "select" rewrites the whole cache via a one-hot blend
+# (baseline); "scatter" writes only the touched rows (in-place under
+# donation).
+CACHE_UPDATE_ALGO = "select"
+# full-sequence attention: "dense" materialises [.., S, L] scores
+# (baseline); "chunked" scans KV blocks with an online-softmax carry.
+SEQ_ATTN_ALGO = "dense"
+SEQ_ATTN_CHUNK = 1024
+
+
+def _seq_attention(q, k, v, causal=True, scale=None, kv_lens=None):
+    if SEQ_ATTN_ALGO == "chunked" and k.shape[1] >= 2 * SEQ_ATTN_CHUNK:
+        return dense_attention_chunked(
+            q, k, v, causal=causal, scale=scale, kv_lens=kv_lens,
+            kv_chunk=SEQ_ATTN_CHUNK,
+        )
+    return dense_attention_ref(q, k, v, causal=causal, scale=scale, kv_lens=kv_lens)
+
+
+def _cache_update(cache, new, positions):
+    """cache [B, L, ...], new [B, 1, ...] -> cache with row `positions[b]`
+    replaced, per batch row."""
+    if CACHE_UPDATE_ALGO == "scatter":
+        B = cache.shape[0]
+        return cache.at[jnp.arange(B), positions].set(
+            new[:, 0].astype(cache.dtype)
+        )
+    onehot = jax.nn.one_hot(positions, cache.shape[1], dtype=jnp.float32)
+    sel = onehot.reshape(onehot.shape + (1,) * (cache.ndim - 2))
+    return (cache * (1 - sel) + new.astype(cache.dtype) * sel).astype(cache.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, dtype):
+    d, Hq, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L._dense_init(ks[0], (d, Hq * hd), dtype),
+        "wk": L._dense_init(ks[1], (d, Hkv * hd), dtype),
+        "wv": L._dense_init(ks[2], (d, Hkv * hd), dtype),
+        "wo": L._dense_init(ks[3], (Hq * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd, dtype)
+        p["k_norm"] = L.init_rmsnorm(hd, dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def gqa_train(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, d]
+    positions: Optional[jax.Array] = None,  # [B, S]
+    causal: bool = True,
+    kv_lens: Optional[jax.Array] = None,
+) -> jax.Array:
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.positions == "rope":
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    out = _seq_attention(q, k, v, causal=causal, kv_lens=kv_lens)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_cross(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, d] (decoder states)
+    enc: jax.Array,  # [B, L, d] (encoder states)
+) -> jax.Array:
+    """Cross-attention (whisper decoder); K/V from encoder states."""
+    B, S, _ = x.shape
+    Lenc = enc.shape[1]
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, Hq, hd)
+    k = (enc @ p["wk"]).reshape(B, Lenc, Hkv, hd)
+    v = (enc @ p["wv"]).reshape(B, Lenc, Hkv, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(Hq, hd)
+        k = k + p["bk"].reshape(Hkv, hd)
+        v = v + p["bv"].reshape(Hkv, hd)
+    out = _seq_attention(q, k, v, causal=False)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_decode(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, 1, d]
+    cache_k: jax.Array,  # [B, L, Hkv, hd]
+    cache_v: jax.Array,
+    positions: jax.Array,  # [B] index of the new token
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, _, _ = x.shape
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(p, cfg, x)  # S = 1
+    if cfg.positions == "rope":
+        pos = positions[:, None]
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+
+    cache_k = _cache_update(cache_k, k, positions)
+    cache_v = _cache_update(cache_v, v, positions)
+
+    kv_lens = positions + 1
+    out = dense_attention_ref(
+        q, cache_k, cache_v, causal=False, kv_lens=kv_lens
+    )  # [B, 1, Hq, hd]
+    return out.reshape(B, 1, -1) @ p["wo"], cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# --------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, Hq = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": L._dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": L.init_rmsnorm(m.q_lora_rank, dtype),
+        "w_uq": L._dense_init(ks[1], (m.q_lora_rank, Hq * qk_dim), dtype),
+        "w_dkv": L._dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": L.init_rmsnorm(m.kv_lora_rank, dtype),
+        "w_uk": L._dense_init(ks[3], (m.kv_lora_rank, Hq * m.qk_nope_head_dim), dtype),
+        "w_uv": L._dense_init(ks[4], (m.kv_lora_rank, Hq * m.v_head_dim), dtype),
+        "wo": L._dense_init(ks[5], (Hq * m.v_head_dim, d), dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    Hq = cfg.num_heads
+    cq = L.rmsnorm(p["q_norm"], x @ p["w_dq"])
+    q = (cq @ p["w_uq"]).reshape(B, S, Hq, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, cfg, x, positions):
+    m = cfg.mla
+    ckv_full = x @ p["w_dkv"]  # [B, S, kv_lora + rope]
+    c_kv = L.rmsnorm(p["kv_norm"], ckv_full[..., : m.kv_lora_rank])
+    k_rope = ckv_full[..., m.kv_lora_rank :][:, :, None, :]  # [B, S, 1, rope]
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_train(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: Optional[jax.Array] = None,
+    kv_lens: Optional[jax.Array] = None,
+) -> jax.Array:
+    m = cfg.mla
+    B, S, _ = x.shape
+    Hq = cfg.num_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(p, cfg, x, positions)
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, Hq, m.qk_nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, Hq, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, Hq, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    out = _seq_attention(q, k, v, causal=True, scale=scale, kv_lens=kv_lens)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def mla_decode(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, 1, d]
+    cache_ckv: jax.Array,  # [B, L, kv_lora]
+    cache_krope: jax.Array,  # [B, L, rope_dim]
+    positions: jax.Array,  # [B]
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Weight-absorbed latent decode: attention runs in the compressed
+    c_kv space (1 logical KV 'head', d_k = kv_lora + rope, V = c_kv)."""
+    m = cfg.mla
+    B = x.shape[0]
+    Hq = cfg.num_heads
+    pos = positions[:, None]
+    q_nope, q_rope = _mla_q(p, cfg, x, pos)  # [B, 1, Hq, *]
+    c_kv, k_rope = _mla_ckv(p, cfg, x, pos)  # [B, 1, kv_lora], [B, 1, rope]
+
+    cache_ckv = _cache_update(cache_ckv, c_kv, positions)
+    cache_krope = _cache_update(cache_krope, k_rope, positions)
+
+    # absorb W_UK into the query: q_lat [B, Hq, kv_lora]
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, Hq, m.qk_nope_head_dim)
+    q_lat = jnp.einsum(
+        "bhd,khd->bhk",
+        q_nope[:, 0].astype(jnp.float32),
+        w_uk.astype(jnp.float32),
+    )
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (
+        jnp.einsum("bhk,blk->bhl", q_lat, cache_ckv.astype(jnp.float32))
+        + jnp.einsum(
+            "bhr,blr->bhl",
+            q_rope[:, 0].astype(jnp.float32),
+            cache_krope.astype(jnp.float32),
+        )
+    ) * scale
+    Lmax = cache_ckv.shape[1]
+    mask = jnp.arange(Lmax)[None, None, :] < (positions + 1)[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhl,blk->bhk", probs, cache_ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, Hq, m.v_head_dim)
+    out = jnp.einsum("bhk,khv->bhv", out_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, Hq * m.v_head_dim).astype(x.dtype)
+    return out @ p["wo"], cache_ckv, cache_krope

@@ -1,0 +1,126 @@
+"""Shared model layers: norms, MLPs, embeddings, RoPE.
+
+Pure-functional pytree style: ``init_*`` builds parameter dicts,
+``apply``-style functions consume them. No framework dependency — params
+are plain nested dicts of jax arrays, which keeps pjit sharding rules
+simple (distributed/sharding.py pattern-matches on path names).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+# --- norms -----------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (
+        x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    ).astype(dtype)
+
+
+# --- MLPs ------------------------------------------------------------------
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": _dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": _dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(x @ params["w_gate"])
+    return (g * (x @ params["w_up"])) @ params["w_down"]
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": _dense_init(k1, (d_model, d_ff), dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": _dense_init(k2, (d_ff, d_model), dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu(x @ params["w_in"] + params["b_in"])
+    return h @ params["w_out"] + params["b_out"]
+
+
+# --- embeddings ------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x, table: Optional[jax.Array] = None):
+    t = table if table is not None else params["table"]
+    return x @ t.T
+
+
+def sinusoidal_positions(length: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    i = jnp.arange(dim // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)
+
+
+# --- RoPE ------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2).astype(jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4):
+    """x: [..., S, H, d] (or [..., H, d] with scalar positions); positions
+    broadcastable to x's S axis."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    sin = jnp.sin(angles)[..., None, :]  # [..., S, 1, d/2]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

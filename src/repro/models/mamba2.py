@@ -1,0 +1,173 @@
+"""Mamba2 (SSD — state-space duality) layer.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk interactions
+computed as a masked quadratic form (attention-duality), inter-chunk state
+carried by a `lax.scan` over chunk boundaries — O(S * chunk) work and
+O(S/chunk) sequential steps, which keeps the dry-run HLO small and lets
+XLA pipeline the recurrence.
+
+Decode keeps O(1) per-step state: the SSM state h [nheads, headdim, dstate]
+and a rolling conv buffer — the reason PAT is *inapplicable* to this family
+(no KV cache to share; DESIGN.md §5).
+
+Simplified faithfully from Dao & Gu (arXiv:2405.21060): scalar A per head,
+grouped B/C (ngroups=1), gated SiLU output with RMSNorm.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return s, d_in, nheads, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.d_state + nheads  # z, x, B, C, dt
+    return {
+        "in_proj": L._dense_init(ks[0], (cfg.d_model, proj_out), dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": L.init_rmsnorm(d_in, dtype),
+        "out_proj": L._dense_init(ks[2], (d_in, cfg.d_model), dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, d_in, nheads, _ = _dims(cfg)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + d_in + 2 * s.d_state]
+    dt = proj[..., -nheads:]
+    return z, xbc, dt
+
+
+def mamba2_train(p, cfg: ModelConfig, u: jax.Array) -> jax.Array:
+    """u: [B, S, d] -> [B, S, d] (chunked SSD scan)."""
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    B, S, _ = u.shape
+    ch = min(s.chunk, S)
+    assert S % ch == 0, "pad sequence to a chunk multiple"
+    nc = S // ch
+    hd, ds = s.head_dim, s.d_state
+
+    proj = u @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # causal depthwise conv over (x, B, C)
+    pad = jnp.zeros((B, s.conv_kernel - 1, conv_dim), xbc.dtype)
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    conv = sum(
+        xbc_pad[:, i : i + S] * p["conv_w"][i] for i in range(s.conv_kernel)
+    ) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    x = conv[..., :d_in].reshape(B, S, nheads, hd)
+    Bm = conv[..., d_in : d_in + ds]  # [B, S, ds] (ngroups=1)
+    Cm = conv[..., d_in + ds :]  # [B, S, ds]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, S, nh]
+    A = -jnp.exp(p["A_log"])  # [nh]
+    dA = dt * A  # [B, S, nh] (log decay per step)
+
+    # chunked views
+    xc = x.reshape(B, nc, ch, nheads, hd).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, ch, ds).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, ch, ds).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, ch, nheads)
+    dAc = dA.reshape(B, nc, ch, nheads)
+    seg = jnp.cumsum(dAc, axis=2)  # within-chunk cumulative log decay
+
+    # --- intra-chunk (attention-duality): y[t] += C_t . h contributions ----
+    # decay(s->t) = exp(seg[t] - seg[s]) for s <= t
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # [B,nc,t,s,nh]
+    tri = jnp.tril(jnp.ones((ch, ch), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bntd,bnsd->bnts", Cc, Bc)  # [B,nc,t,s]
+    scores = cb[..., None] * decay * dtc[:, :, None, :, :]  # [B,nc,t,s,nh]
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", scores, xc)  # [B,nc,ch,nh,hd]
+
+    # --- chunk-boundary states + inter-chunk scan ---------------------------
+    # state contribution of chunk: sum_s exp(seg[end]-seg[s]) dt_s B_s x_s
+    tail_decay = jnp.exp(seg[:, :, -1:, :] - seg)  # [B,nc,ch,nh]
+    contrib = jnp.einsum(
+        "bnsh,bnsd,bnshp->bnhpd",
+        tail_decay * dtc,
+        Bc,
+        xc,
+    )  # [B, nc, nh, hd, ds]
+    chunk_decay = jnp.exp(seg[:, :, -1, :])  # [B, nc, nh]
+
+    def scan_fn(h, inp):
+        contrib_i, decay_i = inp  # [B,nh,hd,ds], [B,nh]
+        h_next = h * decay_i[:, :, None, None] + contrib_i
+        return h_next, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((B, nheads, hd, ds), jnp.float32)
+    _, h_in = jax.lax.scan(
+        scan_fn,
+        h0,
+        (contrib.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )  # [nc, B, nh, hd, ds]
+    h_in = h_in.swapaxes(0, 1)  # [B, nc, nh, hd, ds]
+
+    head_decay = jnp.exp(seg)  # decay from chunk start to t: [B,nc,ch,nh]
+    y_inter = jnp.einsum(
+        "bntd,bnhpd,bnth->bnthp", Cc, h_in, head_decay
+    )  # [B,nc,ch,nh,hd]
+
+    y = y_intra + y_inter + p["D"][None, None, None, :, None] * xc
+    y = y.reshape(B, S, d_in).astype(u.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+def mamba2_decode(
+    p,
+    cfg: ModelConfig,
+    u: jax.Array,  # [B, 1, d]
+    h: jax.Array,  # [B, nh, hd, ds] fp32 SSM state
+    conv_buf: jax.Array,  # [B, K-1, conv_dim] rolling conv inputs
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrent step; returns (y, h', conv_buf')."""
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    B = u.shape[0]
+    hd, ds = s.head_dim, s.d_state
+
+    proj = u[:, 0] @ p["in_proj"]  # [B, proj_out]
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    window = jnp.concatenate([conv_buf, xbc[:, None, :]], axis=1)  # [B, K, conv]
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    new_buf = window[:, 1:]
+
+    x = conv[:, :d_in].reshape(B, nheads, hd).astype(jnp.float32)
+    Bm = conv[:, d_in : d_in + ds].astype(jnp.float32)
+    Cm = conv[:, d_in + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, nh]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)  # [B, nh]
+
+    h_new = h * decay[:, :, None, None] + jnp.einsum(
+        "bh,bd,bhp->bhpd", dt, Bm, x
+    )
+    y = jnp.einsum("bd,bhpd->bhp", Cm, h_new) + p["D"][None, :, None] * x
+    y = y.reshape(B, d_in).astype(u.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return (y @ p["out_proj"])[:, None, :], h_new, new_buf

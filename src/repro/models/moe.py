@@ -1,0 +1,133 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based gather dispatch,
+optional shared experts (DeepSeek-style).
+
+Dispatch is sort-free gather/scatter with a fixed per-expert capacity
+(`capacity_factor`), which keeps compiled FLOPs proportional to *active*
+parameters (a one-hot dispatch matmul at 160 experts would dominate the
+profile and wreck the roofline's useful-compute ratio — measured in
+EXPERIMENTS.md §Perf). Experts are sharded over the `model` mesh axis (EP);
+XLA inserts the all-to-all-equivalent collectives for the gathers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import layers as L
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    moe = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    E, dff = moe.num_experts, moe.d_ff_expert
+    p = {
+        "router": L._dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": L._dense_init(ks[1], (E, d, dff), dtype),
+        "w_up": L._dense_init(ks[2], (E, d, dff), dtype),
+        "w_down": L._dense_init(ks[3], (E, dff, d), dtype),
+    }
+    if moe.num_shared_experts:
+        p["shared"] = L.init_swiglu(
+            ks[4], d, moe.d_ff_shared * moe.num_shared_experts, dtype
+        )
+    return p
+
+
+def _positions_cumsum(flat_e: jax.Array, E: int) -> jax.Array:
+    """Queue position per assignment via a [A, E] one-hot cumsum. O(A*E)
+    memory — the baseline used for the §Perf comparison."""
+    A = flat_e.shape[0]
+    onehot_cum = jnp.cumsum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=0)
+    return onehot_cum[jnp.arange(A), flat_e] - 1
+
+
+def _positions_sort(flat_e: jax.Array, E: int) -> jax.Array:
+    """Queue position per assignment via stable sort. O(A) memory; the
+    beyond-paper optimisation (EXPERIMENTS.md §Perf)."""
+    A = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)  # [A]
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=flat_e.dtype))
+    pos_sorted = jnp.arange(A, dtype=jnp.int32) - seg_start[sorted_e].astype(jnp.int32)
+    return jnp.zeros(A, jnp.int32).at[order].set(pos_sorted)
+
+
+# Dispatch position algorithm: "sort" (default, O(A) memory) or "cumsum".
+DISPATCH_ALGO = "sort"
+
+
+def moe_apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d]."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = moe.num_experts, moe.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)  # [T, k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # --- capacity-based dispatch -------------------------------------------
+    # Small token counts (decode steps) get drop-free capacity C = T*k —
+    # the padding is negligible there and keeps decode == train numerics;
+    # large (training) batches use the standard capacity factor.
+    if T * k <= 4096:
+        C = T * k
+    else:
+        C = max(1, int(T * k * moe.capacity_factor / E))
+    flat_e = tope.reshape(-1)  # [T*k]
+    if DISPATCH_ALGO == "sort":
+        pos = _positions_sort(flat_e, E)
+    else:
+        pos = _positions_cumsum(flat_e, E)
+    keep = pos < C
+    # token id feeding each (expert, slot); T = sentinel for empty slots.
+    # Dropped assignments scatter to an out-of-bounds row and vanish.
+    slot_token = jnp.full((E, C), T, jnp.int32)
+    src_token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    slot_token = slot_token.at[
+        jnp.where(keep, flat_e, E), jnp.where(keep, pos, 0)
+    ].set(src_token, mode="drop")
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    x_e = jnp.take(xt_pad, slot_token.reshape(-1), axis=0).reshape(E, C, d)
+
+    # --- expert computation (grouped SwiGLU) --------------------------------
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_e, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", x_e, p["w_up"])
+    y_e = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])  # [E, C, d]
+
+    # --- combine -------------------------------------------------------------
+    w_flat = jnp.where(keep, topw.reshape(-1), 0.0)  # [T*k]
+    out = jnp.zeros((T + 1, d), jnp.float32)
+    flat_pos = jnp.where(keep, pos, C - 1)
+    gathered = y_e[jnp.where(keep, flat_e, 0), flat_pos]  # [T*k, d]
+    out = out.at[jnp.where(keep, src_token, T)].add(
+        gathered.astype(jnp.float32) * w_flat[:, None]
+    )
+    y = out[:T].astype(x.dtype)
+
+    if moe.num_shared_experts:
+        y = y + L.swiglu(p["shared"], xt)
+    return y.reshape(B, S, d)
+
+
+def router_aux_loss(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    moe = cfg.moe
+    T = x.shape[0] * x.shape[1]
+    logits = x.reshape(T, -1).astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, tope = jax.lax.top_k(probs, moe.top_k)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(tope, moe.num_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    return moe.num_experts * jnp.sum(frac_tokens * frac_probs)

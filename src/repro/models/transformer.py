@@ -1,0 +1,467 @@
+"""The model zoo's chassis: decoder-only LMs, hybrid SSM/attention stacks,
+MoE interleaves, MLA, and the Whisper-style encoder-decoder — one functional
+implementation driven entirely by `ModelConfig`.
+
+Execution paths:
+  * `lm_forward`  — train/prefill: `lax.scan` over stacked homogeneous
+    super-blocks (scan_block = lcm of the interleave patterns) so the HLO
+    stays compact at 64 layers x 512 devices, with optional remat.
+  * `lm_prefill`  — forward + per-layer KV/SSM cache emission.
+  * `decode_step` — single-token decode, python loop over layers (small
+    graphs; mixed layer types stay trivial), dense model-level caches.
+    The serving engine replaces dense-cache attention with the paged PAT
+    backend; this path is the pjit/dry-run representation.
+
+Params are nested dicts; stacked leaves carry a leading ``n_super`` axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, li: int, dtype, cross: bool = False) -> Params:
+    """One layer's params; ``li`` is the index within a super-block."""
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if cfg.layer_is_attention(li):
+        p["ln_attn"] = (
+            L.init_rmsnorm(cfg.d_model, dtype)
+            if cfg.norm == "rmsnorm"
+            else L.init_layernorm(cfg.d_model, dtype)
+        )
+        if cfg.mla is not None:
+            p["attn"] = A.init_mla(ks[0], cfg, dtype)
+        else:
+            p["attn"] = A.init_gqa(ks[0], cfg, dtype)
+        if cross:
+            p["ln_cross"] = (
+                L.init_rmsnorm(cfg.d_model, dtype)
+                if cfg.norm == "rmsnorm"
+                else L.init_layernorm(cfg.d_model, dtype)
+            )
+            p["cross"] = A.init_gqa(ks[3], cfg, dtype)
+    else:
+        p["ln_ssm"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["ssm"] = M2.init_mamba2(ks[0], cfg, dtype)
+
+    has_mlp = cfg.d_ff > 0 or cfg.layer_is_moe(li)
+    if has_mlp:
+        p["ln_mlp"] = (
+            L.init_rmsnorm(cfg.d_model, dtype)
+            if cfg.norm == "rmsnorm"
+            else L.init_layernorm(cfg.d_model, dtype)
+        )
+        if cfg.layer_is_moe(li):
+            p["moe"] = MOE.init_moe(ks[1], cfg, dtype)
+        elif cfg.d_ff > 0:
+            p["mlp"] = (
+                L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dtype)
+                if cfg.mlp == "swiglu"
+                else L.init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+            )
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg)
+    n_super = cfg.num_layers // cfg.scan_block
+    assert n_super * cfg.scan_block == cfg.num_layers
+    ks = jax.random.split(key, n_super + 4)
+
+    def init_block(k):
+        sub = jax.random.split(k, cfg.scan_block)
+        return {
+            f"layer{i}": _init_layer(sub[i], cfg, i, dtype, cross=cfg.encdec is not None)
+            for i in range(cfg.scan_block)
+        }
+
+    blocks = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[init_block(ks[i]) for i in range(n_super)]
+    ) if n_super > 1 else jax.tree.map(lambda x: x[None], init_block(ks[0]))
+
+    p: Params = {
+        "embed": L.init_embedding(ks[-1], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": (
+            L.init_rmsnorm(cfg.d_model, dtype)
+            if cfg.norm == "rmsnorm"
+            else L.init_layernorm(cfg.d_model, dtype)
+        ),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {
+            "w": L._dense_init(ks[-2], (cfg.d_model, cfg.padded_vocab), dtype)
+        }
+    if cfg.encdec is not None:
+        enc_ks = jax.random.split(ks[-3], cfg.encdec.num_encoder_layers)
+        enc_layers = [
+            {
+                "ln_attn": L.init_layernorm(cfg.d_model, dtype),
+                "attn": A.init_gqa(enc_ks[i], cfg, dtype),
+                "ln_mlp": L.init_layernorm(cfg.d_model, dtype),
+                "mlp": L.init_gelu_mlp(
+                    jax.random.fold_in(enc_ks[i], 1), cfg.d_model, cfg.d_ff, dtype
+                ),
+            }
+            for i in range(cfg.encdec.num_encoder_layers)
+        ]
+        p["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers)
+        p["enc_final_norm"] = L.init_layernorm(cfg.d_model, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# shared layer application
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg, params, x):
+    return L.rmsnorm(params, x) if cfg.norm == "rmsnorm" else L.layernorm(params, x)
+
+
+def _apply_layer_train(
+    lp: Params,
+    cfg: ModelConfig,
+    li: int,
+    h: jax.Array,
+    positions: jax.Array,
+    enc_states: Optional[jax.Array],
+    kv_lens: Optional[jax.Array],
+) -> jax.Array:
+    if cfg.layer_is_attention(li):
+        if cfg.mla is not None:
+            h = h + A.mla_train(lp["attn"], cfg, _norm(cfg, lp["ln_attn"], h), positions, kv_lens=kv_lens)
+        else:
+            h = h + A.gqa_train(lp["attn"], cfg, _norm(cfg, lp["ln_attn"], h), positions, kv_lens=kv_lens)
+        if enc_states is not None:
+            h = h + A.gqa_cross(lp["cross"], cfg, _norm(cfg, lp["ln_cross"], h), enc_states)
+    else:
+        h = h + M2.mamba2_train(lp["ssm"], cfg, _norm(cfg, lp["ln_ssm"], h))
+    if "moe" in lp:
+        h = h + MOE.moe_apply(lp["moe"], cfg, _norm(cfg, lp["ln_mlp"], h))
+    elif "mlp" in lp:
+        mlp = L.swiglu if cfg.mlp == "swiglu" else L.gelu_mlp
+        h = h + mlp(lp["mlp"], _norm(cfg, lp["ln_mlp"], h))
+    return h
+
+
+def _encode(p: Params, cfg: ModelConfig, enc_inputs: jax.Array) -> jax.Array:
+    """Whisper-style encoder over stub frame embeddings [B, Lenc, d]."""
+    h = enc_inputs + L.sinusoidal_positions(
+        enc_inputs.shape[1], cfg.d_model, enc_inputs.dtype
+    )
+
+    def block(h, lp):
+        x = _norm(cfg, lp["ln_attn"], h)
+        h = h + A.gqa_train(lp["attn"], cfg, x, causal=False)
+        h = h + L.gelu_mlp(lp["mlp"], _norm(cfg, lp["ln_mlp"], h))
+        return h, None
+
+    h, _ = jax.lax.scan(block, h, p["encoder"])
+    return _norm(cfg, p["enc_final_norm"], h)
+
+
+# ---------------------------------------------------------------------------
+# train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def lm_forward(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,  # [B, S] int32
+    input_embeds: Optional[jax.Array] = None,  # [B, S, d] (VLM stub path)
+    enc_inputs: Optional[jax.Array] = None,  # [B, Lenc, d] (audio stub path)
+    positions: Optional[jax.Array] = None,
+    kv_lens: Optional[jax.Array] = None,
+    remat: bool = True,
+    unroll: bool = False,
+) -> jax.Array:
+    """Full-sequence causal forward -> logits [B, S, padded_vocab].
+
+    ``unroll=True`` replaces the layer scan with a python loop — used by
+    the dry-run's cost accounting because XLA's cost analysis counts a
+    while-loop body once regardless of trip count (measured; see
+    EXPERIMENTS.md §Dry-run notes)."""
+    if input_embeds is not None:
+        h = input_embeds
+    else:
+        h = L.embed(p["embed"], tokens)
+    B, S, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.positions == "sinusoidal":
+        h = h + L.sinusoidal_positions(S, cfg.d_model, h.dtype)
+
+    enc_states = _encode(p, cfg, enc_inputs) if cfg.encdec is not None else None
+
+    def block(h, bp):
+        for i in range(cfg.scan_block):
+            h = _apply_layer_train(
+                bp[f"layer{i}"], cfg, i, h, positions, enc_states, kv_lens
+            )
+        return h, None
+
+    block_fn = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable) if remat else block
+    if unroll:
+        n_super = cfg.num_layers // cfg.scan_block
+        for si in range(n_super):
+            bp = jax.tree.map(lambda x: x[si], p["blocks"])
+            h, _ = block_fn(h, bp)
+    else:
+        h, _ = jax.lax.scan(block_fn, h, p["blocks"])
+    h = _norm(cfg, p["final_norm"], h)
+    if cfg.tie_embeddings:
+        return L.unembed(p["embed"], h)
+    return h @ p["lm_head"]["w"]
+
+
+def lm_loss(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    labels: jax.Array,  # [B, S] (-100 = ignore)
+    **fwd_kwargs,
+) -> jax.Array:
+    logits = lm_forward(p, cfg, tokens, **fwd_kwargs).astype(jnp.float32)
+    return _loss_from_logits(logits, labels)
+
+
+def _loss_from_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    valid = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    return -jnp.sum(jnp.where(valid, ll, 0.0)) / jnp.maximum(valid.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=None
+) -> List[Dict[str, jax.Array]]:
+    """Dense model-level caches, one dict per layer."""
+    dtype = dtype or _dtype(cfg)
+    caches = []
+    for gi in range(cfg.num_layers):
+        li = gi % cfg.scan_block
+        if cfg.layer_is_attention(li):
+            if cfg.mla is not None:
+                caches.append(
+                    {
+                        "ckv": jnp.zeros((batch, max_len, cfg.mla.kv_lora_rank), dtype),
+                        "krope": jnp.zeros(
+                            (batch, max_len, cfg.mla.qk_rope_head_dim), dtype
+                        ),
+                    }
+                )
+            else:
+                shp = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+                caches.append({"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)})
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nheads = d_in // s.head_dim
+            conv_dim = d_in + 2 * s.d_state
+            caches.append(
+                {
+                    "h": jnp.zeros((batch, nheads, s.head_dim, s.d_state), jnp.float32),
+                    "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+                }
+            )
+    return caches
+
+
+def _layer_params(p: Params, cfg: ModelConfig, gi: int) -> Params:
+    si, li = divmod(gi, cfg.scan_block)
+    return jax.tree.map(lambda x: x[si], p["blocks"][f"layer{li}"])
+
+
+def decode_step(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [B] int32 (new token per sequence)
+    positions: jax.Array,  # [B] its position
+    caches: List[Dict[str, jax.Array]],
+    enc_states: Optional[jax.Array] = None,  # [B, Lenc, d] for enc-dec
+    input_embeds: Optional[jax.Array] = None,  # [B, d] (VLM stub)
+) -> Tuple[jax.Array, List[Dict[str, jax.Array]]]:
+    """One decode step -> (logits [B, V], updated caches)."""
+    if input_embeds is not None:
+        h = input_embeds[:, None, :]
+    else:
+        h = L.embed(p["embed"], tokens[:, None])
+    if cfg.positions == "sinusoidal":
+        table = L.sinusoidal_positions(cfg.max_seq_len, cfg.d_model, h.dtype)
+        h = h + jnp.take(table, positions, axis=0)[:, None, :]
+
+    new_caches = []
+    for gi in range(cfg.num_layers):
+        li = gi % cfg.scan_block
+        lp = _layer_params(p, cfg, gi)
+        c = caches[gi]
+        if cfg.layer_is_attention(li):
+            x = _norm(cfg, lp["ln_attn"], h)
+            if cfg.mla is not None:
+                out, ckv, krope = A.mla_decode(
+                    lp["attn"], cfg, x, c["ckv"], c["krope"], positions
+                )
+                nc = {"ckv": ckv, "krope": krope}
+            else:
+                out, k, v = A.gqa_decode(lp["attn"], cfg, x, c["k"], c["v"], positions)
+                nc = {"k": k, "v": v}
+            h = h + out
+            if enc_states is not None:
+                h = h + A.gqa_cross(
+                    lp["cross"], cfg, _norm(cfg, lp["ln_cross"], h), enc_states
+                )
+        else:
+            x = _norm(cfg, lp["ln_ssm"], h)
+            out, hs, conv = M2.mamba2_decode(lp["ssm"], cfg, x, c["h"], c["conv"])
+            nc = {"h": hs, "conv": conv}
+            h = h + out
+        if "moe" in lp:
+            h = h + MOE.moe_apply(lp["moe"], cfg, _norm(cfg, lp["ln_mlp"], h))
+        elif "mlp" in lp:
+            mlp = L.swiglu if cfg.mlp == "swiglu" else L.gelu_mlp
+            h = h + mlp(lp["mlp"], _norm(cfg, lp["ln_mlp"], h))
+        new_caches.append(nc)
+
+    h = _norm(cfg, p["final_norm"], h)
+    logits = (
+        L.unembed(p["embed"], h) if cfg.tie_embeddings else h @ p["lm_head"]["w"]
+    )
+    return logits[:, 0], new_caches
+
+
+def lm_prefill_scan(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [B, S]
+    kv_lens: Optional[jax.Array] = None,
+    enc_inputs: Optional[jax.Array] = None,
+    input_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Any]:
+    """Scanned prefill: forward + per-block cache emission via lax.scan —
+    compact HLO for deep stacks (the dry-run compiles this form; caches
+    come back stacked [n_super, ...] per block-layer)."""
+    if input_embeds is not None:
+        h = input_embeds
+    else:
+        h = L.embed(p["embed"], tokens)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.positions == "sinusoidal":
+        h = h + L.sinusoidal_positions(S, cfg.d_model, h.dtype)
+    enc_states = _encode(p, cfg, enc_inputs) if cfg.encdec is not None else None
+
+    def block(h, bp):
+        caches = {}
+        for i in range(cfg.scan_block):
+            lp = bp[f"layer{i}"]
+            if cfg.layer_is_attention(i):
+                x = _norm(cfg, lp["ln_attn"], h)
+                if cfg.mla is not None:
+                    c_kv, k_rope = A._mla_ckv(lp["attn"], cfg, x, positions)
+                    caches[f"layer{i}"] = {"ckv": c_kv, "krope": k_rope}
+                else:
+                    _, k, v = A._project_qkv(lp["attn"], cfg, x)
+                    if cfg.positions == "rope":
+                        k = L.apply_rope(k, positions, cfg.rope_theta)
+                    caches[f"layer{i}"] = {"k": k, "v": v}
+            else:
+                caches[f"layer{i}"] = {}
+            h = _apply_layer_train(lp, cfg, i, h, positions, enc_states, kv_lens)
+        return h, caches
+
+    h, caches = jax.lax.scan(block, h, p["blocks"])
+    h = _norm(cfg, p["final_norm"], h)
+    logits = (
+        L.unembed(p["embed"], h) if cfg.tie_embeddings else h @ p["lm_head"]["w"]
+    )
+    return logits[:, -1], caches
+
+
+def lm_prefill(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [B, S]
+    kv_lens: Optional[jax.Array] = None,
+    enc_inputs: Optional[jax.Array] = None,
+    input_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, List[Dict[str, jax.Array]]]:
+    """Prefill: forward + cache construction. Returns (last logits, caches).
+
+    Uses the per-layer (loop) path so each layer's K/V (or SSM state) can be
+    captured; the engine consumes this form.
+    """
+    if input_embeds is not None:
+        h = input_embeds
+    else:
+        h = L.embed(p["embed"], tokens)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.positions == "sinusoidal":
+        h = h + L.sinusoidal_positions(S, cfg.d_model, h.dtype)
+    enc_states = _encode(p, cfg, enc_inputs) if cfg.encdec is not None else None
+
+    caches = []
+    for gi in range(cfg.num_layers):
+        li = gi % cfg.scan_block
+        lp = _layer_params(p, cfg, gi)
+        if cfg.layer_is_attention(li):
+            x = _norm(cfg, lp["ln_attn"], h)
+            if cfg.mla is not None:
+                c_kv, k_rope = A._mla_ckv(lp["attn"], cfg, x, positions)
+                caches.append({"ckv": c_kv, "krope": k_rope})
+                h = h + A.mla_train(lp["attn"], cfg, x, positions, kv_lens=kv_lens)
+            else:
+                q, k, v = A._project_qkv(lp["attn"], cfg, x)
+                if cfg.positions == "rope":
+                    k = L.apply_rope(k, positions, cfg.rope_theta)
+                caches.append({"k": k, "v": v})
+                h = h + A.gqa_train(lp["attn"], cfg, x, positions, kv_lens=kv_lens)
+            if enc_states is not None:
+                h = h + A.gqa_cross(
+                    lp["cross"], cfg, _norm(cfg, lp["ln_cross"], h), enc_states
+                )
+        else:
+            x = _norm(cfg, lp["ln_ssm"], h)
+            h = h + M2.mamba2_train(lp["ssm"], cfg, x)
+            caches.append({})  # SSM prefill state capture: engine replays
+        if "moe" in lp:
+            h = h + MOE.moe_apply(lp["moe"], cfg, _norm(cfg, lp["ln_mlp"], h))
+        elif "mlp" in lp:
+            mlp = L.swiglu if cfg.mlp == "swiglu" else L.gelu_mlp
+            h = h + mlp(lp["mlp"], _norm(cfg, lp["ln_mlp"], h))
+
+    h = _norm(cfg, p["final_norm"], h)
+    logits = (
+        L.unembed(p["embed"], h) if cfg.tie_embeddings else h @ p["lm_head"]["w"]
+    )
+    return logits[:, -1], caches

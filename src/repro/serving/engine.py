@@ -1,0 +1,341 @@
+"""Continuous-batching serving engine with PAT decode attention.
+
+Pipeline per engine step (vLLM-style, single host):
+  1. admit waiting requests while KV pages are available; each admitted
+     request reuses radix-cached prefix pages (one physical copy) and
+     prefills only its uncached suffix;
+  2. batch-decode all running requests: ONE pack plan per step (lazy-update
+     cached across steps AND shared by all layers), PAT forward + merge per
+     layer, sample, advance;
+  3. retire finished requests (EOS/max_new_tokens), releasing page refs.
+
+Decode attention runs through core.attention.PatAttentionBackend — the
+paper's plugin surface: `backend_strategy` switches PAT / query-centric /
+relay / ablations without touching the engine, mirroring
+VLLM_ATTENTION_BACKEND=PAT.
+
+Supports decoder-only GQA archs and MLA (DeepSeek) via combined-KV pages
+(share_kv); hybrid/SSM archs decode through models.transformer.decode_step
+(dense state) since they hold no paged KV — see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import PatAttentionBackend, PatConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import attention as A
+from repro.serving import sampling
+from repro.serving.kv_cache import (
+    KVCacheConfig,
+    PagedKVCache,
+    token_to_page_slots,
+)
+from repro.serving.radix_cache import RadixCache
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+    # filled by the engine
+    pages: List[int] = field(default_factory=list)
+    cached_tokens: int = 0
+    generated: List[int] = field(default_factory=list)
+    t_first_token: Optional[float] = None
+    t_finished: Optional[float] = None
+    position: int = 0  # next position to decode
+
+
+@dataclass
+class EngineMetrics:
+    prefill_time: float = 0.0
+    decode_time: float = 0.0
+    plan_time: float = 0.0
+    steps: int = 0
+    finished: List[Request] = field(default_factory=list)
+
+
+class Engine:
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        num_pages: int = 2048,
+        page_size: int = 16,
+        pat_config: Optional[PatConfig] = None,
+        eos_id: int = 2,
+        seed: int = 0,
+        temperature: float = 0.0,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.pat_config = pat_config or PatConfig(
+            impl="xla", merge_impl="xla", page_size=page_size
+        )
+        self.mla = cfg.mla is not None
+        if self.mla:
+            dk = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            dv = cfg.mla.v_head_dim
+            kvcfg = KVCacheConfig(
+                cfg.num_layers, 1, dk, None, num_pages, page_size,
+                dtype="float32",
+            )
+            self.backend = PatAttentionBackend(
+                cfg.num_heads, 1, dk, v_head_dim=cfg.mla.kv_lora_rank,
+                kv_dtype_bytes=4, config=self.pat_config,
+            )
+        else:
+            kvcfg = KVCacheConfig(
+                cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, cfg.head_dim,
+                num_pages, page_size, dtype="float32",
+            )
+            self.backend = PatAttentionBackend(
+                cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                kv_dtype_bytes=4, config=self.pat_config,
+            )
+        self.kv = PagedKVCache(kvcfg)
+        self.radix = RadixCache(self.kv.allocator, page_size)
+        self.page = page_size
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.metrics = EngineMetrics()
+        self._rid = 0
+
+    # --- public API ---------------------------------------------------------
+
+    def submit(self, prompt: List[int], max_new_tokens: int = 32) -> int:
+        self._rid += 1
+        self.waiting.append(
+            Request(self._rid, list(prompt), max_new_tokens, arrival=time.perf_counter())
+        )
+        return self._rid
+
+    def run(self, max_steps: int = 10_000) -> EngineMetrics:
+        while (self.waiting or self.running) and self.metrics.steps < max_steps:
+            self.step()
+        return self.metrics
+
+    # --- engine internals -----------------------------------------------------
+
+    def step(self) -> None:
+        self._admit()
+        if self.running:
+            self._decode_batch()
+        self.metrics.steps += 1
+
+    def _admit(self) -> None:
+        admitted = []
+        for req in list(self.waiting):
+            need_total = len(req.prompt) + req.max_new_tokens
+            n_pages = -(-need_total // self.page)
+            cached_pages, cached = self.radix.match_prefix(req.prompt)
+            new_needed = n_pages - len(cached_pages)
+            if self.kv.allocator.num_free < new_needed:
+                if self.radix.evict(new_needed - self.kv.allocator.num_free) == 0:
+                    if cached_pages:
+                        self.kv.allocator.decref(cached_pages)
+                    break  # FCFS: wait for capacity
+            req.pages = cached_pages + self.kv.allocator.alloc(new_needed)
+            req.cached_tokens = cached
+            self._prefill(req)
+            admitted.append(req)
+            self.waiting.remove(req)
+            self.running.append(req)
+
+    def _prefill(self, req: Request) -> None:
+        t0 = time.perf_counter()
+        prompt = np.asarray(req.prompt, np.int32)
+        S = len(prompt)
+        # run dense prefill over the *uncached* suffix but attend over the
+        # full prefix: positions offset by cached_tokens
+        # (cached tokens' K/V already live in shared pages).
+        suffix = prompt[req.cached_tokens :]
+        toks = jnp.asarray(prompt[None])
+        logits_last, caches = T.lm_prefill(self.params, self.cfg, toks)
+        # write K/V of the uncached tokens into this request's pages
+        pids, slots = token_to_page_slots(
+            req.pages, req.cached_tokens, S - req.cached_tokens, self.page
+        )
+        if self.mla:
+            k_all = jnp.stack(
+                [
+                    jnp.concatenate([c["ckv"][0], c["krope"][0]], axis=-1)[:, None, :]
+                    for c in caches
+                ]
+            )  # [L, S, 1, dk]
+            self.kv.write_tokens(
+                k_all[:, req.cached_tokens :], None, pids, slots
+            )
+        else:
+            k_all = jnp.stack([c["k"][0] for c in caches])  # [L, S, Hkv, hd]
+            v_all = jnp.stack([c["v"][0] for c in caches])
+            self.kv.write_tokens(
+                k_all[:, req.cached_tokens :], v_all[:, req.cached_tokens :], pids, slots
+            )
+        self.radix.insert(req.prompt, req.pages)
+        req.position = S
+        # first generated token comes from the prefill logits
+        tok = int(sampling.sample(logits_last, self.key, self.temperature)[0])
+        req.generated.append(tok)
+        req.t_first_token = time.perf_counter()
+        self.metrics.prefill_time += time.perf_counter() - t0
+
+    def _block_tables(self) -> (np.ndarray, np.ndarray):
+        """Block tables include ALL pre-allocated pages (vLLM-style): the
+        table — and therefore the pack plan — is stable for the whole
+        decode of a batch; kv_lens masking handles the growth."""
+        B = len(self.running)
+        maxp = max(len(r.pages) for r in self.running)
+        bt = -np.ones((B, maxp), np.int32)
+        kv_lens = np.zeros(B, np.int64)
+        for i, r in enumerate(self.running):
+            bt[i, : len(r.pages)] = r.pages
+            kv_lens[i] = r.position + 1  # includes the token decoded now
+        return bt, kv_lens
+
+    def _decode_batch(self) -> None:
+        t0 = time.perf_counter()
+        B = len(self.running)
+        tokens = jnp.asarray([r.generated[-1] for r in self.running], jnp.int32)
+        positions = jnp.asarray([r.position for r in self.running], jnp.int32)
+        bt, kv_lens = self._block_tables()
+        tp = time.perf_counter()
+        wp = self.backend.plan(bt, kv_lens)
+        self.metrics.plan_time += time.perf_counter() - tp
+
+        logits = self._paged_decode_step(tokens, positions, wp)
+        self.key, sub = jax.random.split(self.key)
+        next_tokens = np.asarray(sampling.sample(logits, sub, self.temperature))
+
+        for i, r in enumerate(self.running):
+            r.position += 1
+            r.generated.append(int(next_tokens[i]))
+        still = []
+        for r in self.running:
+            done = (
+                len(r.generated) >= r.max_new_tokens
+                or r.generated[-1] == self.eos_id
+            )
+            if done:
+                r.t_finished = time.perf_counter()
+                self.kv.allocator.decref(r.pages)
+                self.metrics.finished.append(r)
+            else:
+                still.append(r)
+        self.running = still
+        self.metrics.decode_time += time.perf_counter() - t0
+
+    def _paged_decode_step(self, tokens, positions, wp) -> jax.Array:
+        cfg = self.cfg
+        p = self.params
+        B = tokens.shape[0]
+        h = L.embed(p["embed"], tokens[:, None])
+        new_k_layers, new_v_layers = [], []
+        for gi in range(cfg.num_layers):
+            lp = T._layer_params(p, cfg, gi)
+            x = T._norm(cfg, lp["ln_attn"], h)
+            if self.mla:
+                out, kc = self._mla_paged_attn(lp["attn"], x, positions, gi, wp)
+                new_k_layers.append(kc)
+            else:
+                out, kc, vc = self._gqa_paged_attn(lp["attn"], x, positions, gi, wp)
+                new_k_layers.append(kc)
+                new_v_layers.append(vc)
+            h = h + out
+            if "moe" in lp:
+                from repro.models import moe as MOE
+
+                h = h + MOE.moe_apply(lp["moe"], cfg, T._norm(cfg, lp["ln_mlp"], h))
+            elif "mlp" in lp:
+                mlp = L.swiglu if cfg.mlp == "swiglu" else L.gelu_mlp
+                h = h + mlp(lp["mlp"], T._norm(cfg, lp["ln_mlp"], h))
+        # batch the page writes for all layers at once
+        pids = np.zeros(B, np.int32)
+        slots = np.zeros(B, np.int32)
+        for i, r in enumerate(self.running):
+            pids[i] = r.pages[r.position // self.page]
+            slots[i] = r.position % self.page
+        k_all = jnp.stack(new_k_layers)  # [Llayers, B, H, dk] -> treat B as S
+        if self.mla:
+            self.kv.write_tokens(k_all, None, pids, slots)
+        else:
+            v_all = jnp.stack(new_v_layers)
+            self.kv.write_tokens(k_all, v_all, pids, slots)
+
+        h = T._norm(cfg, p["final_norm"], h)
+        logits = (
+            L.unembed(p["embed"], h) if cfg.tie_embeddings else h @ p["lm_head"]["w"]
+        )
+        return logits[:, 0]
+
+    def _gqa_paged_attn(self, ap, x, positions, layer, wp):
+        cfg = self.cfg
+        B = x.shape[0]
+        q, k, v = A._project_qkv(ap, cfg, x)  # [B,1,H,hd]
+        if cfg.positions == "rope":
+            pos = positions[:, None]
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+        # write this token's K/V into the pool BEFORE attending (it attends
+        # to itself: kv_lens includes it)
+        pids = np.zeros(B, np.int32)
+        slots = np.zeros(B, np.int32)
+        for i, r in enumerate(self.running):
+            pids[i] = r.pages[r.position // self.page]
+            slots[i] = r.position % self.page
+        kp, vp = self.kv.layer_view(layer)
+        kp = kp.at[:, jnp.asarray(pids), jnp.asarray(slots)].set(
+            k[:, 0].transpose(1, 0, 2).astype(kp.dtype)
+        )
+        vp = vp.at[:, jnp.asarray(pids), jnp.asarray(slots)].set(
+            v[:, 0].transpose(1, 0, 2).astype(vp.dtype)
+        )
+        out = self.backend.attend(q[:, 0], kp, vp, wp)  # [B, Hq, hd]
+        out = out.reshape(B, 1, -1).astype(x.dtype) @ ap["wo"]
+        return out, k[:, 0], v[:, 0]
+
+    def _mla_paged_attn(self, ap, x, positions, layer, wp):
+        cfg, m = self.cfg, self.cfg.mla
+        B = x.shape[0]
+        pos = positions[:, None]
+        q_nope, q_rope = A._mla_q(ap, cfg, x, pos)
+        c_kv, k_rope = A._mla_ckv(ap, cfg, x, pos)
+        entry = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0][:, None, :]  # [B,1,dk]
+        pids = np.zeros(B, np.int32)
+        slots = np.zeros(B, np.int32)
+        for i, r in enumerate(self.running):
+            pids[i] = r.pages[r.position // self.page]
+            slots[i] = r.position % self.page
+        kp, _ = self.kv.layer_view(layer)
+        kp = kp.at[:, jnp.asarray(pids), jnp.asarray(slots)].set(
+            entry.transpose(1, 0, 2).astype(kp.dtype)
+        )
+        # absorbed query per head: [B, Hq, kv_lora + rope]
+        w_uk = ap["w_uk"].reshape(m.kv_lora_rank, cfg.num_heads, m.qk_nope_head_dim)
+        q_lat = jnp.einsum("bhd,khd->bhk", q_nope[:, 0].astype(jnp.float32), w_uk.astype(jnp.float32))
+        q_full = jnp.concatenate([q_lat, q_rope[:, 0].astype(jnp.float32)], axis=-1)
+        scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        out_lat = self.backend.attend(
+            q_full.astype(x.dtype), kp, None, wp, scale=scale
+        )  # [B, Hq, kv_lora]
+        w_uv = ap["w_uv"].reshape(m.kv_lora_rank, cfg.num_heads, m.v_head_dim)
+        out = jnp.einsum(
+            "bhk,khv->bhv", out_lat.astype(jnp.float32), w_uv.astype(jnp.float32)
+        ).reshape(B, 1, -1)
+        # entry keeps its singleton KV-head axis: [B, 1(=Hkv), dk]
+        return out.astype(x.dtype) @ ap["wo"], entry

@@ -1,0 +1,113 @@
+"""Paged KV cache: device page pools + host page allocator.
+
+Layout per layer: k_pages/v_pages [Hkv, num_pages, page_size, head_dim]
+(stacked across layers on a leading axis for single-scatter writes). This
+is the layout the PAT kernel DMAs from. MLA archs store one combined pool
+(c_kv ++ k_rope) and use the kernel's share_kv mode.
+
+The host allocator is a free list with reference counts, shared with the
+radix prefix cache (a page referenced by N live requests + the radix tree
+has refcount N+1 and is only recycled at zero).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PageAllocator:
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self.free = list(range(num_pages - 1, -1, -1))
+        self.refs = np.zeros(num_pages, np.int32)
+
+    def alloc(self, n: int) -> List[int]:
+        if len(self.free) < n:
+            raise MemoryError(f"KV pool exhausted: need {n}, free {len(self.free)}")
+        out = [self.free.pop() for _ in range(n)]
+        for p in out:
+            self.refs[p] = 1
+        return out
+
+    def incref(self, pages: List[int]) -> None:
+        for p in pages:
+            assert self.refs[p] > 0
+            self.refs[p] += 1
+
+    def decref(self, pages: List[int]) -> None:
+        for p in pages:
+            self.refs[p] -= 1
+            assert self.refs[p] >= 0
+            if self.refs[p] == 0:
+                self.free.append(p)
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+
+@dataclass
+class KVCacheConfig:
+    num_layers: int
+    num_kv_heads: int
+    head_dim: int  # k head dim (MLA: kv_lora + rope, padded if desired)
+    v_head_dim: Optional[int]  # None => share_kv (MLA)
+    num_pages: int
+    page_size: int = 16
+    dtype: str = "float32"  # CPU container default; bf16 on TPU
+
+
+class PagedKVCache:
+    """Device-side page pools for all layers + the host allocator."""
+
+    def __init__(self, cfg: KVCacheConfig):
+        self.cfg = cfg
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        shape_k = (cfg.num_layers, cfg.num_kv_heads, cfg.num_pages, cfg.page_size, cfg.head_dim)
+        self.k_pages = jnp.zeros(shape_k, dt)
+        self.share_kv = cfg.v_head_dim is None
+        if self.share_kv:
+            self.v_pages = None
+        else:
+            self.v_pages = jnp.zeros(
+                (cfg.num_layers, cfg.num_kv_heads, cfg.num_pages, cfg.page_size, cfg.v_head_dim), dt
+            )
+        self.allocator = PageAllocator(cfg.num_pages)
+
+    # --- device writes ------------------------------------------------------
+
+    def write_tokens(
+        self,
+        layer_k: jax.Array,  # [L, S, Hkv, dk] new K entries (all layers)
+        layer_v: Optional[jax.Array],  # [L, S, Hkv, dv]
+        page_ids: np.ndarray,  # [S] physical page per token
+        slots: np.ndarray,  # [S] slot within page per token
+    ) -> None:
+        pids = jnp.asarray(page_ids)
+        slt = jnp.asarray(slots)
+        k = layer_k.transpose(0, 2, 1, 3).astype(self.k_pages.dtype)  # [L,Hkv,S,dk]
+        self.k_pages = self.k_pages.at[:, :, pids, slt].set(k)
+        if not self.share_kv and layer_v is not None:
+            v = layer_v.transpose(0, 2, 1, 3).astype(self.v_pages.dtype)
+            self.v_pages = self.v_pages.at[:, :, pids, slt].set(v)
+
+    def layer_view(self, layer: int):
+        k = self.k_pages[layer]
+        v = None if self.share_kv else self.v_pages[layer]
+        return k, v
+
+
+def token_to_page_slots(
+    pages: List[int], start_token: int, num_tokens: int, page_size: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Maps token positions [start, start+num) of a request to (page, slot)."""
+    idx = np.arange(start_token, start_token + num_tokens)
+    page_idx = idx // page_size
+    slots = idx % page_size
+    page_ids = np.asarray(pages, np.int32)[page_idx]
+    return page_ids.astype(np.int32), slots.astype(np.int32)

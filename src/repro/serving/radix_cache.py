@@ -1,0 +1,118 @@
+"""Radix-tree prefix cache (SGLang-style) over token sequences.
+
+Maps token-id prefixes to physical KV pages so requests sharing a prefix
+(system prompt, RAG doc, agent template) share one physical copy — the
+substrate PAT's pack scheduler exploits: shared prefixes show up as
+identical leading page ids in the block table, which become internal nodes
+of the pack scheduler's prefix forest.
+
+Sharing is page-granular: only full pages are ever shared (the invariant
+the prefix forest relies on). LRU eviction recycles unreferenced subtrees.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.kv_cache import PageAllocator
+
+
+@dataclass
+class RadixNode:
+    tokens: Tuple[int, ...]  # token run of this edge (page-aligned)
+    pages: List[int]  # physical pages backing the run
+    children: Dict[int, "RadixNode"] = field(default_factory=dict)
+    parent: Optional["RadixNode"] = None
+    last_used: float = 0.0
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+class RadixCache:
+    def __init__(self, allocator: PageAllocator, page_size: int):
+        self.alloc = allocator
+        self.page = page_size
+        self.root = RadixNode((), [])
+
+    def match_prefix(self, tokens: List[int]) -> Tuple[List[int], int]:
+        """Longest page-aligned cached prefix -> (pages, matched_tokens).
+        Increfs the returned pages (caller owns one reference)."""
+        node = self.root
+        pages: List[int] = []
+        matched = 0
+        i = 0
+        while True:
+            nxt = node.children.get(tokens[i]) if i < len(tokens) else None
+            if nxt is None:
+                break
+            run = nxt.tokens
+            if len(tokens) - i < len(run) or tuple(tokens[i : i + len(run)]) != run:
+                break
+            pages += nxt.pages
+            matched += len(run)
+            i += len(run)
+            nxt.last_used = time.monotonic()
+            node = nxt
+        if pages:
+            self.alloc.incref(pages)
+        return pages, matched
+
+    def insert(self, tokens: List[int], pages: List[int]) -> None:
+        """Registers a computed prefix (full pages only). Takes one extra
+        reference on behalf of the tree."""
+        n_full = len(tokens) // self.page
+        tokens = tokens[: n_full * self.page]
+        pages = pages[:n_full]
+        node = self.root
+        i = 0
+        while i < len(tokens):
+            key = tokens[i]
+            nxt = node.children.get(key)
+            if nxt is not None and tuple(tokens[i : i + len(nxt.tokens)]) == nxt.tokens:
+                node = nxt
+                i += len(nxt.tokens)
+                continue
+            # new edge: the remaining run (one edge per page for splittable
+            # granularity — simple and eviction-friendly)
+            while i < len(tokens):
+                run = tuple(tokens[i : i + self.page])
+                pg = [pages[i // self.page]]
+                child = RadixNode(run, pg, parent=node, last_used=time.monotonic())
+                self.alloc.incref(pg)
+                node.children[run[0]] = child
+                node = child
+                i += self.page
+            return
+
+    def evict(self, num_pages: int) -> int:
+        """LRU-evicts unreferenced leaves until `num_pages` freed (refcount
+        1 = only the tree holds it). Returns pages actually freed."""
+        freed = 0
+        while freed < num_pages:
+            victim: Optional[RadixNode] = None
+
+            def walk(n: RadixNode):
+                nonlocal victim
+                for c in n.children.values():
+                    walk(c)
+                if (
+                    n is not self.root
+                    and n.is_leaf
+                    and all(self.alloc.refs[p] == 1 for p in n.pages)
+                ):
+                    if victim is None or n.last_used < victim.last_used:
+                        victim = n
+
+            walk(self.root)
+            if victim is None:
+                break
+            self.alloc.decref(victim.pages)
+            freed += len(victim.pages)
+            parent = victim.parent
+            if parent:
+                parent.children.pop(victim.tokens[0], None)
+        return freed

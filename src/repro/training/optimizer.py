@@ -1,0 +1,93 @@
+"""AdamW with gradient clipping and schedules — hand-rolled (no optax in
+the container), pytree-native so ZeRO-1 sharding rules apply directly to
+the optimizer state leaves (distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    # master weights + moments dtype (fp32 masters; params may be bf16)
+    state_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moment (pytree like params)
+    nu: Any  # second moment
+    master: Any  # fp32 master copy of params
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.learning_rate * warm * frac
+
+
+def init_opt_state(params: Any, cfg: OptimizerConfig) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    # master must be a fresh buffer even when params are already fp32
+    # (an aliasing master would be double-donated by train_step)
+    master = jax.tree.map(
+        lambda p: jnp.array(p, dtype=cfg.state_dtype, copy=True), params
+    )
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads: Any, opt_state: OptState, params: Any, cfg: OptimizerConfig
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = opt_state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(cfg.state_dtype) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        w = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w)
+        return m, v, w
+
+    flat = jax.tree.map(upd, grads, opt_state.mu, opt_state.nu, opt_state.master)
+    mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    new_state = OptState(step=step, mu=mu, nu=nu, master=master)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,82 @@
+"""HLO-text analysis: collective-traffic extraction for the roofline.
+
+`cost_analysis()` does not report collective bytes, so we parse the
+compiled module text and sum the bytes moved by every collective op, with
+the standard per-algorithm conventions:
+
+  all-gather         : output bytes (each device receives the full output)
+  reduce-scatter     : input bytes
+  all-reduce         : 2x input bytes (ring = reduce-scatter + all-gather)
+  all-to-all         : input bytes
+  collective-permute : input bytes
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\((?:[^()]|\([^()]*\))*\)|[\w\[\],{}/ ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Returns (total_bytes_moved, per-op-kind breakdown) for one module.
+
+    Bytes are per-device per-execution (HLO shapes in SPMD modules are the
+    per-device shard shapes)."""
+    per_kind: Dict[str, int] = defaultdict(int)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        out_shape, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # started ops counted at -start
+        out_bytes = _shape_bytes(out_shape)
+        if kind == "all-reduce":
+            per_kind[kind] += 2 * out_bytes
+        elif kind == "all-gather":
+            per_kind[kind] += out_bytes
+        else:
+            # reduce-scatter / all-to-all / collective-permute: input ~ output
+            # for a2a & permute; reduce-scatter input = output * group_size,
+            # but the per-device traffic is ~input bytes / group = output *
+            # (group-1)/group ~ gathered from operand text; use operand side:
+            ops = _shape_bytes(line.split("(", 1)[1])
+            per_kind[kind] += max(ops, out_bytes)
+    return sum(per_kind.values()), dict(per_kind)
+
+
+def count_ops(hlo_text: str, names=("fusion", "while", "custom-call")) -> Dict[str, int]:
+    out = {}
+    for n in names:
+        out[n] = len(re.findall(rf"\b{n}\(", hlo_text))
+    return out

@@ -1,0 +1,108 @@
+"""Three-term roofline model from compiled dry-run artifacts (DESIGN.md §8).
+
+    t_comp = HLO_FLOPs        / (chips * peak_FLOP/s)
+    t_mem  = HLO_bytes        / (chips * HBM_bw)
+    t_coll = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs/bytes come from `compiled.cost_analysis()` (whole-program, i.e.
+already per-module; under SPMD the module is per-device, so terms use the
+per-device numbers directly and `chips` only enters the MODEL_FLOPS
+utilisation ratio). collective_bytes comes from utils/hlo.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.tile_config import TpuSpec
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_total: float
+    chips: int
+    spec: TpuSpec = field(default_factory=TpuSpec)
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def t_comp(self) -> float:
+        return self.flops_per_device / self.spec.peak_bf16_flops
+
+    @property
+    def t_mem(self) -> float:
+        return self.bytes_per_device / self.spec.hbm_bandwidth
+
+    @property
+    def t_coll(self) -> float:
+        return self.coll_bytes_per_device / self.spec.ici_link_bandwidth
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_comp, "memory": self.t_mem, "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_comp, self.t_mem, self.t_coll)
+
+    @property
+    def useful_compute_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO flops across chips (catches remat &
+        dispatch waste)."""
+        total_hlo = self.flops_per_device * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOPs per chip-second at the bound, vs peak."""
+        if self.t_bound == 0:
+            return 0.0
+        achieved = self.model_flops_total / (self.chips * self.t_bound)
+        return achieved / self.spec.peak_bf16_flops
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "t_comp_s": self.t_comp,
+            "t_mem_s": self.t_mem,
+            "t_coll_s": self.t_coll,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops_total,
+            "hlo_flops_per_dev": self.flops_per_device,
+            "useful_ratio": self.useful_compute_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def model_flops(cfg, shape, tokens_processed: Optional[int] = None) -> float:
+    """6*N*D (train) / 2*N_active*D (inference) with D = tokens processed."""
+    n_active = cfg.active_params()
+    if shape.kind == "train":
+        D = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * D
+    if shape.kind == "prefill":
+        D = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * D
+    # decode: one token per sequence, but attention reads the whole KV cache
+    D = shape.global_batch
+    attn_flops = 0.0
+    if cfg.ssm is None or (cfg.ssm and cfg.ssm.attn_every):
+        n_attn = cfg.attention_layers
+        hq, hd = cfg.num_heads, cfg.head_dim
+        if cfg.mla is not None:
+            dk = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            dvv = cfg.mla.kv_lora_rank
+            attn_flops = 2.0 * n_attn * hq * (dk + dvv) * shape.seq_len * D
+        else:
+            attn_flops = 2.0 * n_attn * hq * hd * 2 * shape.seq_len * D
+    return 2.0 * n_active * D + attn_flops

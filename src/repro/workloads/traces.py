@@ -1,0 +1,232 @@
+"""Synthetic real-world-like traces (paper §8.2).
+
+Two workloads with the paper's structure, deterministic under a seed:
+
+  * conversation — Meta-AI-style system instruction forming a 3-level
+    shared prefix (lengths 46 / 348 / 2123 tokens, paper's Llama-3
+    tokenisation of the randomised language/country fields), followed by
+    burstgpt-like user prompts. All requests share level 1; language
+    groups share level 2; country groups share level 3.
+  * toolagent — tool/agent workloads with task-specific system prompts
+    (mooncake-style, overall KV hit rate ~59%): N tools, each with its own
+    800–2000-token prompt; sessions reuse a tool's prompt plus a shorter
+    per-session template.
+
+Tokens are synthetic ids (deterministic per prefix node) so the radix
+cache and the pack scheduler see exactly the sharing structure the paper
+exploits.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class TraceRequest:
+    arrival: float  # seconds from trace start
+    tokens: List[int]
+    max_new_tokens: int
+    prefix_levels: tuple = ()  # ids of the shared-prefix path (diagnostics)
+
+
+def _toks(rng: np.random.Generator, n: int, vocab: int) -> List[int]:
+    return (rng.integers(3, vocab - 1, n)).tolist()
+
+
+def conversation_trace(
+    num_requests: int = 64,
+    rate: float = 5.0,
+    vocab: int = 32000,
+    num_languages: int = 4,
+    num_countries: int = 4,
+    prefix_lens=(46, 348, 2123),
+    prompt_mean: int = 128,
+    output_mean: int = 64,
+    seed: int = 0,
+) -> List[TraceRequest]:
+    rng = np.random.default_rng(seed)
+    base = _toks(np.random.default_rng(seed + 1), prefix_lens[0], vocab)
+    langs = [
+        _toks(np.random.default_rng(seed + 10 + i), prefix_lens[1], vocab)
+        for i in range(num_languages)
+    ]
+    countries = [
+        [
+            _toks(np.random.default_rng(seed + 100 + i * 37 + j), prefix_lens[2], vocab)
+            for j in range(num_countries)
+        ]
+        for i in range(num_languages)
+    ]
+    out, t = [], 0.0
+    for _ in range(num_requests):
+        t += rng.exponential(1.0 / rate)
+        li = int(rng.integers(num_languages))
+        ci = int(rng.integers(num_countries))
+        prompt = max(8, int(rng.lognormal(np.log(prompt_mean), 0.6)))
+        new = max(4, int(rng.exponential(output_mean)))
+        toks = base + langs[li] + countries[li][ci] + _toks(rng, prompt, vocab)
+        out.append(TraceRequest(t, toks, new, prefix_levels=(0, li, ci)))
+    return out
+
+
+def toolagent_trace(
+    num_requests: int = 64,
+    rate: float = 8.0,
+    vocab: int = 32000,
+    num_tools: int = 8,
+    tool_prompt_range=(800, 2000),
+    session_template: int = 96,
+    prompt_mean: int = 96,
+    output_mean: int = 48,
+    sessions_per_tool: int = 4,
+    seed: int = 0,
+) -> List[TraceRequest]:
+    rng = np.random.default_rng(seed)
+    tools = []
+    for i in range(num_tools):
+        r = np.random.default_rng(seed + 1000 + i)
+        n = int(r.integers(*tool_prompt_range))
+        tools.append(_toks(r, n, vocab))
+    templates = [
+        [
+            _toks(np.random.default_rng(seed + 5000 + i * 97 + j), session_template, vocab)
+            for j in range(sessions_per_tool)
+        ]
+        for i in range(num_tools)
+    ]
+    out, t = [], 0.0
+    # zipf-ish tool popularity (a few hot tools, like real agent traffic)
+    pop = 1.0 / (np.arange(num_tools) + 1.0)
+    pop /= pop.sum()
+    for _ in range(num_requests):
+        t += rng.exponential(1.0 / rate)
+        ti = int(rng.choice(num_tools, p=pop))
+        si = int(rng.integers(sessions_per_tool))
+        prompt = max(8, int(rng.lognormal(np.log(prompt_mean), 0.7)))
+        new = max(4, int(rng.exponential(output_mean)))
+        toks = tools[ti] + templates[ti][si] + _toks(rng, prompt, vocab)
+        out.append(TraceRequest(t, toks, new, prefix_levels=(ti, si)))
+    return out
+
+
+def trace_to_decode_batch(
+    reqs: List[TraceRequest],
+    page_size: int = 16,
+    decode_pos: float = 0.5,
+) -> tuple:
+    """Snapshot a trace as one decode batch (block tables + kv lens):
+    every request is mid-generation at `decode_pos` of its output.
+    Shared prefixes map to shared physical pages (radix-style, full pages
+    only). Returns (block_tables [B, maxp], kv_lens [B], num_pages)."""
+    page_of = {}  # prefix-token-tuple -> physical page
+    next_page = [0]
+
+    def pages_for(tokens: List[int]) -> List[int]:
+        pages = []
+        for i in range(0, len(tokens) - len(tokens) % page_size, page_size):
+            key = tuple(tokens[: i + page_size])
+            if key not in page_of:
+                page_of[key] = next_page[0]
+                next_page[0] += 1
+            pages.append(page_of[key])
+        if len(tokens) % page_size:
+            pages.append(next_page[0])  # private partial page
+            next_page[0] += 1
+        return pages
+
+    bts, lens = [], []
+    for r in reqs:
+        done = max(1, int(r.max_new_tokens * decode_pos))
+        toks = r.tokens + [7] * done  # generated tokens are private
+        lens.append(len(toks))
+        bts.append(pages_for(toks))
+    maxp = max(len(b) for b in bts)
+    bt = -np.ones((len(reqs), maxp), np.int32)
+    for i, b in enumerate(bts):
+        bt[i, : len(b)] = b
+    return bt, np.asarray(lens, np.int64), next_page[0]
+
+
+# Paper §8.3 synthetic decode-batch configurations (Fig. 10): (B, L) where
+# B = prefix-tree level widths (last = batch size), L = per-level KV tokens.
+FIG10_CONFIGS = [
+    ((1, 4), (1024, 1024)),            # 1
+    ((1, 8), (1024, 1024)),            # 2
+    ((1, 16), (1024, 1024)),           # 3
+    ((1, 32), (1024, 1024)),           # 4
+    ((1, 64), (1024, 1024)),           # 5
+    ((1, 4, 16), (128, 256, 1024)),    # 6
+    ((1, 4, 32), (128, 256, 1024)),    # 7
+    ((1, 4, 64), (128, 256, 1024)),    # 8
+    ((1, 8, 64), (512, 512, 512)),     # 9
+    ((1, 2, 8, 64), (128, 128, 256, 512)),  # 10
+    ((1, 16), (4096, 1024)),           # 11
+    ((1, 32), (4096, 512)),            # 12
+    ((1, 64), (2048, 2048)),           # 13
+    ((2, 16), (2048, 1024)),           # 14  multiple first-level prefixes
+    ((4, 32), (1024, 1024)),           # 15
+    ((4, 64), (2048, 512)),            # 16
+    ((1, 4, 16, 64), (2048, 512, 256, 256)),  # 17
+    ((8, 64), (1024, 256)),            # 18
+    ((1,), (0,)),                      # 19: no sharing (handled specially)
+    ((1,), (0,)),                      # 20: no sharing, larger
+]
+
+
+def synthetic_decode_batch(B, L, page_size: int = 16, no_share_batch: int = 0,
+                           no_share_len: int = 1024):
+    """Builds (block_tables, kv_lens) for one Fig. 10 (B, L) config.
+    B=(b1, b2, ..., batch) level widths; L = per-level token lengths.
+    For configs 19-20 pass no_share_batch>0: independent queries."""
+    if no_share_batch:
+        batch = no_share_batch
+        pages_per = -(-no_share_len // page_size)
+        bt = np.arange(batch * pages_per, dtype=np.int32).reshape(batch, pages_per)
+        kv = np.full(batch, no_share_len, np.int64)
+        return bt, kv
+
+    assert len(B) == len(L)
+    next_page = [0]
+
+    def fresh(n_tokens):
+        n = -(-n_tokens // page_size)
+        out = list(range(next_page[0], next_page[0] + n))
+        next_page[0] += n
+        return out
+
+    # build level by level: nodes at level i are evenly divided among
+    # parents at level i-1
+    level_nodes = []  # list of (pages, parent_index)
+    for li, width in enumerate(B):
+        nodes = []
+        for j in range(width):
+            parent = j * len(level_nodes[li - 1]) // width if li else -1
+            # level tokens: all but last level are SHARED page-aligned runs
+            n_tok = L[li] if li < len(B) - 1 else L[li]
+            nodes.append((fresh(n_tok), parent))
+        level_nodes.append(nodes)
+
+    batch = B[-1]
+    bts, lens = [], []
+    for j, (pages, parent) in enumerate(level_nodes[-1]):
+        chain = list(pages)
+        li = len(B) - 1
+        pj = parent
+        toks = L[-1]
+        while li > 0:
+            ppages, pparent = level_nodes[li - 1][pj]
+            chain = list(ppages) + chain
+            toks += L[li - 1]
+            pj = pparent
+            li -= 1
+        bts.append(chain)
+        lens.append(toks)
+    maxp = max(len(b) for b in bts)
+    bt = -np.ones((batch, maxp), np.int32)
+    for i, b in enumerate(bts):
+        bt[i, : len(b)] = b
+    return bt, np.asarray(lens, np.int64)

@@ -1,0 +1,81 @@
+"""Tests for the explicit split-KV decode (shard_map) and gradient
+compression. Multi-device parts run in subprocesses (device-count
+isolation, as in test_distributed.py)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.compression import (
+    compress, compress_with_feedback, decompress, init_residuals,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_compress_roundtrip_accuracy():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(128, 64)) * 0.01, jnp.float32)
+    c = compress(g)
+    assert c.q.dtype == jnp.int8
+    err = float(jnp.max(jnp.abs(decompress(c) - g)))
+    assert err <= float(c.scale) / 2 + 1e-8  # half-step quantisation bound
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Sum of compressed gradients converges to sum of true gradients."""
+    rng = np.random.default_rng(1)
+    grads = [jnp.asarray(rng.normal(size=(64,)) * 0.1, jnp.float32)
+             for _ in range(50)]
+    resid = jnp.zeros((64,), jnp.float32)
+    acc_true = jnp.zeros((64,))
+    acc_comp = jnp.zeros((64,))
+    for g in grads:
+        corrected = g + resid
+        c = compress(corrected)
+        resid = corrected - decompress(c)
+        acc_true += g
+        acc_comp += decompress(c)
+    # residual feedback keeps the accumulated error bounded by one step's
+    # quantisation error, not 50 steps' worth
+    err = float(jnp.max(jnp.abs(acc_true - acc_comp)))
+    single_step_bound = max(float(compress(g).scale) for g in grads)
+    assert err <= 2 * single_step_bound, (err, single_step_bound)
+
+
+def test_split_kv_decode_matches_oracle_subprocess():
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import split_kv_decode_attention
+        from repro.kernels.ref import dense_attention_ref
+        from repro.launch.mesh import make_mesh
+
+        rng = np.random.default_rng(0)
+        B, L, Hq, Hkv, d = 3, 64, 8, 4, 32
+        q = jnp.asarray(rng.normal(size=(B, Hq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, L, Hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, L, Hkv, d)), jnp.float32)
+        kv_lens = jnp.asarray([50, 64, 17])
+        mesh = make_mesh(8, 1)
+        with mesh:
+            out = split_kv_decode_attention(q, k, v, kv_lens, mesh, axis="data")
+        ref = dense_attention_ref(q[:, None], k, v, causal=False,
+                                  kv_lens=kv_lens)[:, 0]
+        err = float(jnp.max(jnp.abs(out - ref)))
+        print("ERR", err)
+        assert err < 2e-5, err
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=560, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ERR" in out.stdout

@@ -1,0 +1,146 @@
+"""Hypothesis property tests for the pack scheduler's invariants.
+
+The central invariant (DESIGN.md §4): for ANY valid block table, every
+packing strategy produces a partition where each (query, kv-token) pair is
+covered exactly once — so merge reproduces full attention regardless of the
+profit model's choices. Plus: byte-model sanity (PAT never loads more KV
+than query-centric; never less than the theoretical minimum).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pack_scheduler import (
+    plan_kv_bytes,
+    schedule,
+    theoretical_min_kv_bytes,
+)
+from repro.core.prefix_tree import build_forest
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import build_work_plan
+
+PAGE = 16
+
+
+@st.composite
+def block_tables(draw):
+    """Random forest-structured batches with valid page sharing."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    B = draw(st.integers(1, 12))
+    n_roots = draw(st.integers(1, 3))
+    rows = []
+    next_page = [0]
+
+    def fresh(n):
+        out = list(range(next_page[0], next_page[0] + n))
+        next_page[0] += n
+        return out
+
+    # build a random prefix forest by sampling shared segments
+    roots = [fresh(draw(st.integers(1, 6))) for _ in range(n_roots)]
+    mids = {}
+    for b in range(B):
+        r = draw(st.integers(0, n_roots - 1))
+        pages = list(roots[r])
+        if draw(st.booleans()):
+            mid_key = (r, draw(st.integers(0, 1)))
+            if mid_key not in mids:
+                mids[mid_key] = fresh(draw(st.integers(1, 4)))
+            pages += mids[mid_key]
+        pages += fresh(draw(st.integers(1, 4)))
+        rows.append(pages)
+    maxp = max(len(r) for r in rows)
+    bt = -np.ones((B, maxp), np.int32)
+    kv = np.zeros(B, np.int64)
+    for b, r in enumerate(rows):
+        bt[b, : len(r)] = r
+        kv[b] = (len(r) - 1) * PAGE + int(rng.integers(1, PAGE + 1))
+    return bt, kv
+
+
+@given(block_tables(), st.sampled_from(["pat", "query_centric", "relay", "pat_naive", "pat_compute"]))
+@settings(max_examples=80, deadline=None)
+def test_exact_coverage(tbl, strategy):
+    bt, kv = tbl
+    plan = schedule(bt, kv, PAGE, strategy=strategy, rows_per_query=4, max_query_rows=64)
+    # token-count coverage
+    cov = plan.coverage()
+    assert cov == [int(x) for x in kv]
+    # page-level exactness: each (query, page) covered exactly once
+    seen = {}
+    for it in plan.items:
+        for q in it.query_ids:
+            for p in it.pages:
+                key = (q, p)
+                seen[key] = seen.get(key, 0) + 1
+    for b in range(bt.shape[0]):
+        n_pages = -(-int(kv[b]) // PAGE)
+        for j in range(n_pages):
+            assert seen.get((b, int(bt[b, j])), 0) == 1
+
+
+@given(block_tables())
+@settings(max_examples=50, deadline=None)
+def test_bytes_ordering(tbl):
+    """theoretical_min <= PAT <= query_centric KV bytes."""
+    bt, kv = tbl
+    d, hkv = 128, 8
+    pat = schedule(bt, kv, PAGE, strategy="pat", split_long_kv=False)
+    qc = schedule(bt, kv, PAGE, strategy="query_centric")
+    mn = theoretical_min_kv_bytes(bt, kv, PAGE, d, hkv)
+    b_pat = plan_kv_bytes(pat, d, hkv)
+    b_qc = plan_kv_bytes(qc, d, hkv)
+    assert mn <= b_pat <= b_qc
+
+
+@given(block_tables())
+@settings(max_examples=30, deadline=None)
+def test_work_plan_merge_table_complete(tbl):
+    """Every (query, head) has >= 1 partial row; all row ids are in range."""
+    bt, kv = tbl
+    Hq, Hkv = 8, 4
+    sel = TileSelector(head_dim=64, page_size=PAGE, q_bytes=4, kv_bytes=4)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv)
+    pr = wp.part_rows
+    assert (pr[:, :, 0] >= 0).all(), "each query-head needs >= 1 partial"
+    assert pr.max() < wp.total_partial_rows
+
+
+@given(block_tables())
+@settings(max_examples=30, deadline=None)
+def test_forest_structure(tbl):
+    bt, kv = tbl
+    forest = build_forest(bt, kv, PAGE)
+    # every query appears in exactly one root's subtree
+    seen = []
+    for root in forest:
+        seen += root.query_ids
+    assert sorted(seen) == list(range(bt.shape[0]))
+
+    def check(node):
+        if not node.is_leaf:
+            child_qs = sorted(sum((c.query_ids for c in node.children), []))
+            assert child_qs == sorted(node.query_ids)
+            assert node.num_tokens == len(node.pages) * PAGE
+        for c in node.children:
+            check(c)
+
+    for root in forest:
+        check(root)
+
+
+def test_long_kv_split_caps_item_length():
+    bt = np.arange(64 * 4, dtype=np.int32).reshape(4, 64)
+    kv = np.array([64 * PAGE, 4 * PAGE, 4 * PAGE, 2 * PAGE], np.int64)
+    bt2 = -np.ones((4, 64), np.int32)
+    for b, n in enumerate([64, 4, 4, 2]):
+        bt2[b, :n] = bt[b, :n]
+    plan = schedule(bt2, kv, PAGE, strategy="pat", split_long_kv=True)
+    lens = [it.num_tokens for it in plan.items]
+    # the 1024-token item must have been split near the batch mean
+    assert max(lens) < 64 * PAGE
+    cov = plan.coverage()
+    assert cov == [int(x) for x in kv]

@@ -1,0 +1,64 @@
+"""The §Perf optimization levers must be numerically exact rewrites."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import dense_attention_chunked, dense_attention_ref
+from repro.models import attention as ATT
+from repro.models import moe as MOE
+from repro.configs import get_config
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_chunked_attention_exact(causal, chunk):
+    rng = np.random.default_rng(chunk)
+    B, S, L, Hq, Hkv, d = 2, 64, 128, 8, 4, 32
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, L, Hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, Hkv, d)), jnp.float32)
+    lens = jnp.asarray([100, 128])
+    a = dense_attention_ref(q, k, v, causal=causal, kv_lens=lens)
+    b = dense_attention_chunked(q, k, v, causal=causal, kv_lens=lens, kv_chunk=chunk)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+def test_cache_update_algos_agree():
+    rng = np.random.default_rng(0)
+    cache = jnp.asarray(rng.normal(size=(3, 16, 2, 4)), jnp.float32)
+    new = jnp.asarray(rng.normal(size=(3, 1, 2, 4)), jnp.float32)
+    pos = jnp.array([2, 0, 15], jnp.int32)
+    old = ATT.CACHE_UPDATE_ALGO
+    try:
+        ATT.CACHE_UPDATE_ALGO = "select"
+        a = ATT._cache_update(cache, new, pos)
+        ATT.CACHE_UPDATE_ALGO = "scatter"
+        b = ATT._cache_update(cache, new, pos)
+    finally:
+        ATT.CACHE_UPDATE_ALGO = old
+    np.testing.assert_allclose(a, b)
+
+
+def test_moe_dispatch_algos_agree():
+    cfg = get_config("deepseek-v2-236b").reduced(dtype="float32")
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)) * 0.1
+    old = MOE.DISPATCH_ALGO
+    try:
+        MOE.DISPATCH_ALGO = "sort"
+        a = MOE.moe_apply(p, cfg, x)
+        MOE.DISPATCH_ALGO = "cumsum"
+        b = MOE.moe_apply(p, cfg, x)
+    finally:
+        MOE.DISPATCH_ALGO = old
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_positions_sort_equals_cumsum():
+    rng = np.random.default_rng(3)
+    flat = jnp.asarray(rng.integers(0, 7, size=200), jnp.int32)
+    a = MOE._positions_cumsum(flat, 7)
+    b = MOE._positions_sort(flat, 7)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

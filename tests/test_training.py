@@ -1,0 +1,117 @@
+"""Training-substrate tests: optimisation progress, checkpoint fault
+tolerance (atomic write / resume), data determinism, optimizer math."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, SyntheticLMData
+from repro.training.optimizer import (
+    OptimizerConfig, adamw_update, init_opt_state, lr_schedule,
+)
+from repro.training.train_loop import TrainConfig, train_loop
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_adamw_minimises_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    cfg = OptimizerConfig(learning_rate=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=200, min_lr_frac=1.0)
+    state = init_opt_state(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    assert float(lr_schedule(cfg, jnp.array(0))) == 0.0
+    assert float(lr_schedule(cfg, jnp.array(10))) == pytest.approx(1.0, rel=0.01)
+    assert float(lr_schedule(cfg, jnp.array(100))) == pytest.approx(0.1, rel=0.05)
+
+
+def test_loss_decreases_small_model():
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(KEY, cfg)
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, 64, 4))
+    tcfg = TrainConfig(remat=False,
+                       optimizer=OptimizerConfig(learning_rate=1e-3,
+                                                 warmup_steps=2, total_steps=30))
+    params, _, hist = train_loop(cfg, tcfg, iter(data), 30, params, log_every=5)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.1
+
+
+def test_data_pipeline_determinism_and_sharding():
+    dc = DataConfig(vocab_size=1000, seq_len=32, global_batch=8)
+    full = SyntheticLMData(dc, rank=0, num_ranks=1)
+    shard0 = SyntheticLMData(dc, rank=0, num_ranks=2)
+    shard1 = SyntheticLMData(dc, rank=1, num_ranks=2)
+    t_full, _ = full.batch_at(5)
+    t0, _ = shard0.batch_at(5)
+    t1, _ = shard1.batch_at(5)
+    np.testing.assert_array_equal(np.concatenate([t0, t1]), t_full)
+    # reproducible across instances (elastic restart / straggler handover)
+    t0b, _ = SyntheticLMData(dc, rank=0, num_ranks=2).batch_at(5)
+    np.testing.assert_array_equal(t0, t0b)
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(KEY, cfg)
+    ocfg = OptimizerConfig()
+    opt = init_opt_state(params, ocfg)
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, params, opt, extra={"note": "x"})
+    assert ckpt.latest_checkpoint(d).endswith("ckpt_00000007")
+    p2, o2, meta = ckpt.restore_latest(d, params, opt)
+    assert meta["step"] == 7 and meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # newer checkpoint wins; gc keeps the latest
+    ckpt.save(d, 9, params, opt)
+    assert ckpt.restore_latest(d, params)[2]["step"] == 9
+
+
+def test_async_checkpointer(tmp_path):
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(KEY, cfg)
+    d = str(tmp_path / "ck")
+    w = ckpt.AsyncCheckpointer(d, keep=2)
+    for s in (1, 2, 3):
+        w.save_async(s, params)
+    w.wait()
+    names = sorted(x for x in os.listdir(d) if x.startswith("ckpt_"))
+    assert names == ["ckpt_00000002", "ckpt_00000003"]  # gc keeps 2
+    assert ckpt.restore_latest(d, params)[2]["step"] == 3
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(KEY, cfg)
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, 32, 4))
+    toks, labels = data.batch_at(0)
+    from repro.training.train_loop import make_train_step
+
+    ocfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=0)
+    s1 = make_train_step(cfg, TrainConfig(remat=False, microbatches=1,
+                                          optimizer=ocfg))
+    s2 = make_train_step(cfg, TrainConfig(remat=False, microbatches=2,
+                                          optimizer=ocfg))
+    o1 = init_opt_state(params, ocfg)
+    p1, _, m1 = s1(params, o1, jnp.asarray(toks), jnp.asarray(labels))
+    o2 = init_opt_state(params, ocfg)
+    p2, _, m2 = s2(params, o2, jnp.asarray(toks), jnp.asarray(labels))
+    # same data -> same loss (mean) and near-identical updates
+    assert float(abs(m1["loss"] - m2["loss"])) < 5e-3
+    diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in
+             zip(jax.tree.leaves(p1), jax.tree.leaves(p2))]
+    assert max(diffs) < 5e-3

@@ -1,0 +1,104 @@
+"""Tests for the roofline substrate (HLO collective parser, term math) and
+the synthetic workload generators."""
+
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.utils.hlo import collective_bytes, _shape_bytes
+from repro.utils.roofline import RooflineTerms, model_flops
+from repro.workloads.traces import (
+    FIG10_CONFIGS,
+    conversation_trace,
+    synthetic_decode_batch,
+    toolagent_trace,
+    trace_to_decode_batch,
+)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]") == 16 * 128 * 4
+    assert _shape_bytes("bf16[2,4,8]") == 2 * 4 * 8 * 2
+    assert _shape_bytes("(f32[8], bf16[4])") == 8 * 4 + 4 * 2
+    assert _shape_bytes("u8[100]") == 100
+
+
+def test_collective_bytes_parses_hlo():
+    hlo = """
+  %ag = f32[32,128]{1,0} all-gather(f32[2,128]{1,0} %x), replica_groups={}
+  %ar = bf16[64]{0} all-reduce(bf16[64]{0} %y), to_apply=%sum
+  %rs = f32[4,8]{1,0} reduce-scatter(f32[64,8]{1,0} %z), dimensions={0}
+  %cp = f32[16]{0} collective-permute(f32[16]{0} %w)
+"""
+    total, kinds = collective_bytes(hlo)
+    assert kinds["all-gather"] == 32 * 128 * 4
+    assert kinds["all-reduce"] == 2 * 64 * 2
+    assert kinds["reduce-scatter"] == 64 * 8 * 4  # operand side
+    assert kinds["collective-permute"] == 16 * 4
+    assert total == sum(kinds.values())
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(
+        arch="x", shape="train_4k", mesh="16x16",
+        flops_per_device=197e12,  # exactly 1 second of compute
+        bytes_per_device=819e9,  # exactly 1 second of HBM
+        coll_bytes_per_device=25e9,  # 0.5 s of ICI
+        model_flops_total=197e12 * 256 * 0.5,  # half the compute is useful
+        chips=256,
+    )
+    assert abs(t.t_comp - 1.0) < 1e-9
+    assert abs(t.t_mem - 1.0) < 1e-9
+    assert abs(t.t_coll - 0.5) < 1e-9
+    assert t.dominant in ("compute", "memory")
+    assert abs(t.useful_compute_ratio - 0.5) < 1e-9
+    assert abs(t.roofline_fraction - 0.5) < 1e-6
+
+
+def test_model_flops_kinds():
+    cfg = get_config("qwen3-32b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    de = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr == 6.0 * cfg.active_params() * 4096 * 256
+    assert pf == 2.0 * cfg.active_params() * 32768 * 32
+    assert de > 2.0 * cfg.active_params() * 128  # includes KV-read flops
+
+
+def test_traces_deterministic_and_shared():
+    a = conversation_trace(num_requests=8, seed=3)
+    b = conversation_trace(num_requests=8, seed=3)
+    assert [r.tokens for r in a] == [r.tokens for r in b]
+    # all requests share the level-1 prefix
+    lvl1 = a[0].tokens[:46]
+    assert all(r.tokens[:46] == lvl1 for r in a)
+
+    t = toolagent_trace(num_requests=16, seed=1, num_tools=2)
+    groups = {}
+    for r in t:
+        groups.setdefault(r.prefix_levels[0], []).append(r)
+    for tid, rs in groups.items():
+        p0 = rs[0].tokens[:64]
+        assert all(r.tokens[:64] == p0 for r in rs)
+
+
+def test_trace_to_decode_batch_shares_pages():
+    reqs = conversation_trace(num_requests=8, seed=3, num_languages=1,
+                              num_countries=1)
+    bt, kv, npages = trace_to_decode_batch(reqs, page_size=16)
+    # every request shares the full 3-level prefix pages
+    shared = (46 + 348 + 2123) // 16
+    first = bt[0, :shared]
+    assert all((bt[i, :shared] == first).all() for i in range(len(reqs)))
+    # page ids are dense and valid
+    assert bt.max() < npages
+
+
+def test_fig10_configs_valid():
+    for i, (B, L) in enumerate(FIG10_CONFIGS[:18], 1):
+        bt, kv = synthetic_decode_batch(B, L, 16)
+        assert bt.shape[0] == B[-1], i
+        assert (kv == sum(L)).all(), i
+        # rows are valid page lists
+        for b in range(bt.shape[0]):
+            n = -(-int(kv[b]) // 16)
+            assert (bt[b, :n] >= 0).all()
