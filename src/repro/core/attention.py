@@ -4,6 +4,9 @@ Ties together the pack scheduler (host, cached/lazy), the work-plan
 builder, and the forward/merge kernels. One backend instance serves all
 layers of a model (they share the block table, so they share the plan —
 the paper's lazy update amortises scheduling across layers and steps).
+Plans served by the cache are device-resident and dispatch through the
+jit-cached executable in `kernels.ops`, so the per-layer per-step host
+work is one shape-cached jit call, not a re-upload + re-trace.
 """
 
 from __future__ import annotations
@@ -30,6 +33,11 @@ class PatConfig:
     split_long_kv: bool = True
     alpha: float = 4.0
     interpret: bool = True  # CPU container: Pallas runs in interpret mode
+    # Dispatch of the forward+merge: "auto" runs the jit-cached
+    # device-resident path for plans served by the PlanCache (the engine hot
+    # path), "jit"/"eager" force either (see kernels.ops).
+    dispatch: str = "auto"
+    bucket: bool = True  # pad plan shapes to power-of-two jit buckets
 
 
 class PatAttentionBackend:
@@ -71,10 +79,28 @@ class PatAttentionBackend:
             strategy=self.config.strategy,
             alpha=self.config.alpha,
             split_long_kv=self.config.split_long_kv,
+            to_device=self.config.dispatch != "eager",
+            bucket=self.config.bucket,
         )
 
     def plan(self, block_tables: np.ndarray, kv_lens: np.ndarray) -> WorkPlan:
         return self.cache.get(block_tables, kv_lens, self.config.page_size)
+
+    def dispatch_stats(self) -> dict:
+        """Plan-cache and upload counters for THIS backend, plus the
+        process-global jit dispatch counters from `kernels.ops` (shared by
+        every backend in the process — diff them around a measured region,
+        or `ops.reset_dispatch_stats()`, to attribute traces)."""
+        st = self.cache.stats
+        return {
+            "plan_hits": st.hits,
+            "plan_misses": st.misses,
+            "plan_refreshes": st.refreshes,
+            "full_uploads": st.full_uploads,
+            "refresh_uploads": st.refresh_uploads,
+            "arrays_uploaded": st.arrays_uploaded,
+            "process": ops.dispatch_stats(),
+        }
 
     def attend(
         self,
@@ -94,6 +120,7 @@ class PatAttentionBackend:
             merge_impl=self.config.merge_impl,
             v_head_dim=self.v_head_dim,
             interpret=self.config.interpret,
+            dispatch=self.config.dispatch,
         )
 
     def __call__(self, q, k_pages, v_pages, block_tables, kv_lens, scale=None):

@@ -1,4 +1,4 @@
-"""Work-plan construction: pack plan -> device-ready arrays (paper §5-§7).
+"""Work-plan construction: pack plan -> device-resident arrays (paper §5-§7).
 
 Bridges the host-side pack scheduler and the Pallas forward/merge kernels.
 Items are grouped by their selected (m, n) tile configuration; each group
@@ -7,7 +7,8 @@ over per-item KV steps) — the TPU-native realisation of the paper's
 multi-stream forward: no inter-item padding steps, no tail bubbles
 (DESIGN.md §2).
 
-Arrays produced per tile group g (numpy; ops.py moves them to device):
+Arrays produced per tile group g (numpy, built with vectorised CSR
+construction so planning cost stays flat at production batch sizes):
 
   step_item   [S]        item index of each flattened KV step
   step_pages  [S, ppb]   physical page ids the step's DMA fetches
@@ -22,13 +23,26 @@ plus a global merge table:
 
   part_rows   [B, Hq, P] indices into the concatenated partial-output rows
                          (group-major, then ((t*Hkv + h)*m + r)); -1 = pad.
+
+Device residency (ISSUE 1 tentpole): a WorkPlan is uploaded to device ONCE
+per plan fingerprint via `WorkPlan.to_device()`, which also pads each
+group's (S, T) — and the merge table's P — up to power-of-two buckets
+(padded steps carry step_len=0 and are masked out by the kernels). The
+bucketed `DeviceWorkPlan` is what the jit-cached dispatch in `kernels.ops`
+consumes: stable bucket shapes mean the jitted forward+merge for a given
+(m, n, S_bucket, T_bucket, dk, dv) compiles once and is reused across
+decode steps and batches. `refresh_lengths` keeps the device copy fresh by
+re-uploading ONLY the two arrays the lazy update touches (`step_len`,
+`item_kv_len`); everything else stays resident.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pack_scheduler import PackPlan, WorkItem
@@ -61,6 +75,71 @@ class TileGroupPlan:
     item_step_begin: np.ndarray = None  # [T] first flattened step index
 
 
+# --- device-resident plan (uploaded once per fingerprint) -------------------
+
+# Counters for the transfer instrumentation used by the overhead benchmark
+# and the dispatch-cache regression test.
+_DEVICE_STATS = {
+    "full_uploads": 0,  # whole-plan uploads (once per fingerprint miss)
+    "refresh_uploads": 0,  # step_len/item_kv_len-only refresh uploads
+    "arrays_uploaded": 0,  # total host->device array transfers
+}
+
+
+def device_stats() -> dict:
+    return dict(_DEVICE_STATS)
+
+
+def reset_device_stats() -> None:
+    for k in _DEVICE_STATS:
+        _DEVICE_STATS[k] = 0
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+def _pad_rows(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    """Pads axis 0 of ``a`` up to length ``n`` with ``fill``."""
+    if a.shape[0] == n:
+        return a
+    pad = np.full((n - a.shape[0],) + a.shape[1:], fill, a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+def _pad_cols(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    if a.shape[1] == n:
+        return a
+    pad = np.full((a.shape[0], n - a.shape[1]) + a.shape[2:], fill, a.dtype)
+    return np.concatenate([a, pad], axis=1)
+
+
+@dataclass
+class DeviceGroupArrays:
+    """One tile group's plan arrays on device, padded to the shape bucket."""
+
+    kv_tile: int  # n
+    pages_per_block: int
+    step_item: jax.Array  # [S_bucket]
+    step_pages: jax.Array  # [S_bucket, ppb]
+    step_len: jax.Array  # [S_bucket] (refreshed by lazy update)
+    step_start: jax.Array  # [S_bucket]
+    step_end: jax.Array  # [S_bucket]
+    row_query: jax.Array  # [T_bucket, m]
+    row_group: jax.Array  # [T_bucket, m]
+    item_pages: jax.Array  # [T_bucket, maxp_bucket]
+    item_kv_len: jax.Array  # [T_bucket] (refreshed by lazy update)
+
+
+@dataclass
+class DeviceWorkPlan:
+    """Device-resident, bucket-padded realisation of a WorkPlan."""
+
+    groups: List[DeviceGroupArrays]
+    part_rows: jax.Array  # [B, Hq, P_bucket], row ids remapped to buckets
+    bucketed: bool
+
+
 @dataclass
 class WorkPlan:
     groups: List[TileGroupPlan]
@@ -72,6 +151,11 @@ class WorkPlan:
     strategy: str
     total_partial_rows: int
     meta: dict = field(default_factory=dict)
+    # populated lazily by to_device(); carried across refresh_lengths so the
+    # static arrays are uploaded exactly once per plan fingerprint
+    device: Optional[DeviceWorkPlan] = field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def num_items(self) -> int:
@@ -80,6 +164,89 @@ class WorkPlan:
     @property
     def num_steps(self) -> int:
         return sum(g.num_steps for g in self.groups)
+
+    def to_device(self, bucket: bool = True) -> DeviceWorkPlan:
+        """Uploads the plan's arrays to device, padding each group's
+        (S, T, max_pages) — and the merge table's P — to power-of-two
+        buckets. Idempotent: the upload happens once per WorkPlan; plans
+        produced by `refresh_lengths` inherit the resident arrays."""
+        if self.device is not None:
+            return self.device
+        Hkv = self.num_kv_heads
+        dgroups: List[DeviceGroupArrays] = []
+        old_bounds = [0]  # group boundaries in the unpadded partial-row space
+        shifts = []  # per group: new_base - old_base
+        new_base = 0
+        for g in self.groups:
+            m = g.row_query.shape[1]
+            S, T = g.num_steps, g.num_items
+            Sp = _next_pow2(S) if bucket else S
+            Tp = _next_pow2(T) if bucket else T
+            maxp = g.item_pages.shape[1]
+            maxpp = _next_pow2(maxp) if bucket else maxp
+            # Padded steps must target the LAST item's block, not item 0's:
+            # they carry step_len=0 (no compute, no flush), but on real TPU
+            # the output window is copied out whenever the block index
+            # changes — revisiting item 0 after its flush would clobber its
+            # partials with stale buffer contents. Revisiting the final
+            # block only re-emits values that are either just-flushed
+            # (Tp-1 == T-1) or never referenced by part_rows (padded item).
+            dgroups.append(
+                DeviceGroupArrays(
+                    kv_tile=g.tile.n,
+                    pages_per_block=g.pages_per_block,
+                    step_item=jnp.asarray(
+                        _pad_rows(g.step_item, Sp, fill=Tp - 1)
+                    ),
+                    step_pages=jnp.asarray(_pad_rows(g.step_pages, Sp)),
+                    step_len=jnp.asarray(_pad_rows(g.step_len, Sp)),
+                    step_start=jnp.asarray(_pad_rows(g.step_start, Sp)),
+                    step_end=jnp.asarray(_pad_rows(g.step_end, Sp)),
+                    row_query=jnp.asarray(_pad_rows(g.row_query, Tp, fill=-1)),
+                    row_group=jnp.asarray(_pad_rows(g.row_group, Tp)),
+                    item_pages=jnp.asarray(
+                        _pad_rows(_pad_cols(g.item_pages, maxpp), Tp)
+                    ),
+                    item_kv_len=jnp.asarray(_pad_rows(g.item_kv_len, Tp)),
+                )
+            )
+            shifts.append(new_base - old_bounds[-1])
+            old_bounds.append(old_bounds[-1] + T * Hkv * m)
+            new_base += Tp * Hkv * m
+
+        # remap merge-table row ids into the padded row space (padding only
+        # appends rows at each group's tail, so a per-group shift suffices)
+        pr = self.part_rows
+        if any(s != 0 for s in shifts):
+            bounds = np.asarray(old_bounds[:-1] + [old_bounds[-1] + 1])
+            gid = np.searchsorted(bounds, np.maximum(pr, 0), side="right") - 1
+            shift = np.asarray(shifts, np.int64)[gid]
+            pr = np.where(pr >= 0, pr + shift, -1).astype(np.int32)
+        P = pr.shape[2]
+        Pp = _next_pow2(P) if bucket else P
+        if Pp != P:
+            pr = np.concatenate(
+                [pr, np.full(pr.shape[:2] + (Pp - P,), -1, pr.dtype)], axis=2
+            )
+        self.device = DeviceWorkPlan(
+            groups=dgroups, part_rows=jnp.asarray(pr), bucketed=bucket
+        )
+        _DEVICE_STATS["full_uploads"] += 1
+        # 9 plan arrays per group + the shared merge table
+        _DEVICE_STATS["arrays_uploaded"] += 9 * len(dgroups) + 1
+        return self.device
+
+
+def _csr_expand(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """For per-row element counts, returns (row_of_element, index_within_row)
+    for the flattened element list — the vectorised backbone of the CSR
+    constructions below."""
+    counts = np.asarray(counts, np.int64)
+    total = int(counts.sum())
+    rows = np.repeat(np.arange(len(counts), dtype=np.int64), counts)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    within = np.arange(total, dtype=np.int64) - starts[rows]
+    return rows, within
 
 
 def build_work_plan(
@@ -90,21 +257,15 @@ def build_work_plan(
     kv_lens: Optional[np.ndarray] = None,
     block_tables: Optional[np.ndarray] = None,
 ) -> WorkPlan:
-    """Lays out a pack plan as per-tile-group CSR arrays + the merge table."""
+    """Lays out a pack plan as per-tile-group CSR arrays + the merge table.
+
+    The per-group step/CSR construction and the merge `part_rows` table are
+    fully vectorised numpy (no O(batch x pages) python loops), so planning
+    cost stays flat at production batch sizes."""
     assert num_q_heads % num_kv_heads == 0
     group_size = num_q_heads // num_kv_heads
     page = plan.page_size
-
-    # page -> index within each query's page list (for tail-item offsets)
-    page_pos = {}
-    if block_tables is not None:
-        for b in range(block_tables.shape[0]):
-            row = {}
-            for j, p in enumerate(block_tables[b]):
-                if p < 0:
-                    break
-                row[int(p)] = j
-            page_pos[b] = row
+    Hkv = num_kv_heads
 
     # --- assign a tile config to every item (constant-time per item) -------
     buckets: dict = {}
@@ -114,87 +275,103 @@ def build_work_plan(
         buckets.setdefault((cfg.m, cfg.n), []).append(it)
 
     groups: List[TileGroupPlan] = []
-    # merge bookkeeping: per (query, q_head) a list of global partial-row ids
-    parts: List[List[List[int]]] = [
-        [[] for _ in range(num_q_heads)] for _ in range(plan.batch_size)
-    ]
+    # merge bookkeeping, accumulated flat across groups then scattered once
+    merge_q: List[np.ndarray] = []
+    merge_head: List[np.ndarray] = []
+    merge_rid: List[np.ndarray] = []
     row_base = 0  # global offset into the concatenated partial rows
 
     for (m, n), items in sorted(buckets.items()):
         ppb = n // page
         T = len(items)
-        steps_per_item = [max(1, -(-len(it.pages) // ppb)) for it in items]
-        S = int(sum(steps_per_item))
+        num_tokens = np.fromiter((it.num_tokens for it in items), np.int64, T)
+        npages = np.fromiter((len(it.pages) for it in items), np.int64, T)
+        nq = np.fromiter((it.num_queries for it in items), np.int64, T)
+        steps_per_item = np.maximum(1, -(-npages // ppb))
+        S = int(steps_per_item.sum())
 
-        step_item = np.zeros(S, np.int32)
-        step_pages = np.zeros((S, ppb), np.int32)
-        step_len = np.zeros(S, np.int32)
-        step_start = np.zeros(S, np.int32)
-        step_end = np.zeros(S, np.int32)
+        # flattened ragged step list
+        step_item64, j_in = _csr_expand(steps_per_item)
+        item_step_begin = np.zeros(T, np.int64)
+        item_step_begin[1:] = np.cumsum(steps_per_item)[:-1]
+        step_start = (j_in == 0).astype(np.int32)
+        step_end = (j_in == steps_per_item[step_item64] - 1).astype(np.int32)
+        step_len = np.clip(num_tokens[step_item64] - j_in * n, 0, n).astype(
+            np.int32
+        )
+
+        # item -> page table (also feeds the XLA fallback path)
+        total_pages = int(npages.sum())
+        maxp = int(max(1, npages.max() if T else 1))
+        item_pages = np.zeros((T, maxp), np.int32)
+        if total_pages:
+            all_pages = np.concatenate(
+                [np.asarray(it.pages, np.int64) for it in items if it.pages]
+            )
+            prow, pcol = _csr_expand(npages)
+            item_pages[prow, pcol] = all_pages
+        item_num_pages = npages.astype(np.int32)
+
+        # per-step page blocks, gathered from the item page table
+        col = j_in[:, None] * ppb + np.arange(ppb)[None, :]  # [S, ppb]
+        in_range = col < npages[step_item64][:, None]
+        gathered = item_pages[step_item64[:, None], np.minimum(col, maxp - 1)]
+        step_pages = np.where(in_range, gathered, 0).astype(np.int32)
+
+        # packed Q rows: row (t, qi*G + g) holds query query_ids[qi], head g
+        NQ = int(nq.sum())
+        all_q = np.concatenate(
+            [np.asarray(it.query_ids, np.int64) for it in items]
+        )
+        pair_item, qi_within = _csr_expand(nq)
         row_query = np.full((T, m), -1, np.int32)
         row_group = np.zeros((T, m), np.int32)
-        item_kv_len = np.zeros(T, np.int32)
-        max_item_pages = max(1, max(len(it.pages) for it in items))
-        item_pages = np.zeros((T, max_item_pages), np.int32)
-        item_num_pages = np.zeros(T, np.int32)
+        rrow = np.repeat(pair_item, group_size)
+        rcol = np.repeat(qi_within, group_size) * group_size + np.tile(
+            np.arange(group_size), NQ
+        )
+        row_query[rrow, rcol] = np.repeat(all_q, group_size)
+        row_group[rrow, rcol] = np.tile(np.arange(group_size), NQ)
+        item_kv_len = num_tokens.astype(np.int32)
+
+        # lazy-update tail metadata: single-query items covering the query's
+        # growing region (partial final page and/or pre-allocated pages)
         item_tail_query = np.full(T, -1, np.int32)
         item_tok_offset = np.zeros(T, np.int32)
-        item_step_begin = np.zeros(T, np.int32)
-
-        s = 0
-        for t, it in enumerate(items):
-            item_kv_len[t] = it.num_tokens
-            item_num_pages[t] = len(it.pages)
-            if (
-                kv_lens is not None
-                and it.num_queries == 1
-                and it.num_tokens < len(it.pages) * page
-            ):
-                # Single-query item covering the query's growing region
-                # (partial final page and/or pre-allocated pages): its
-                # valid length tracks the query's kv_len.
-                q0 = it.query_ids[0]
-                if block_tables is not None and it.pages:
-                    item_tok_offset[t] = page_pos[q0][it.pages[0]] * page
+        q_starts = np.zeros(T, np.int64)
+        q_starts[1:] = np.cumsum(nq)[:-1]
+        first_q = all_q[q_starts]  # [T]
+        if kv_lens is not None:
+            kv_arr = np.asarray(kv_lens, np.int64)
+            tail = (nq == 1) & (num_tokens < npages * page)
+            (tidx,) = np.nonzero(tail)
+            if len(tidx):
+                tq = first_q[tidx]
+                item_tail_query[tidx] = tq
+                if block_tables is not None:
+                    # position of the item's first page in the query's table
+                    fp = item_pages[tidx, 0]
+                    pos = np.argmax(
+                        np.asarray(block_tables)[tq] == fp[:, None], axis=1
+                    )
+                    item_tok_offset[tidx] = pos.astype(np.int64) * page
                 else:
-                    item_tok_offset[t] = int(kv_lens[q0]) - it.num_tokens
-                item_tail_query[t] = q0
-            if it.pages:
-                item_pages[t, : len(it.pages)] = it.pages
-            r = 0
-            for q in it.query_ids:
-                for g in range(group_size):
-                    row_query[t, r] = q
-                    row_group[t, r] = g
-                    # global partial row ids are appended after we know the
-                    # group's layout; record (t, r) for now via closure list
-                    r += 1
-            k = steps_per_item[t]
-            item_step_begin[t] = s
-            for j in range(k):
-                step_item[s] = t
-                lo = j * ppb
-                pg = it.pages[lo : lo + ppb]
-                if pg:
-                    step_pages[s, : len(pg)] = pg
-                covered_before = lo * page
-                step_len[s] = max(0, min(n, it.num_tokens - covered_before))
-                step_start[s] = 1 if j == 0 else 0
-                step_end[s] = 1 if j == k - 1 else 0
-                s += 1
-        assert s == S
+                    item_tok_offset[tidx] = kv_arr[tq] - num_tokens[tidx]
 
-        # merge table entries: row id = base + ((t*Hkv + h)*m + r)
-        for t, it in enumerate(items):
-            r = 0
-            for q in it.query_ids:
-                for g in range(group_size):
-                    for h in range(num_kv_heads):
-                        qhead = h * group_size + g
-                        rid = row_base + (t * num_kv_heads + h) * m + r
-                        parts[q][qhead].append(rid)
-                    r += 1
-        row_base += T * num_kv_heads * m
+        # merge table entries: rid = base + (t*Hkv + h)*m + (qi*G + g),
+        # enumerated in the canonical (t, qi, g, h) append order
+        pair_e = np.repeat(np.arange(NQ, dtype=np.int64), group_size * Hkv)
+        g_e = np.tile(np.repeat(np.arange(group_size), Hkv), NQ)
+        h_e = np.tile(np.arange(Hkv), NQ * group_size)
+        merge_q.append(all_q[pair_e])
+        merge_head.append(h_e * group_size + g_e)
+        merge_rid.append(
+            row_base
+            + (pair_item[pair_e] * Hkv + h_e) * m
+            + qi_within[pair_e] * group_size
+            + g_e
+        )
+        row_base += T * Hkv * m
 
         groups.append(
             TileGroupPlan(
@@ -202,7 +379,7 @@ def build_work_plan(
                 pages_per_block=ppb,
                 num_items=T,
                 num_steps=S,
-                step_item=step_item,
+                step_item=step_item64.astype(np.int32),
                 step_pages=step_pages,
                 step_len=step_len,
                 step_start=step_start,
@@ -214,25 +391,37 @@ def build_work_plan(
                 item_num_pages=item_num_pages,
                 item_tail_query=item_tail_query,
                 item_tok_offset=item_tok_offset,
-                item_step_begin=item_step_begin,
+                item_step_begin=item_step_begin.astype(np.int32),
             )
         )
 
-    # --- merge table --------------------------------------------------------
-    P = 1
-    for q in range(plan.batch_size):
-        for h in range(num_q_heads):
-            P = max(P, len(parts[q][h]))
-    part_rows = np.full((plan.batch_size, num_q_heads, P), -1, np.int32)
-    for q in range(plan.batch_size):
-        for h in range(num_q_heads):
-            ids = parts[q][h]
-            part_rows[q, h, : len(ids)] = ids
+    # --- merge table (one stable sort + scatter over all entries) ----------
+    B = plan.batch_size
+    if merge_q:
+        q_all = np.concatenate(merge_q)
+        head_all = np.concatenate(merge_head)
+        rid_all = np.concatenate(merge_rid)
+    else:
+        q_all = head_all = rid_all = np.zeros(0, np.int64)
+    key = q_all * num_q_heads + head_all
+    order = np.argsort(key, kind="stable")  # stable: keeps append order
+    skey, srid = key[order], rid_all[order]
+    if len(skey):
+        run_start_mask = np.concatenate([[True], skey[1:] != skey[:-1]])
+        run_id = np.cumsum(run_start_mask) - 1
+        run_starts = np.nonzero(run_start_mask)[0]
+        pos = np.arange(len(skey)) - run_starts[run_id]
+        P = int(pos.max()) + 1
+    else:
+        pos = np.zeros(0, np.int64)
+        P = 1
+    part_rows = np.full((B, num_q_heads, P), -1, np.int32)
+    part_rows.reshape(B * num_q_heads, P)[skey, pos] = srid
 
     return WorkPlan(
         groups=groups,
         part_rows=part_rows,
-        batch_size=plan.batch_size,
+        batch_size=B,
         num_q_heads=num_q_heads,
         num_kv_heads=num_kv_heads,
         page_size=page,
@@ -245,32 +434,41 @@ def build_work_plan(
 def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
     """O(steps) lazy-update refresh: re-derives tail-item valid lengths
     from fresh ``kv_lens`` without re-packing. Valid exactly while the
-    block-table structure (the plan fingerprint) is unchanged."""
+    block-table structure (the plan fingerprint) is unchanged.
+
+    If the plan is device-resident, only the two refreshed arrays per group
+    (``step_len``, ``item_kv_len``) are re-uploaded; all other device arrays
+    are carried over untouched."""
+    kv_arr = np.asarray(kv_lens, np.int64)
     new_groups = []
+    touched = []
     for g in wp.groups:
         tail = g.item_tail_query
         if tail is None or not (tail >= 0).any():
             new_groups.append(g)
+            touched.append(False)
             continue
         item_kv_len = g.item_kv_len.copy()
         step_len = g.step_len.copy()
         n = g.tile.n
         (idxs,) = np.nonzero(tail >= 0)
-        for t in idxs:
-            cap = int(g.item_num_pages[t]) * wp.page_size
-            valid = int(
-                np.clip(kv_lens[tail[t]] - g.item_tok_offset[t], 0, cap)
-            )
-            item_kv_len[t] = valid
-            k = max(1, -(-int(g.item_num_pages[t]) // g.pages_per_block))
-            s0 = int(g.item_step_begin[t])
-            for j in range(k):
-                step_len[s0 + j] = max(0, min(n, valid - j * n))
-        ng = TileGroupPlan(
-            **{**g.__dict__, "item_kv_len": item_kv_len, "step_len": step_len}
+        cap = g.item_num_pages[idxs].astype(np.int64) * wp.page_size
+        valid = np.clip(
+            kv_arr[tail[idxs]] - g.item_tok_offset[idxs], 0, cap
         )
-        new_groups.append(ng)
-    return WorkPlan(
+        item_kv_len[idxs] = valid
+        # per tail item: steps s0..s0+k-1 get clip(valid - j*n, 0, n)
+        k = np.maximum(
+            1, -(-g.item_num_pages[idxs].astype(np.int64) // g.pages_per_block)
+        )
+        srow, j = _csr_expand(k)
+        sidx = g.item_step_begin[idxs][srow] + j
+        step_len[sidx] = np.clip(valid[srow] - j * n, 0, n)
+        new_groups.append(
+            replace(g, item_kv_len=item_kv_len, step_len=step_len)
+        )
+        touched.append(True)
+    new_wp = WorkPlan(
         groups=new_groups,
         part_rows=wp.part_rows,
         batch_size=wp.batch_size,
@@ -281,6 +479,29 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
         total_partial_rows=wp.total_partial_rows,
         meta=wp.meta,
     )
+    if wp.device is not None:
+        dgs = []
+        for g_new, dg, was_touched in zip(new_groups, wp.device.groups, touched):
+            if not was_touched:
+                dgs.append(dg)
+                continue
+            Sp = dg.step_len.shape[0]
+            Tp = dg.item_kv_len.shape[0]
+            dgs.append(
+                replace(
+                    dg,
+                    step_len=jnp.asarray(_pad_rows(g_new.step_len, Sp)),
+                    item_kv_len=jnp.asarray(_pad_rows(g_new.item_kv_len, Tp)),
+                )
+            )
+            _DEVICE_STATS["refresh_uploads"] += 1
+            _DEVICE_STATS["arrays_uploaded"] += 2
+        new_wp.device = DeviceWorkPlan(
+            groups=dgs,
+            part_rows=wp.device.part_rows,
+            bucketed=wp.device.bucketed,
+        )
+    return new_wp
 
 
 def plan_fingerprint(

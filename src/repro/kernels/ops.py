@@ -1,8 +1,18 @@
-"""Jit-ready wrappers around the PAT kernels.
+"""Jit-cached, device-resident dispatch for the PAT kernels.
 
 `pat_paged_attention` executes a WorkPlan: per tile group it packs the Q
 rows, runs the forward kernel (Pallas, or an XLA fallback with identical
 semantics for the multi-device dry-run), then merges partials per query.
+
+Dispatch (ISSUE 1 tentpole): plans coming off the lazy-update cache are
+device-resident (`WorkPlan.to_device()` uploaded their arrays once, padded
+to power-of-two (S, T, P) buckets) and execute through ONE jitted
+forward+merge whose cache key is the bucketed shape signature — so a given
+(m, n, S_bucket, T_bucket, dk, dv) compiles once and is reused across
+decode steps, layers, and batches. The legacy per-call path (host arrays
+moved with `jnp.asarray` at every invocation, eager op dispatch) remains
+for plans built directly by `build_work_plan`, e.g. one-shot tests; pass
+``dispatch="jit"`` / ``dispatch="eager"`` to force either.
 
 The XLA fallback exists because Pallas TPU kernels cannot be compiled for a
 CPU host-platform target; it computes the same unnormalised partials from
@@ -23,6 +33,20 @@ from repro.kernels import merge as merge_mod
 from repro.kernels import pat_decode
 from repro.kernels import ref as ref_mod
 from repro.core.work_plan import TileGroupPlan, WorkPlan
+
+# Instrumentation for the overhead benchmark and the dispatch-cache
+# regression test: `traces` increments only when jax actually (re)traces the
+# forward+merge — zero growth across steps means the jit cache is warm.
+_DISPATCH_STATS = {"traces": 0, "jit_calls": 0, "eager_calls": 0}
+
+
+def dispatch_stats() -> dict:
+    return dict(_DISPATCH_STATS)
+
+
+def reset_dispatch_stats() -> None:
+    for k in _DISPATCH_STATS:
+        _DISPATCH_STATS[k] = 0
 
 
 def pack_q_rows(
@@ -95,6 +119,8 @@ def xla_group_forward(
 
 
 def _group_arrays(g: TileGroupPlan):
+    """Legacy per-call upload of one group's host arrays (eager path only;
+    the hot path uses the plan's device-resident copies instead)."""
     return (
         jnp.asarray(g.step_item),
         jnp.asarray(g.step_pages),
@@ -108,28 +134,27 @@ def _group_arrays(g: TileGroupPlan):
     )
 
 
-def pat_paged_attention(
-    q: jax.Array,  # [B, Hq, dk]
-    k_pages: jax.Array,  # [Hkv, P, page, dk]
-    v_pages: Optional[jax.Array],  # None => MLA-style shared KV
-    wp: WorkPlan,
+def _forward_merge(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: Optional[jax.Array],
+    group_arrays: Tuple,  # per group: the 9-tuple of plan arrays
+    part_rows: jax.Array,
     *,
-    scale: Optional[float] = None,
-    impl: str = "pallas",  # "pallas" | "xla"
-    merge_impl: str = "pallas",  # "pallas" | "xla"
-    v_head_dim: Optional[int] = None,
-    interpret: bool = True,
+    kv_tiles: Tuple[int, ...],
+    scale: float,
+    impl: str,
+    merge_impl: str,
+    v_head_dim: Optional[int],
+    num_kv_heads: int,
+    interpret: bool,
 ) -> jax.Array:
-    """Full pack->forward->merge decode attention. Returns [B, Hq, dv]."""
-    B, Hq, dk = q.shape
-    Hkv = wp.num_kv_heads
-    if scale is None:
-        scale = 1.0 / (dk**0.5)
+    """Shared pack -> forward -> merge body (traced under jit on the hot
+    path, executed eagerly on the legacy path)."""
+    Hkv = num_kv_heads
     dv = v_head_dim if v_pages is None else v_pages.shape[-1]
-
     os, sts = [], []
-    for g in wp.groups:
-        (si, sp, sl, ss, se, rq, rg, ip, ikl) = _group_arrays(g)
+    for (si, sp, sl, ss, se, rq, rg, ip, ikl), n in zip(group_arrays, kv_tiles):
         qp = pack_q_rows(q, rq, rg, Hkv)
         if impl == "pallas":
             o, st = pat_decode.pat_decode_forward(
@@ -141,7 +166,7 @@ def pat_paged_attention(
                 sl,
                 ss,
                 se,
-                kv_tile=g.tile.n,
+                kv_tile=n,
                 scale=scale,
                 v_head_dim=dv,
                 interpret=interpret,
@@ -158,9 +183,116 @@ def pat_paged_attention(
 
     big_o = jnp.concatenate(os, axis=0)
     big_st = jnp.concatenate(sts, axis=0)
-    part_rows = jnp.asarray(wp.part_rows)
     if merge_impl == "pallas":
         out = merge_mod.merge_partials(big_o, big_st, part_rows, interpret=interpret)
     else:
         out = ref_mod.merge_partials_ref(big_o, big_st, part_rows)
     return out.astype(q.dtype)
+
+
+def _traced_forward_merge(
+    q, k_pages, v_pages, group_arrays, part_rows,
+    *, kv_tiles, scale, impl, merge_impl, v_head_dim, num_kv_heads, interpret,
+):
+    # runs only when jax traces (i.e. on a jit-cache miss)
+    _DISPATCH_STATS["traces"] += 1
+    return _forward_merge(
+        q, k_pages, v_pages, group_arrays, part_rows,
+        kv_tiles=kv_tiles, scale=scale, impl=impl, merge_impl=merge_impl,
+        v_head_dim=v_head_dim, num_kv_heads=num_kv_heads, interpret=interpret,
+    )
+
+
+# One jitted entry point: jax's jit cache keys on the static config plus the
+# (bucketed) shapes/dtypes of every argument array, which IS the dispatch
+# signature (m, n, S_bucket, T_bucket, dk, dv, B, Hq, ...).
+_forward_merge_jit = jax.jit(
+    _traced_forward_merge,
+    static_argnames=(
+        "kv_tiles",
+        "scale",
+        "impl",
+        "merge_impl",
+        "v_head_dim",
+        "num_kv_heads",
+        "interpret",
+    ),
+)
+
+
+def pat_paged_attention(
+    q: jax.Array,  # [B, Hq, dk]
+    k_pages: jax.Array,  # [Hkv, P, page, dk]
+    v_pages: Optional[jax.Array],  # None => MLA-style shared KV
+    wp: WorkPlan,
+    *,
+    scale: Optional[float] = None,
+    impl: str = "pallas",  # "pallas" | "xla"
+    merge_impl: str = "pallas",  # "pallas" | "xla"
+    v_head_dim: Optional[int] = None,
+    interpret: bool = True,
+    dispatch: str = "auto",  # "auto" | "jit" | "eager"
+) -> jax.Array:
+    """Full pack->forward->merge decode attention. Returns [B, Hq, dv].
+
+    ``dispatch="auto"`` uses the jit-cached device-resident path whenever
+    the plan has already been uploaded (plans served by the lazy-update
+    PlanCache always are) and the legacy eager path otherwise.
+    """
+    B, Hq, dk = q.shape
+    Hkv = wp.num_kv_heads
+    if scale is None:
+        scale = 1.0 / (dk**0.5)
+    dv = v_head_dim if v_pages is None else v_pages.shape[-1]
+
+    use_jit = dispatch == "jit" or (dispatch == "auto" and wp.device is not None)
+    if use_jit:
+        dwp = wp.to_device()
+        group_arrays = tuple(
+            (
+                g.step_item,
+                g.step_pages,
+                g.step_len,
+                g.step_start,
+                g.step_end,
+                g.row_query,
+                g.row_group,
+                g.item_pages,
+                g.item_kv_len,
+            )
+            for g in dwp.groups
+        )
+        kv_tiles = tuple(g.kv_tile for g in dwp.groups)
+        _DISPATCH_STATS["jit_calls"] += 1
+        return _forward_merge_jit(
+            q,
+            k_pages,
+            v_pages,
+            group_arrays,
+            dwp.part_rows,
+            kv_tiles=kv_tiles,
+            scale=float(scale),
+            impl=impl,
+            merge_impl=merge_impl,
+            v_head_dim=dv,
+            num_kv_heads=Hkv,
+            interpret=interpret,
+        )
+
+    _DISPATCH_STATS["eager_calls"] += 1
+    group_arrays = tuple(_group_arrays(g) for g in wp.groups)
+    kv_tiles = tuple(g.tile.n for g in wp.groups)
+    return _forward_merge(
+        q,
+        k_pages,
+        v_pages,
+        group_arrays,
+        jnp.asarray(wp.part_rows),
+        kv_tiles=kv_tiles,
+        scale=scale,
+        impl=impl,
+        merge_impl=merge_impl,
+        v_head_dim=dv,
+        num_kv_heads=Hkv,
+        interpret=interpret,
+    )

@@ -97,14 +97,24 @@ def _kernel(
                     v_sems.at[buf_slot, j],
                 ).start()
 
-    def wait_copies(buf_slot):
+    def wait_copies(head_idx, step_idx, buf_slot):
+        # Waits must be built from the same (head, page) descriptors whose
+        # copies were started (warm-up or the previous step's prefetch):
+        # a wait on a dummy ref like k_hbm.at[h, 0] happens to decrement the
+        # right semaphore today, but silently skews the bookkeeping the
+        # moment source shapes diverge from the started copy's.
         for j in range(ppb):
+            pid = step_pages_ref[step_idx, j]
             pltpu.make_async_copy(
-                k_hbm.at[h, 0], k_buf.at[buf_slot, j], k_sems.at[buf_slot, j]
+                k_hbm.at[head_idx, pid],
+                k_buf.at[buf_slot, j],
+                k_sems.at[buf_slot, j],
             ).wait()
             if not share_kv:
                 pltpu.make_async_copy(
-                    v_hbm.at[h, 0], v_buf.at[buf_slot, j], v_sems.at[buf_slot, j]
+                    v_hbm.at[head_idx, pid],
+                    v_buf.at[buf_slot, j],
+                    v_sems.at[buf_slot, j],
                 ).wait()
 
     # Warm-up: the very first step of the whole grid issues its own copies.
@@ -112,7 +122,7 @@ def _kernel(
     def _():
         start_copies(0, 0, 0)
 
-    wait_copies(slot)
+    wait_copies(h, s, slot)
 
     # Prefetch the next grid step's pages into the other buffer. At the
     # (h, S-1) -> (h+1, 0) wrap the *next head's* step-0 pages are fetched.

@@ -23,13 +23,24 @@ from typing import Optional, Tuple
 
 import jax
 
+# `jax.sharding.AxisType` (and the matching `axis_types=` kwarg on
+# `jax.make_mesh`) only exists in newer JAX releases; older versions
+# (e.g. 0.4.37) default every axis to Auto, which is exactly what we
+# request on new versions — so the portable spelling is "pass axis_types
+# only when the installed JAX knows about it".
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _axis_type_kwargs(num_axes: int) -> dict:
+    if _AXIS_TYPE is None:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * num_axes}
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(
@@ -40,11 +51,10 @@ def make_mesh(
         return jax.make_mesh(
             (pod, data, model),
             ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+            **_axis_type_kwargs(3),
         )
     return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        (data, model), ("data", "model"), **_axis_type_kwargs(2)
     )
 
 

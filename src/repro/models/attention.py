@@ -118,6 +118,31 @@ def gqa_train(
     return out.reshape(B, S, -1) @ p["wo"]
 
 
+def gqa_prefill_suffix(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, d] (uncached suffix tokens)
+    positions: jax.Array,  # [B, S] absolute positions (start at prefix len)
+    prefix_k: jax.Array,  # [B, C, Hkv, hd] cached-prefix keys (already roped)
+    prefix_v: jax.Array,  # [B, C, Hkv, hd]
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Suffix-only prefill attention: queries are the uncached suffix,
+    keys/values are [cached prefix from the paged pool] ++ [suffix] — the
+    radix-reuse fast path (compute O(suffix), attention over full prefix).
+    Returns (out, suffix k, suffix v) so the caller can write the pool."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.positions == "rope":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    k_full = jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1)
+    v_full = jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1)
+    out = dense_attention_ref(
+        q, k_full, v_full, causal=True, q_offset=positions[:, 0]
+    )
+    return out.reshape(B, S, -1) @ p["wo"], k, v
+
+
 def gqa_cross(
     p,
     cfg: ModelConfig,
@@ -231,6 +256,47 @@ def mla_train(
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     out = _seq_attention(q, k, v, causal=True, scale=scale, kv_lens=kv_lens)
     return out.reshape(B, S, -1) @ p["wo"]
+
+
+def mla_prefill_suffix(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, d] (uncached suffix tokens)
+    positions: jax.Array,  # [B, S] absolute positions
+    prefix_ckv: jax.Array,  # [B, C, kv_lora] (rms-normed, as stored)
+    prefix_krope: jax.Array,  # [B, C, rope] (already roped)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """MLA counterpart of `gqa_prefill_suffix`: the cached prefix arrives
+    as the compressed (c_kv, k_rope) entries from the paged pool; per-head
+    K/V are re-expanded through w_uk/w_uv exactly as `mla_train` does.
+    Returns (out, suffix c_kv, suffix k_rope)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    Hq = cfg.num_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(p, cfg, x, positions)
+    ckv_full = jnp.concatenate([prefix_ckv.astype(c_kv.dtype), c_kv], axis=1)
+    krope_full = jnp.concatenate(
+        [prefix_krope.astype(k_rope.dtype), k_rope], axis=1
+    )
+    Lf = ckv_full.shape[1]
+    k_nope = (ckv_full @ p["w_uk"]).reshape(B, Lf, Hq, m.qk_nope_head_dim)
+    v = (ckv_full @ p["w_uv"]).reshape(B, Lf, Hq, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [
+            k_nope,
+            jnp.broadcast_to(
+                krope_full[:, :, None], (B, Lf, Hq, m.qk_rope_head_dim)
+            ),
+        ],
+        axis=-1,
+    )
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    out = dense_attention_ref(
+        q, k, v, causal=True, scale=scale, q_offset=positions[:, 0]
+    )
+    return out.reshape(B, S, -1) @ p["wo"], c_kv, k_rope
 
 
 def mla_decode(

@@ -465,3 +465,59 @@ def lm_prefill(
         L.unembed(p["embed"], h) if cfg.tie_embeddings else h @ p["lm_head"]["w"]
     )
     return logits[:, -1], caches
+
+
+def lm_prefill_suffix(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [B, S] the UNCACHED suffix of the prompt
+    prefix_caches: List[Dict[str, jax.Array]],  # per layer, gathered K/V of
+    #   the cached prefix: {"k","v"} [B, C, Hkv, hd] or {"ckv","krope"} (MLA)
+    start_pos: int,  # prefix length C (= absolute position of tokens[:, 0])
+) -> Tuple[jax.Array, List[Dict[str, jax.Array]]]:
+    """Prefill ONLY the uncached suffix, attending over the full prefix.
+
+    The serving engine's radix-reuse fast path: prefix tokens' K/V already
+    live in shared pages, so forward compute is O(suffix) while attention
+    still covers the whole prompt. Decoder-only attention stacks (GQA or
+    MLA) only — hybrid/SSM archs recompute state and use `lm_prefill`.
+    Returns (last logits, suffix-only caches), shape-compatible with
+    `lm_prefill` restricted to the suffix.
+    """
+    assert cfg.encdec is None, "suffix prefill is decoder-only"
+    h = L.embed(p["embed"], tokens)
+    B, S, _ = h.shape
+    positions = start_pos + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.positions == "sinusoidal":
+        table = L.sinusoidal_positions(start_pos + S, cfg.d_model, h.dtype)
+        h = h + table[start_pos:][None]
+
+    caches = []
+    for gi in range(cfg.num_layers):
+        li = gi % cfg.scan_block
+        lp = _layer_params(p, cfg, gi)
+        assert cfg.layer_is_attention(li), "suffix prefill needs paged attn"
+        x = _norm(cfg, lp["ln_attn"], h)
+        pc = prefix_caches[gi]
+        if cfg.mla is not None:
+            out, c_kv, k_rope = A.mla_prefill_suffix(
+                lp["attn"], cfg, x, positions, pc["ckv"], pc["krope"]
+            )
+            caches.append({"ckv": c_kv, "krope": k_rope})
+        else:
+            out, k, v = A.gqa_prefill_suffix(
+                lp["attn"], cfg, x, positions, pc["k"], pc["v"]
+            )
+            caches.append({"k": k, "v": v})
+        h = h + out
+        if "moe" in lp:
+            h = h + MOE.moe_apply(lp["moe"], cfg, _norm(cfg, lp["ln_mlp"], h))
+        elif "mlp" in lp:
+            mlp = L.swiglu if cfg.mlp == "swiglu" else L.gelu_mlp
+            h = h + mlp(lp["mlp"], _norm(cfg, lp["ln_mlp"], h))
+
+    h = _norm(cfg, p["final_norm"], h)
+    logits = (
+        L.unembed(p["embed"], h) if cfg.tie_embeddings else h @ p["lm_head"]["w"]
+    )
+    return logits[:, -1], caches

@@ -157,19 +157,70 @@ class Engine:
             self.waiting.remove(req)
             self.running.append(req)
 
+    def _gather_prefix_caches(self, pages: List[int], cached: int):
+        """Per-layer K/V of the cached prefix, gathered from the page pool
+        (one gather across all layers)."""
+        cfg = self.cfg
+        pids = jnp.asarray(np.asarray(pages, np.int32))
+        # [L, Hkv, n, page, dk] -> [L, n*page, Hkv, dk] -> first `cached`
+        kg = self.kv.k_pages[:, :, pids]
+        Lyr, Hkv = kg.shape[0], kg.shape[1]
+        kg = kg.transpose(0, 2, 3, 1, 4).reshape(Lyr, -1, Hkv, kg.shape[-1])
+        kg = kg[:, :cached]
+        if self.mla:
+            lora = cfg.mla.kv_lora_rank
+            return [
+                {
+                    "ckv": kg[l, None, :, 0, :lora],
+                    "krope": kg[l, None, :, 0, lora:],
+                }
+                for l in range(Lyr)
+            ]
+        vg = self.kv.v_pages[:, :, pids]
+        vg = vg.transpose(0, 2, 3, 1, 4).reshape(Lyr, -1, Hkv, vg.shape[-1])
+        vg = vg[:, :cached]
+        return [{"k": kg[l][None], "v": vg[l][None]} for l in range(Lyr)]
+
     def _prefill(self, req: Request) -> None:
         t0 = time.perf_counter()
         prompt = np.asarray(req.prompt, np.int32)
         S = len(prompt)
-        # run dense prefill over the *uncached* suffix but attend over the
-        # full prefix: positions offset by cached_tokens
-        # (cached tokens' K/V already live in shared pages).
-        suffix = prompt[req.cached_tokens :]
-        toks = jnp.asarray(prompt[None])
-        logits_last, caches = T.lm_prefill(self.params, self.cfg, toks)
+        cfg = self.cfg
+        # Run dense prefill over the *uncached* suffix only, attending over
+        # the full prefix (cached tokens' K/V already live in shared pages).
+        # At least one token is always recomputed so the prefill emits the
+        # first generation logits even for a fully-cached prompt.
+        cached = min(req.cached_tokens, S - 1)
+        attn_only = all(
+            cfg.layer_is_attention(i % cfg.scan_block)
+            for i in range(cfg.num_layers)
+        )
+        if cached > 0 and attn_only and cfg.encdec is None:
+            n_prefix_pages = -(-cached // self.page)
+            prefix_caches = self._gather_prefix_caches(
+                req.pages[:n_prefix_pages], cached
+            )
+            logits_last, caches = T.lm_prefill_suffix(
+                self.params, cfg, jnp.asarray(prompt[None, cached:]),
+                prefix_caches, cached,
+            )
+            # Never write below req.cached_tokens: those slots live in
+            # radix-SHARED pages other requests may be attending to, and
+            # the recomputed values can differ in low-order bits. (cached <
+            # req.cached_tokens only for a fully-cached prompt, where the
+            # last token is recomputed purely to produce logits.)
+            write_start = min(req.cached_tokens, S)
+        else:
+            logits_last, caches = T.lm_prefill(
+                self.params, cfg, jnp.asarray(prompt[None])
+            )
+            # full recompute, but still write only the uncached tokens —
+            # the cached prefix already lives in (possibly shared) pages
+            write_start = req.cached_tokens
         # write K/V of the uncached tokens into this request's pages
+        n_new = S - write_start
         pids, slots = token_to_page_slots(
-            req.pages, req.cached_tokens, S - req.cached_tokens, self.page
+            req.pages, write_start, n_new, self.page
         )
         if self.mla:
             k_all = jnp.stack(
@@ -177,16 +228,15 @@ class Engine:
                     jnp.concatenate([c["ckv"][0], c["krope"][0]], axis=-1)[:, None, :]
                     for c in caches
                 ]
-            )  # [L, S, 1, dk]
-            self.kv.write_tokens(
-                k_all[:, req.cached_tokens :], None, pids, slots
-            )
+            )  # [L, S_new, 1, dk]
         else:
-            k_all = jnp.stack([c["k"][0] for c in caches])  # [L, S, Hkv, hd]
+            k_all = jnp.stack([c["k"][0] for c in caches])  # [L, S_new, Hkv, hd]
             v_all = jnp.stack([c["v"][0] for c in caches])
-            self.kv.write_tokens(
-                k_all[:, req.cached_tokens :], v_all[:, req.cached_tokens :], pids, slots
-            )
+        lo = k_all.shape[1] - n_new  # 0 on the suffix path (caches = suffix)
+        if n_new > 0 and self.mla:
+            self.kv.write_tokens(k_all[:, lo:], None, pids, slots)
+        elif n_new > 0:
+            self.kv.write_tokens(k_all[:, lo:], v_all[:, lo:], pids, slots)
         self.radix.insert(req.prompt, req.pages)
         req.position = S
         # first generated token comes from the prefill logits
@@ -240,20 +290,37 @@ class Engine:
         self.running = still
         self.metrics.decode_time += time.perf_counter() - t0
 
+    def _decode_write_slots(self) -> (jax.Array, jax.Array):
+        """(page id, slot) of the token being decoded, per running request —
+        computed once per step and shared by every layer (the per-layer
+        python loop was measurable host overhead at production batch)."""
+        B = len(self.running)
+        pids = np.zeros(B, np.int32)
+        slots = np.zeros(B, np.int32)
+        for i, r in enumerate(self.running):
+            pids[i] = r.pages[r.position // self.page]
+            slots[i] = r.position % self.page
+        return jnp.asarray(pids), jnp.asarray(slots)
+
     def _paged_decode_step(self, tokens, positions, wp) -> jax.Array:
         cfg = self.cfg
         p = self.params
         B = tokens.shape[0]
         h = L.embed(p["embed"], tokens[:, None])
+        pids, slots = self._decode_write_slots()
         new_k_layers, new_v_layers = [], []
         for gi in range(cfg.num_layers):
             lp = T._layer_params(p, cfg, gi)
             x = T._norm(cfg, lp["ln_attn"], h)
             if self.mla:
-                out, kc = self._mla_paged_attn(lp["attn"], x, positions, gi, wp)
+                out, kc = self._mla_paged_attn(
+                    lp["attn"], x, positions, gi, wp, pids, slots
+                )
                 new_k_layers.append(kc)
             else:
-                out, kc, vc = self._gqa_paged_attn(lp["attn"], x, positions, gi, wp)
+                out, kc, vc = self._gqa_paged_attn(
+                    lp["attn"], x, positions, gi, wp, pids, slots
+                )
                 new_k_layers.append(kc)
                 new_v_layers.append(vc)
             h = h + out
@@ -265,11 +332,6 @@ class Engine:
                 mlp = L.swiglu if cfg.mlp == "swiglu" else L.gelu_mlp
                 h = h + mlp(lp["mlp"], T._norm(cfg, lp["ln_mlp"], h))
         # batch the page writes for all layers at once
-        pids = np.zeros(B, np.int32)
-        slots = np.zeros(B, np.int32)
-        for i, r in enumerate(self.running):
-            pids[i] = r.pages[r.position // self.page]
-            slots[i] = r.position % self.page
         k_all = jnp.stack(new_k_layers)  # [Llayers, B, H, dk] -> treat B as S
         if self.mla:
             self.kv.write_tokens(k_all, None, pids, slots)
@@ -283,7 +345,7 @@ class Engine:
         )
         return logits[:, 0]
 
-    def _gqa_paged_attn(self, ap, x, positions, layer, wp):
+    def _gqa_paged_attn(self, ap, x, positions, layer, wp, pids, slots):
         cfg = self.cfg
         B = x.shape[0]
         q, k, v = A._project_qkv(ap, cfg, x)  # [B,1,H,hd]
@@ -293,36 +355,26 @@ class Engine:
             k = L.apply_rope(k, pos, cfg.rope_theta)
         # write this token's K/V into the pool BEFORE attending (it attends
         # to itself: kv_lens includes it)
-        pids = np.zeros(B, np.int32)
-        slots = np.zeros(B, np.int32)
-        for i, r in enumerate(self.running):
-            pids[i] = r.pages[r.position // self.page]
-            slots[i] = r.position % self.page
         kp, vp = self.kv.layer_view(layer)
-        kp = kp.at[:, jnp.asarray(pids), jnp.asarray(slots)].set(
+        kp = kp.at[:, pids, slots].set(
             k[:, 0].transpose(1, 0, 2).astype(kp.dtype)
         )
-        vp = vp.at[:, jnp.asarray(pids), jnp.asarray(slots)].set(
+        vp = vp.at[:, pids, slots].set(
             v[:, 0].transpose(1, 0, 2).astype(vp.dtype)
         )
         out = self.backend.attend(q[:, 0], kp, vp, wp)  # [B, Hq, hd]
         out = out.reshape(B, 1, -1).astype(x.dtype) @ ap["wo"]
         return out, k[:, 0], v[:, 0]
 
-    def _mla_paged_attn(self, ap, x, positions, layer, wp):
+    def _mla_paged_attn(self, ap, x, positions, layer, wp, pids, slots):
         cfg, m = self.cfg, self.cfg.mla
         B = x.shape[0]
         pos = positions[:, None]
         q_nope, q_rope = A._mla_q(ap, cfg, x, pos)
         c_kv, k_rope = A._mla_ckv(ap, cfg, x, pos)
         entry = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0][:, None, :]  # [B,1,dk]
-        pids = np.zeros(B, np.int32)
-        slots = np.zeros(B, np.int32)
-        for i, r in enumerate(self.running):
-            pids[i] = r.pages[r.position // self.page]
-            slots[i] = r.position % self.page
         kp, _ = self.kv.layer_view(layer)
-        kp = kp.at[:, jnp.asarray(pids), jnp.asarray(slots)].set(
+        kp = kp.at[:, pids, slots].set(
             entry.transpose(1, 0, 2).astype(kp.dtype)
         )
         # absorbed query per head: [B, Hq, kv_lora + rope]

@@ -39,6 +39,9 @@ def make_batch(rng, B, page, levels=(4, 2), priv=2, max_extra=3):
     return bt, kv, nxt
 
 
+@pytest.mark.slow  # full interpret-mode sweep; fast-profile coverage comes
+# from test_pallas_equals_xla_path_exactly_shapes / test_share_kv_mla_mode /
+# test_lazy_update_refresh_correctness
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "B,Hq,Hkv,dk", [(4, 8, 8, 64), (6, 32, 8, 128), (3, 16, 2, 128), (5, 8, 1, 64)]
@@ -119,7 +122,13 @@ def test_merge_kernel_vs_ref():
 
 
 @pytest.mark.parametrize("causal", [True, False])
-@pytest.mark.parametrize("B,S,Hq,Hkv,dk", [(2, 128, 8, 4, 64), (1, 256, 4, 1, 128)])
+@pytest.mark.parametrize(
+    "B,S,Hq,Hkv,dk",
+    [
+        (2, 128, 8, 4, 64),
+        pytest.param(1, 256, 4, 1, 128, marks=pytest.mark.slow),
+    ],
+)
 def test_flash_prefill(B, S, Hq, Hkv, dk, causal):
     rng = np.random.default_rng(S + Hq)
     q = jnp.asarray(rng.normal(size=(B, S, Hq, dk)), jnp.float32)

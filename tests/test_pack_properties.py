@@ -1,15 +1,26 @@
-"""Hypothesis property tests for the pack scheduler's invariants.
+"""Property tests for the pack scheduler's invariants.
 
 The central invariant (DESIGN.md §4): for ANY valid block table, every
 packing strategy produces a partition where each (query, kv-token) pair is
 covered exactly once — so merge reproduces full attention regardless of the
 profit model's choices. Plus: byte-model sanity (PAT never loads more KV
 than query-centric; never less than the theoretical minimum).
+
+`hypothesis` is optional: when it is installed the cases are drawn by the
+property-based engine; otherwise a pinned-seed fallback loop feeds the same
+generator so the invariants still run (the container image does not ship
+hypothesis — see ISSUE 1).
 """
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dependency; the pinned-seed fallback below covers its absence
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.pack_scheduler import (
     plan_kv_bytes,
@@ -21,14 +32,15 @@ from repro.core.tile_selector import TileSelector
 from repro.core.work_plan import build_work_plan
 
 PAGE = 16
+STRATEGIES = ["pat", "query_centric", "relay", "pat_naive", "pat_compute"]
+FALLBACK_SEEDS = list(range(16))
 
 
-@st.composite
-def block_tables(draw):
-    """Random forest-structured batches with valid page sharing."""
-    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
-    B = draw(st.integers(1, 12))
-    n_roots = draw(st.integers(1, 3))
+def _gen_case(rng: np.random.Generator):
+    """Random forest-structured batch with valid page sharing (pure numpy,
+    shared by the hypothesis strategy and the pinned-seed fallback)."""
+    B = int(rng.integers(1, 13))
+    n_roots = int(rng.integers(1, 4))
     rows = []
     next_page = [0]
 
@@ -38,17 +50,17 @@ def block_tables(draw):
         return out
 
     # build a random prefix forest by sampling shared segments
-    roots = [fresh(draw(st.integers(1, 6))) for _ in range(n_roots)]
+    roots = [fresh(int(rng.integers(1, 7))) for _ in range(n_roots)]
     mids = {}
     for b in range(B):
-        r = draw(st.integers(0, n_roots - 1))
+        r = int(rng.integers(0, n_roots))
         pages = list(roots[r])
-        if draw(st.booleans()):
-            mid_key = (r, draw(st.integers(0, 1)))
+        if rng.integers(0, 2):
+            mid_key = (r, int(rng.integers(0, 2)))
             if mid_key not in mids:
-                mids[mid_key] = fresh(draw(st.integers(1, 4)))
+                mids[mid_key] = fresh(int(rng.integers(1, 5)))
             pages += mids[mid_key]
-        pages += fresh(draw(st.integers(1, 4)))
+        pages += fresh(int(rng.integers(1, 5)))
         rows.append(pages)
     maxp = max(len(r) for r in rows)
     bt = -np.ones((B, maxp), np.int32)
@@ -59,9 +71,18 @@ def block_tables(draw):
     return bt, kv
 
 
-@given(block_tables(), st.sampled_from(["pat", "query_centric", "relay", "pat_naive", "pat_compute"]))
-@settings(max_examples=80, deadline=None)
-def test_exact_coverage(tbl, strategy):
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def block_tables(draw):
+        seed = draw(st.integers(0, 2**31))
+        return _gen_case(np.random.default_rng(seed))
+
+
+# --- invariant checks (shared between both runners) ------------------------
+
+
+def _check_exact_coverage(tbl, strategy):
     bt, kv = tbl
     plan = schedule(bt, kv, PAGE, strategy=strategy, rows_per_query=4, max_query_rows=64)
     # token-count coverage
@@ -80,9 +101,7 @@ def test_exact_coverage(tbl, strategy):
             assert seen.get((b, int(bt[b, j])), 0) == 1
 
 
-@given(block_tables())
-@settings(max_examples=50, deadline=None)
-def test_bytes_ordering(tbl):
+def _check_bytes_ordering(tbl):
     """theoretical_min <= PAT <= query_centric KV bytes."""
     bt, kv = tbl
     d, hkv = 128, 8
@@ -94,9 +113,7 @@ def test_bytes_ordering(tbl):
     assert mn <= b_pat <= b_qc
 
 
-@given(block_tables())
-@settings(max_examples=30, deadline=None)
-def test_work_plan_merge_table_complete(tbl):
+def _check_work_plan_merge_table_complete(tbl):
     """Every (query, head) has >= 1 partial row; all row ids are in range."""
     bt, kv = tbl
     Hq, Hkv = 8, 4
@@ -109,9 +126,7 @@ def test_work_plan_merge_table_complete(tbl):
     assert pr.max() < wp.total_partial_rows
 
 
-@given(block_tables())
-@settings(max_examples=30, deadline=None)
-def test_forest_structure(tbl):
+def _check_forest_structure(tbl):
     bt, kv = tbl
     forest = build_forest(bt, kv, PAGE)
     # every query appears in exactly one root's subtree
@@ -130,6 +145,50 @@ def test_forest_structure(tbl):
 
     for root in forest:
         check(root)
+
+
+# --- runners ----------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(block_tables(), st.sampled_from(STRATEGIES))
+    @settings(max_examples=80, deadline=None)
+    def test_exact_coverage(tbl, strategy):
+        _check_exact_coverage(tbl, strategy)
+
+    @given(block_tables())
+    @settings(max_examples=50, deadline=None)
+    def test_bytes_ordering(tbl):
+        _check_bytes_ordering(tbl)
+
+    @given(block_tables())
+    @settings(max_examples=30, deadline=None)
+    def test_work_plan_merge_table_complete(tbl):
+        _check_work_plan_merge_table_complete(tbl)
+
+    @given(block_tables())
+    @settings(max_examples=30, deadline=None)
+    def test_forest_structure(tbl):
+        _check_forest_structure(tbl)
+
+else:
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_exact_coverage(strategy):
+        for seed in FALLBACK_SEEDS:
+            _check_exact_coverage(_gen_case(np.random.default_rng(seed)), strategy)
+
+    def test_bytes_ordering():
+        for seed in FALLBACK_SEEDS:
+            _check_bytes_ordering(_gen_case(np.random.default_rng(seed)))
+
+    def test_work_plan_merge_table_complete():
+        for seed in FALLBACK_SEEDS:
+            _check_work_plan_merge_table_complete(_gen_case(np.random.default_rng(seed)))
+
+    def test_forest_structure():
+        for seed in FALLBACK_SEEDS:
+            _check_forest_structure(_gen_case(np.random.default_rng(seed)))
 
 
 def test_long_kv_split_caps_item_length():
