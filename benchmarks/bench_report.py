@@ -1,0 +1,117 @@
+"""Machine-readable perf tracking: BENCH_decode_attention.json.
+
+One committed JSON artifact tracks the decode-attention perf trajectory
+across PRs (ISSUE 2):
+
+  * ``dispatch``     — measured per-step wall-clock of the jitted XLA
+                       dispatch path (and the legacy rebuild-every-step
+                       path), plus upload/retrace counters
+                       (benchmarks/overhead.dispatch_overhead).
+  * ``modeled_hbm``  — modeled KV + intermediate HBM bytes, dense vs
+                       split-aware, on the acceptance decode batches
+                       (benchmarks/memory_traffic.split_aware_report).
+  * ``kernel_latency`` — analytic latency-model numbers for a fixed subset
+                       of Fig. 10 configs (benchmarks/kernel_perf).
+
+`benchmarks/check_regression.py` diffs the current artifact against the
+previously committed one and fails on >10% per-step wall-clock regression;
+`pytest -m slow` runs the same check as a perf smoke test.
+
+Each producing benchmark can refresh just its own section via
+`update_section` (kernel_perf and overhead do this from __main__);
+`python benchmarks/bench_report.py` regenerates the whole artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+from typing import Dict, Optional
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_decode_attention.json")
+SCHEMA = 1
+
+
+def load(path: str = DEFAULT_PATH) -> Dict:
+    if not os.path.exists(path):
+        return {"schema": SCHEMA}
+    with open(path) as f:
+        return json.load(f)
+
+
+def write(report: Dict, path: str = DEFAULT_PATH) -> str:
+    report = dict(report)
+    report["schema"] = SCHEMA
+    report.setdefault("machine", platform.machine())
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def update_section(name: str, data: Dict, path: str = DEFAULT_PATH) -> str:
+    """Read-modify-write one section, preserving the others."""
+    report = load(path)
+    report[name] = data
+    return write(report, path)
+
+
+def kernel_section(rows) -> Dict:
+    """kernel_latency section from kernel_perf.run() rows — the single
+    builder shared by bench_report.collect and kernel_perf.__main__."""
+    return {
+        f"cfg{r['config']}_{r['heads'].replace('/', '_')}": {
+            "pat_us": r["us_pat"],
+            "norm_flashattention": r["norm_flashattention"],
+            "norm_relay": r["norm_relay"],
+            "pat_kv_bytes": r["bytes_pat"],
+        }
+        for r in rows
+    }
+
+
+def collect(fast: bool = False, verbose: bool = True) -> Dict:
+    """Regenerates every section. ``fast=True`` shrinks the measured and
+    modeled workloads (used by the perf-smoke pytest)."""
+    from benchmarks import kernel_perf, memory_traffic, overhead
+
+    # keep the batch size fixed so per-step wall-clock stays comparable
+    # between fast (smoke) and full collections
+    disp = overhead.dispatch_overhead(
+        batch=64, steps=8 if fast else 20, verbose=verbose
+    )
+    disp_light = overhead.dispatch_overhead(
+        batch=64, steps=8 if fast else 20, verbose=verbose, shared_pages=0
+    )
+    hbm = {
+        "no_share_64x1024": memory_traffic.split_aware_report(verbose=verbose),
+        "tree_fig10_cfg10": memory_traffic.split_aware_report(
+            widths=(1, 2, 8, 64), lens=(128, 128, 256, 512), verbose=verbose
+        ),
+    }
+    rows = kernel_perf.run(
+        head_configs=[(32, 8)],
+        configs=list(kernel_perf.bench_configs(fast=fast)),
+        verbose=verbose,
+    )
+    kern = kernel_section(rows)
+    return {
+        "dispatch": disp,
+        "dispatch_split_light": disp_light,
+        "modeled_hbm": hbm,
+        "kernel_latency": kern,
+    }
+
+
+def main(path: Optional[str] = None, fast: bool = False) -> str:
+    report = collect(fast=fast)
+    out = write(report, path or DEFAULT_PATH)
+    print(f"wrote {out}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(fast="--fast" in sys.argv)

@@ -1,0 +1,120 @@
+"""Perf-regression gate over BENCH_decode_attention.json (ISSUE 2).
+
+Diffs the current artifact against the previously committed one (by
+default ``git show HEAD:benchmarks/BENCH_decode_attention.json``) and
+FAILS (exit 1) when the jitted per-step wall-clock regresses by more than
+10% — with a small absolute noise floor, since CPU-container timings
+jitter. Modeled quantities (HBM bytes, analytic latency) are checked
+exactly: they are deterministic, so ANY increase is flagged.
+
+Usage:
+    python benchmarks/check_regression.py [--current PATH] [--baseline PATH]
+    python benchmarks/check_regression.py --fresh   # re-measure, then diff
+
+`pytest -m slow` runs the same comparison as a perf smoke test
+(tests/test_perf_smoke.py).
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+from benchmarks import bench_report
+
+WALL_CLOCK_THRESHOLD = 0.10  # >10% per-step wall-clock regression fails
+# Shared CPU containers jitter a few ms even with min-of-repeats timing;
+# regressions this gate exists to catch (falling off the jit-cached path,
+# re-uploading plans per step) are 100-300x, far above this floor.
+WALL_CLOCK_FLOOR_MS = 2.5  # ignore sub-floor absolute jitter
+MODEL_THRESHOLD = 0.001  # modeled bytes/latency are deterministic
+
+
+def git_baseline(path: str = "benchmarks/BENCH_decode_attention.json") -> Optional[Dict]:
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"],
+            capture_output=True, text=True, check=True,
+        ).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, FileNotFoundError, json.JSONDecodeError):
+        return None
+
+
+def compare(baseline: Dict, current: Dict) -> List[str]:
+    """Returns a list of regression messages (empty = pass)."""
+    failures: List[str] = []
+
+    def wall(msg: str, base: float, cur: float):
+        if cur > base * (1 + WALL_CLOCK_THRESHOLD) and cur - base > WALL_CLOCK_FLOOR_MS:
+            failures.append(
+                f"{msg}: {base:.3f} -> {cur:.3f} ms "
+                f"(+{100 * (cur / max(base, 1e-12) - 1):.1f}% > "
+                f"{100 * WALL_CLOCK_THRESHOLD:.0f}%)"
+            )
+
+    def model(msg: str, base: float, cur: float):
+        if cur > base * (1 + MODEL_THRESHOLD):
+            failures.append(f"{msg}: modeled value grew {base} -> {cur}")
+
+    for section in ("dispatch", "dispatch_split_light"):
+        b_d, c_d = baseline.get(section, {}), current.get(section, {})
+        comparable = b_d.get("batch") == c_d.get("batch")
+        if comparable and "after_step_ms" in b_d and "after_step_ms" in c_d:
+            wall(
+                f"{section}.after_step_ms (jitted XLA path)",
+                b_d["after_step_ms"], c_d["after_step_ms"],
+            )
+        if c_d.get("jit_retraces_after_warmup", 0) > b_d.get(
+            "jit_retraces_after_warmup", 0
+        ):
+            failures.append(
+                f"{section}.jit_retraces_after_warmup grew: "
+                f"{b_d.get('jit_retraces_after_warmup')} -> "
+                f"{c_d.get('jit_retraces_after_warmup')}"
+            )
+
+    b_h, c_h = baseline.get("modeled_hbm", {}), current.get("modeled_hbm", {})
+    for key in sorted(set(b_h) & set(c_h)):
+        for field in ("inter_bytes_split_aware", "kv_bytes"):
+            if field in b_h[key] and field in c_h[key]:
+                model(f"modeled_hbm.{key}.{field}", b_h[key][field], c_h[key][field])
+
+    b_k, c_k = baseline.get("kernel_latency", {}), current.get("kernel_latency", {})
+    for key in sorted(set(b_k) & set(c_k)):
+        if "pat_us" in b_k[key] and "pat_us" in c_k[key]:
+            model(f"kernel_latency.{key}.pat_us", b_k[key]["pat_us"], c_k[key]["pat_us"])
+
+    return failures
+
+
+def main(argv: List[str]) -> int:
+    cur_path = bench_report.DEFAULT_PATH
+    base: Optional[Dict] = None
+    fresh = "--fresh" in argv
+    for i, a in enumerate(argv):
+        if a == "--current":
+            cur_path = argv[i + 1]
+        elif a == "--baseline":
+            with open(argv[i + 1]) as f:
+                base = json.load(f)
+    if base is None:
+        base = git_baseline()
+    if base is None:
+        print("no committed baseline found; nothing to compare")
+        return 0
+    current = bench_report.collect(fast=True, verbose=False) if fresh else bench_report.load(cur_path)
+    failures = compare(base, current)
+    if failures:
+        print("PERF REGRESSION:")
+        for f in failures:
+            print("  -", f)
+        return 1
+    print("perf check passed (no >10% wall-clock or modeled regressions)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

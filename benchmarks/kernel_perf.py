@@ -28,6 +28,17 @@ HEAD_CONFIGS = [(32, 32), (16, 8), (32, 8), (64, 8)]
 PAGE = 16
 HEAD_DIM = 128
 
+# Fixed Fig. 10 subset tracked in BENCH_decode_attention.json: a wide
+# single-level share (1), a deep tree (8), a mixed tree (10) and the
+# no-prefix batch (19) — the split-aware fast path's best case.
+BENCH_SUBSET = [1, 8, 10, 19]
+
+
+def bench_configs(fast: bool = False):
+    """(idx, (B, L)) pairs for the machine-readable perf artifact."""
+    idxs = [1, 19] if fast else BENCH_SUBSET
+    return [(i, FIG10_CONFIGS[i - 1]) for i in idxs]
+
 
 def run(head_configs=HEAD_CONFIGS, configs=None, verbose=True) -> List[Dict]:
     hw = HwModel()
@@ -102,3 +113,12 @@ def summarize(rows: List[Dict]) -> Dict[str, float]:
 if __name__ == "__main__":
     rows = run()
     print(summarize(rows))
+    # refresh this benchmark's section of the perf-tracking artifact
+    from benchmarks import bench_report
+
+    tracked = [
+        r for r in rows if r["config"] in BENCH_SUBSET and r["heads"] == "32/8"
+    ]
+    bench_report.update_section(
+        "kernel_latency", bench_report.kernel_section(tracked)
+    )

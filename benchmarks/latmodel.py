@@ -50,10 +50,17 @@ def plan_latency(
     v_head_dim: Optional[int] = None,
     num_kv_heads: Optional[int] = None,
     num_q_heads: Optional[int] = None,
+    split_aware: bool = True,
 ) -> Dict[str, float]:
     """Models one decode-attention step from a built WorkPlan. Head counts
     can be overridden to model a full-size arch from a reduced-model plan
-    (the plan's page structure is scale-invariant)."""
+    (the plan's page structure is scale-invariant).
+
+    ``split_aware=True`` (the implemented datapath, DESIGN.md §3) charges
+    merge traffic only for rows of genuinely split queries — single-partial
+    rows are normalised in the forward epilogue and never round-trip
+    through HBM. ``split_aware=False`` models the pre-split-aware datapath
+    that paid the merge for every packed row."""
     dv = v_head_dim if v_head_dim is not None else head_dim
     page = wp.page_size
     Hkv = num_kv_heads if num_kv_heads is not None else wp.num_kv_heads
@@ -78,9 +85,14 @@ def plan_latency(
     else:
         t_fwd = max(total_bytes / bw, max_flops_t) + hw.launch_s
 
-    inter_rows = wp.total_partial_rows
+    if split_aware:
+        # packed-row granularity: Hkv * m rows per item, but only rows of
+        # split queries are written/read as fp32 partials + stats
+        inter_rows = wp.total_split_rows
+    else:
+        inter_rows = wp.total_partial_rows
     merge_bytes = inter_rows * (dv + 2) * 4 * 2  # fp32, write + read
-    t_merge = merge_bytes / bw + hw.launch_s
+    t_merge = (merge_bytes / bw + hw.launch_s) if inter_rows else 0.0
     return {
         "t_total": t_fwd + t_merge,
         "t_forward": t_fwd,

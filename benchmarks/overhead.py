@@ -105,7 +105,8 @@ def run(num_requests: int = 48, steps: int = 32, verbose: bool = True) -> Dict:
 
 
 def dispatch_overhead(
-    batch: int = 64, steps: int = 20, verbose: bool = True
+    batch: int = 64, steps: int = 20, verbose: bool = True, repeats: int = 3,
+    shared_pages: int = 4,
 ) -> Dict:
     """Before/after host overhead of one decode step's attention dispatch.
 
@@ -113,13 +114,23 @@ def dispatch_overhead(
     forward+merge eagerly every step (the seed repo's behaviour, where
     `ops._group_arrays` called `jnp.asarray` nine times per tile group per
     layer per step).
-    "after": lazy-update cache hit + step_len/item_kv_len refresh + one
-    shape-cached jit call against the device-resident plan.
+    "after": lazy-update cache hit + length refresh + one shape-cached jit
+    call against the device-resident plan, through the split-aware merge
+    datapath.
+
+    ``shared_pages > 0`` builds a shared-prefix batch whose queries are all
+    genuinely split (compact slow path exercised); ``shared_pages = 0`` is
+    the split-light case — every query takes the in-kernel-normalised fast
+    path and the merge stage vanishes entirely.
 
     Both paths run identical math (impl="xla" so kernel compute is cheap and
     host work dominates the timed section); completion waits are excluded
-    from both so the numbers isolate host-side work. Also reports upload /
-    trace counts across the run — retraces must be zero once warm.
+    from both so the numbers isolate host-side work. Each timed loop runs
+    ``repeats`` times and the MINIMUM per-step time is reported — the
+    standard noisy-timer discipline, so the 10% regression gate
+    (benchmarks/check_regression.py) is not tripped by container load.
+    Also reports upload / trace counts across the run — retraces must be
+    zero once warm.
     """
     import jax.numpy as jnp
 
@@ -128,8 +139,9 @@ def dispatch_overhead(
 
     rng = np.random.default_rng(11)
     Hq, Hkv, dk = 8, 4, 64
-    # shared-prefix batch with vLLM-style pre-allocated generation pages
-    shared, priv, budget = 4, 2, 2
+    # (optionally shared-prefix) batch with vLLM-style pre-allocated
+    # generation pages
+    shared, priv, budget = shared_pages, 2, 2
     rows, nxt = [], 0
     prefix = list(range(shared))
     nxt = shared
@@ -166,12 +178,14 @@ def dispatch_overhead(
         )
 
     one_legacy_step(kv).block_until_ready()  # warm numpy/XLA caches
-    t0 = time.perf_counter()
-    out = None
-    for s in range(steps):
-        out = one_legacy_step(kv + s)
-    t_before = (time.perf_counter() - t0) / steps
-    out.block_until_ready()
+    t_before = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = None
+        for s in range(steps):
+            out = one_legacy_step(kv + s)
+        t_before = min(t_before, (time.perf_counter() - t0) / steps)
+        out.block_until_ready()
 
     # --- after: plan cache + device-resident arrays + jit dispatch --------
     backend = PatAttentionBackend(
@@ -182,17 +196,24 @@ def dispatch_overhead(
     backend.attend(q, k_pages, v_pages, backend.plan(bt, kv)).block_until_ready()
     ops.reset_dispatch_stats()
     base_stats = backend.cache.stats
-    t0 = time.perf_counter()
-    for s in range(steps):
-        wp = backend.plan(bt, kv + 1 + s)
-        out = backend.attend(q, k_pages, v_pages, wp)
-    t_after = (time.perf_counter() - t0) / steps
-    out.block_until_ready()
+    t_after = float("inf")
+    for _ in range(repeats):
+        # replay the same in-capacity growth window the legacy loop timed
+        # (kv must stay within the pre-allocated budget pages so every
+        # refresh is a real length update, not a clamped no-op)
+        t0 = time.perf_counter()
+        for s in range(steps):
+            wp = backend.plan(bt, kv + 1 + s)
+            out = backend.attend(q, k_pages, v_pages, wp)
+        t_after = min(t_after, (time.perf_counter() - t0) / steps)
+        out.block_until_ready()
 
     ds = ops.dispatch_stats()
     res = {
         "batch": batch,
         "steps": steps,
+        "shared_pages": shared_pages,
+        "split_queries": wp.num_split_queries,
         "before_step_ms": t_before * 1e3,
         "after_step_ms": t_after * 1e3,
         "speedup": t_before / max(t_after, 1e-12),
@@ -205,7 +226,8 @@ def dispatch_overhead(
     }
     if verbose:
         print(
-            f"dispatch B={batch:4d}: before={res['before_step_ms']:.2f}ms/step "
+            f"dispatch B={batch:4d} split_q={res['split_queries']:3d}: "
+            f"before={res['before_step_ms']:.2f}ms/step "
             f"after={res['after_step_ms']:.3f}ms/step "
             f"speedup={res['speedup']:.1f}x "
             f"uploads(full={res['full_uploads']}, refresh={res['refresh_uploads']}) "
@@ -217,4 +239,10 @@ def dispatch_overhead(
 
 if __name__ == "__main__":
     run()
-    dispatch_overhead()
+    res = dispatch_overhead()
+    res_light = dispatch_overhead(shared_pages=0)
+    # refresh this benchmark's sections of the perf-tracking artifact
+    from benchmarks import bench_report
+
+    bench_report.update_section("dispatch", res)
+    bench_report.update_section("dispatch_split_light", res_light)

@@ -10,9 +10,13 @@ affecting model accuracy".
 A cached plan carries its group arrays already on device (ISSUE 1): the
 full upload happens ONCE per fingerprint miss (`WorkPlan.to_device()`,
 bucket-padded so the jitted forward+merge shape-caches), and each refresh
-re-uploads only the two arrays the lazy update touches. The cache's stats
-expose schedule/refresh wall-clock plus upload counts so the overhead
-benchmark (Fig. 14) can attribute host time.
+re-uploads only the arrays the lazy update touches — ``step_len``,
+``item_kv_len``, and the step-activity arrays derived from ``step_len``
+that drive the zero-token DMA skip (DESIGN.md §4). Split classification is
+structural, so the compact merge tables and row_sole flags stay resident
+across every refresh. The cache's stats expose schedule/refresh wall-clock
+plus upload counts so the overhead benchmark (Fig. 14) can attribute host
+time.
 
 In a real deployment `schedule()` runs on an async host thread, overlapped
 with pre-attention work (LayerNorm / QKV projection); here the cache also
@@ -40,7 +44,7 @@ class CacheStats:
     refresh_time_s: float = 0.0
     upload_time_s: float = 0.0
     full_uploads: int = 0  # whole-plan device uploads (one per miss)
-    refresh_uploads: int = 0  # step_len/item_kv_len-only uploads
+    refresh_uploads: int = 0  # length/activity-only uploads
     arrays_uploaded: int = 0  # total host->device plan-array transfers
 
     @property

@@ -372,14 +372,40 @@ def plan_kv_bytes(
     return total_pages * page_tokens * head_dim * num_kv_heads * 2 * kv_bytes_per_el
 
 
+def plan_query_part_counts(plan: PackPlan) -> np.ndarray:
+    """Number of work items covering each query — the split classifier of
+    the split-aware merge datapath (DESIGN.md §3): queries with exactly one
+    item are normalised in the forward epilogue and bypass the merge."""
+    counts = np.zeros(plan.batch_size, np.int64)
+    for it in plan.items:
+        counts[np.asarray(it.query_ids, np.int64)] += 1
+    return counts
+
+
 def plan_intermediate_bytes(
-    plan: PackPlan, head_dim: int, num_q_heads: int, batch_parts: Optional[dict] = None
+    plan: PackPlan,
+    head_dim: int,
+    num_q_heads: int,
+    batch_parts: Optional[dict] = None,
+    split_aware: bool = False,
 ) -> int:
-    """Merge-stage traffic: per (item, query) a partial fp32 output plus
-    softmax stats is written by the forward kernel and read by merge."""
+    """Merge-stage traffic: per SPLIT (item, query) pair a partial fp32
+    output plus softmax stats is written by the forward kernel and read by
+    merge.
+
+    ``split_aware=False`` models the pre-split-aware datapath (every pair
+    round-trips partials + stats through HBM, the seed behaviour and what
+    fixed-tile baselines with a separate combine pass pay). With
+    ``split_aware=True`` only pairs of queries covered by MORE than one
+    item count — single-partial queries are normalised in-kernel and their
+    only HBM write is the final output row, which every datapath pays."""
     per_row = (head_dim + 2) * 4  # fp32 numerator + (max, denom)
     writes_reads = 2
-    rows = sum(it.num_queries for it in plan.items)
+    if split_aware:
+        counts = plan_query_part_counts(plan)
+        rows = int(counts[counts > 1].sum())
+    else:
+        rows = sum(it.num_queries for it in plan.items)
     return rows * num_q_heads * per_row * writes_reads
 
 
@@ -401,8 +427,10 @@ def theoretical_min_kv_bytes(
 
 def plan_total_bytes(
     plan: PackPlan, head_dim: int, num_q_heads: int, num_kv_heads: int,
-    kv_bytes_per_el: int = 2,
+    kv_bytes_per_el: int = 2, split_aware: bool = False,
 ) -> int:
     kv = plan_kv_bytes(plan, head_dim, num_kv_heads, kv_bytes_per_el)
-    inter = plan_intermediate_bytes(plan, head_dim, num_q_heads)
+    inter = plan_intermediate_bytes(
+        plan, head_dim, num_q_heads, split_aware=split_aware
+    )
     return kv + inter

@@ -15,25 +15,43 @@ construction so planning cost stays flat at production batch sizes):
   step_len    [S]        valid tokens in the step (1..n; masks the tail)
   step_start  [S]        1 on an item's first step (reset accumulator)
   step_end    [S]        1 on an item's last step (flush partials)
+  step_ord    [S]        rank of the step among ACTIVE (step_len>0) steps
+  act_steps   [S]        step indices of the active steps (prefix; 0-pad)
+  act_total   [1]        number of active steps (drives the DMA pipeline)
   row_query   [T, m]     query id per packed Q row (-1 = padding row)
   row_group   [T, m]     GQA within-group head index per row
+  row_sole    [T, m]     1 iff the row's query has exactly ONE partial
+                         (fast path: the kernel epilogue normalises it)
   item_kv_len [T]        valid tokens per item
+  split_src   [R_g]      flat row ids ((t*Hkv+h)*m + col) of SPLIT rows
 
-plus a global merge table:
+plus the split-aware merge tables (DESIGN.md §3):
 
-  part_rows   [B, Hq, P] indices into the concatenated partial-output rows
-                         (group-major, then ((t*Hkv + h)*m + r)); -1 = pad.
+  split_part_rows [num_split*Hq, P]  indices into the COMPACT split-row
+                                     buffer (group-major, unpadded bases);
+                                     -1 = pad. Only queries whose KV was
+                                     genuinely decomposed appear here.
+  split_qh        [num_split*Hq]     destination b*Hq+h of each merged row
+                                     (the merge scatters into the same
+                                     [B, Hq, dv] output the fast path wrote)
+
+Queries packed into exactly one work item — the dominant fraction of a
+typical decode batch — never appear in any merge table: the forward kernel
+normalises their rows in-kernel (acc / l) and the dispatch scatters them
+straight into the final output, so no fp32 partials or stats round-trip
+through HBM for them.
 
 Device residency (ISSUE 1 tentpole): a WorkPlan is uploaded to device ONCE
 per plan fingerprint via `WorkPlan.to_device()`, which also pads each
-group's (S, T) — and the merge table's P — up to power-of-two buckets
+group's (S, T) — and the compact merge table — up to power-of-two buckets
 (padded steps carry step_len=0 and are masked out by the kernels). The
 bucketed `DeviceWorkPlan` is what the jit-cached dispatch in `kernels.ops`
 consumes: stable bucket shapes mean the jitted forward+merge for a given
 (m, n, S_bucket, T_bucket, dk, dv) compiles once and is reused across
 decode steps and batches. `refresh_lengths` keeps the device copy fresh by
-re-uploading ONLY the two arrays the lazy update touches (`step_len`,
-`item_kv_len`); everything else stays resident.
+re-uploading ONLY the arrays the lazy update touches (`step_len`,
+`item_kv_len`, and the step-activity arrays derived from `step_len` that
+gate the zero-token DMA skip); everything else stays resident.
 """
 
 from __future__ import annotations
@@ -73,6 +91,33 @@ class TileGroupPlan:
     item_tail_query: np.ndarray = None  # [T], -1 = static item
     item_tok_offset: np.ndarray = None  # [T] query tokens before this item
     item_step_begin: np.ndarray = None  # [T] first flattened step index
+    # Split-aware merge datapath (DESIGN.md §3): which packed rows take the
+    # in-kernel-normalised fast path vs the compact partial+merge slow path.
+    row_sole: np.ndarray = None  # [T, m] 1 = single-partial query row
+    split_src: np.ndarray = None  # [R_g] flat row ids of split rows
+    # Zero-token DMA skip (DESIGN.md §4): derived from step_len, refreshed
+    # together with it by the lazy update.
+    step_ord: np.ndarray = None  # [S] rank among active steps
+    act_steps: np.ndarray = None  # [S] indices of active steps (0-padded)
+    act_total: np.ndarray = None  # [1] number of active steps
+
+    @property
+    def num_split_rows(self) -> int:
+        return 0 if self.split_src is None else int(self.split_src.shape[0])
+
+
+def _activity_arrays(step_len: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(step_ord, act_steps, act_total) for the zero-token DMA skip: the
+    kernel's double-buffer pipeline runs over ACTIVE steps only, so steps
+    that cover nothing but pre-allocated (not yet filled) pages issue no
+    K/V DMA at all."""
+    act = step_len > 0
+    step_ord = (np.cumsum(act) - act).astype(np.int32)
+    act_steps = np.zeros(step_len.shape[0], np.int32)
+    (nz,) = np.nonzero(act)
+    act_steps[: len(nz)] = nz
+    act_total = np.array([len(nz)], np.int32)
+    return step_ord, act_steps, act_total
 
 
 # --- device-resident plan (uploaded once per fingerprint) -------------------
@@ -81,9 +126,17 @@ class TileGroupPlan:
 # and the dispatch-cache regression test.
 _DEVICE_STATS = {
     "full_uploads": 0,  # whole-plan uploads (once per fingerprint miss)
-    "refresh_uploads": 0,  # step_len/item_kv_len-only refresh uploads
+    "refresh_uploads": 0,  # length/activity-only refresh uploads
     "arrays_uploaded": 0,  # total host->device array transfers
 }
+
+# Arrays uploaded per group on a full upload / at most per lazy refresh
+# (kept as named constants so the stats accounting and its tests stay in
+# sync). A common within-page refresh uploads only 2 (step_len,
+# item_kv_len); the activity arrays ride along only when growth crosses a
+# page boundary and changes the active-step pattern.
+ARRAYS_PER_GROUP = 15
+ARRAYS_PER_REFRESH = 5
 
 
 def device_stats() -> dict:
@@ -116,7 +169,12 @@ def _pad_cols(a: np.ndarray, n: int, fill=0) -> np.ndarray:
 
 @dataclass
 class DeviceGroupArrays:
-    """One tile group's plan arrays on device, padded to the shape bucket."""
+    """One tile group's plan arrays on device, padded to the shape bucket.
+
+    Registered as a jax pytree (array fields are leaves; the tile ints are
+    static metadata), so the dispatch passes whole instances through jit —
+    there is exactly ONE field list, here, instead of parallel positional
+    tuples that could silently fall out of sync."""
 
     kv_tile: int  # n
     pages_per_block: int
@@ -125,31 +183,72 @@ class DeviceGroupArrays:
     step_len: jax.Array  # [S_bucket] (refreshed by lazy update)
     step_start: jax.Array  # [S_bucket]
     step_end: jax.Array  # [S_bucket]
+    step_ord: jax.Array  # [S_bucket] (refreshed by lazy update)
+    act_steps: jax.Array  # [S_bucket] (refreshed by lazy update)
+    act_total: jax.Array  # [1] (refreshed by lazy update)
     row_query: jax.Array  # [T_bucket, m]
     row_group: jax.Array  # [T_bucket, m]
+    row_sole: jax.Array  # [T_bucket, m]
     item_pages: jax.Array  # [T_bucket, maxp_bucket]
     item_kv_len: jax.Array  # [T_bucket] (refreshed by lazy update)
+    split_src: jax.Array  # [R_g_bucket] flat row ids of split rows
+    split_dst: jax.Array  # [R_g_bucket] compact-buffer slots (OOB = pad)
+
+
+jax.tree_util.register_dataclass(
+    DeviceGroupArrays,
+    data_fields=[
+        "step_item",
+        "step_pages",
+        "step_len",
+        "step_start",
+        "step_end",
+        "step_ord",
+        "act_steps",
+        "act_total",
+        "row_query",
+        "row_group",
+        "row_sole",
+        "item_pages",
+        "item_kv_len",
+        "split_src",
+        "split_dst",
+    ],
+    meta_fields=["kv_tile", "pages_per_block"],
+)
 
 
 @dataclass
 class DeviceWorkPlan:
-    """Device-resident, bucket-padded realisation of a WorkPlan."""
+    """Device-resident, bucket-padded realisation of a WorkPlan.
+
+    Carries the COMPACT split-only merge tables — the dense [B, Hq, P]
+    gather of the pre-split-aware datapath does not exist on device."""
 
     groups: List[DeviceGroupArrays]
-    part_rows: jax.Array  # [B, Hq, P_bucket], row ids remapped to buckets
+    split_part_rows: jax.Array  # [rows_bucket, P_bucket], -1 = pad
+    split_qh: jax.Array  # [rows_bucket] out row b*Hq+h (OOB = pad)
+    split_cap: int  # compact partial-buffer size (0 = no split rows)
     bucketed: bool
 
 
 @dataclass
 class WorkPlan:
     groups: List[TileGroupPlan]
-    part_rows: np.ndarray  # [B, Hq, P]
+    part_rows: np.ndarray  # [B, Hq, P] dense merge table (host-side oracle
+    # and property tests only; the executed datapath uses the compact
+    # split-only tables below)
     batch_size: int
     num_q_heads: int
     num_kv_heads: int
     page_size: int
     strategy: str
     total_partial_rows: int
+    # --- split-aware merge datapath (DESIGN.md §3) --------------------------
+    split_queries: np.ndarray = None  # [num_split] query ids with >1 partial
+    split_part_rows: np.ndarray = None  # [num_split*Hq, P_split]
+    split_qh: np.ndarray = None  # [num_split*Hq]
+    total_split_rows: int = 0  # rows in the compact partial buffer
     meta: dict = field(default_factory=dict)
     # populated lazily by to_device(); carried across refresh_lengths so the
     # static arrays are uploaded exactly once per plan fingerprint
@@ -165,18 +264,32 @@ class WorkPlan:
     def num_steps(self) -> int:
         return sum(g.num_steps for g in self.groups)
 
+    @property
+    def num_split_queries(self) -> int:
+        return 0 if self.split_queries is None else int(len(self.split_queries))
+
+    def dma_page_fetches(self) -> int:
+        """Pages the forward kernels will actually DMA this step: active
+        (step_len > 0) steps only, per KV head. Zero-token steps over
+        pre-allocated pages are skipped by the pipeline (DESIGN.md §4)."""
+        total = 0
+        for g in self.groups:
+            active = int(np.count_nonzero(g.step_len > 0))
+            total += active * g.pages_per_block * self.num_kv_heads
+        return total
+
     def to_device(self, bucket: bool = True) -> DeviceWorkPlan:
         """Uploads the plan's arrays to device, padding each group's
-        (S, T, max_pages) — and the merge table's P — to power-of-two
-        buckets. Idempotent: the upload happens once per WorkPlan; plans
-        produced by `refresh_lengths` inherit the resident arrays."""
+        (S, T, max_pages, split rows) — and the compact merge table — to
+        power-of-two buckets. Idempotent: the upload happens once per
+        WorkPlan; plans produced by `refresh_lengths` inherit the resident
+        arrays."""
         if self.device is not None:
             return self.device
-        Hkv = self.num_kv_heads
         dgroups: List[DeviceGroupArrays] = []
-        old_bounds = [0]  # group boundaries in the unpadded partial-row space
-        shifts = []  # per group: new_base - old_base
-        new_base = 0
+        cap = self.total_split_rows
+        cap_bucket = (_next_pow2(cap) if bucket else cap) if cap else 0
+        base = 0
         for g in self.groups:
             m = g.row_query.shape[1]
             S, T = g.num_steps, g.num_items
@@ -184,13 +297,22 @@ class WorkPlan:
             Tp = _next_pow2(T) if bucket else T
             maxp = g.item_pages.shape[1]
             maxpp = _next_pow2(maxp) if bucket else maxp
+            n_split = g.num_split_rows
+            Rp = _next_pow2(n_split) if bucket else max(1, n_split)
+            # Compact-buffer slots of this group's split rows: unpadded
+            # bases (they must match the split_part_rows values); padded
+            # entries scatter out of bounds and are dropped.
+            split_dst = np.full(Rp, max(cap_bucket, 1), np.int32)
+            split_dst[:n_split] = base + np.arange(n_split, dtype=np.int32)
+            base += n_split
             # Padded steps must target the LAST item's block, not item 0's:
-            # they carry step_len=0 (no compute, no flush), but on real TPU
-            # the output window is copied out whenever the block index
-            # changes — revisiting item 0 after its flush would clobber its
-            # partials with stale buffer contents. Revisiting the final
-            # block only re-emits values that are either just-flushed
-            # (Tp-1 == T-1) or never referenced by part_rows (padded item).
+            # they carry step_len=0 (no compute, no flush, no DMA), but on
+            # real TPU the output window is copied out whenever the block
+            # index changes — revisiting item 0 after its flush would
+            # clobber its partials with stale buffer contents. Revisiting
+            # the final block only re-emits values that are either
+            # just-flushed (Tp-1 == T-1) or never referenced by any merge
+            # table / fast-path scatter (padded item).
             dgroups.append(
                 DeviceGroupArrays(
                     kv_tile=g.tile.n,
@@ -202,38 +324,44 @@ class WorkPlan:
                     step_len=jnp.asarray(_pad_rows(g.step_len, Sp)),
                     step_start=jnp.asarray(_pad_rows(g.step_start, Sp)),
                     step_end=jnp.asarray(_pad_rows(g.step_end, Sp)),
+                    step_ord=jnp.asarray(_pad_rows(g.step_ord, Sp)),
+                    act_steps=jnp.asarray(_pad_rows(g.act_steps, Sp)),
+                    act_total=jnp.asarray(g.act_total),
                     row_query=jnp.asarray(_pad_rows(g.row_query, Tp, fill=-1)),
                     row_group=jnp.asarray(_pad_rows(g.row_group, Tp)),
+                    row_sole=jnp.asarray(_pad_rows(g.row_sole, Tp)),
                     item_pages=jnp.asarray(
                         _pad_rows(_pad_cols(g.item_pages, maxpp), Tp)
                     ),
                     item_kv_len=jnp.asarray(_pad_rows(g.item_kv_len, Tp)),
+                    split_src=jnp.asarray(_pad_rows(g.split_src, Rp)),
+                    split_dst=jnp.asarray(split_dst),
                 )
             )
-            shifts.append(new_base - old_bounds[-1])
-            old_bounds.append(old_bounds[-1] + T * Hkv * m)
-            new_base += Tp * Hkv * m
 
-        # remap merge-table row ids into the padded row space (padding only
-        # appends rows at each group's tail, so a per-group shift suffices)
-        pr = self.part_rows
-        if any(s != 0 for s in shifts):
-            bounds = np.asarray(old_bounds[:-1] + [old_bounds[-1] + 1])
-            gid = np.searchsorted(bounds, np.maximum(pr, 0), side="right") - 1
-            shift = np.asarray(shifts, np.int64)[gid]
-            pr = np.where(pr >= 0, pr + shift, -1).astype(np.int32)
-        P = pr.shape[2]
-        Pp = _next_pow2(P) if bucket else P
-        if Pp != P:
-            pr = np.concatenate(
-                [pr, np.full(pr.shape[:2] + (Pp - P,), -1, pr.dtype)], axis=2
-            )
+        # Compact split-only merge table: values are compact-buffer slots
+        # with unpadded bases, so no remap is needed — only tail padding of
+        # the table itself to stable bucket shapes.
+        spr = self.split_part_rows
+        sqh = self.split_qh
+        rows = spr.shape[0]
+        rows_b = _next_pow2(rows) if bucket else rows
+        P = spr.shape[1]
+        Pb = _next_pow2(P) if bucket else P
+        if rows:
+            spr = _pad_rows(_pad_cols(spr, Pb, fill=-1), rows_b, fill=-1)
+            # padded merge rows scatter out of bounds and are dropped
+            sqh = _pad_rows(sqh, rows_b, fill=self.batch_size * self.num_q_heads)
         self.device = DeviceWorkPlan(
-            groups=dgroups, part_rows=jnp.asarray(pr), bucketed=bucket
+            groups=dgroups,
+            split_part_rows=jnp.asarray(spr),
+            split_qh=jnp.asarray(sqh),
+            split_cap=cap_bucket,
+            bucketed=bucket,
         )
         _DEVICE_STATS["full_uploads"] += 1
-        # 9 plan arrays per group + the shared merge table
-        _DEVICE_STATS["arrays_uploaded"] += 9 * len(dgroups) + 1
+        # ARRAYS_PER_GROUP plan arrays per group + the two compact tables
+        _DEVICE_STATS["arrays_uploaded"] += ARRAYS_PER_GROUP * len(dgroups) + 2
         return self.device
 
 
@@ -257,15 +385,17 @@ def build_work_plan(
     kv_lens: Optional[np.ndarray] = None,
     block_tables: Optional[np.ndarray] = None,
 ) -> WorkPlan:
-    """Lays out a pack plan as per-tile-group CSR arrays + the merge table.
+    """Lays out a pack plan as per-tile-group CSR arrays + merge tables.
 
-    The per-group step/CSR construction and the merge `part_rows` table are
-    fully vectorised numpy (no O(batch x pages) python loops), so planning
-    cost stays flat at production batch sizes."""
+    The per-group step/CSR construction and both merge tables (the dense
+    host-side oracle table and the compact split-only table the kernels
+    execute) are fully vectorised numpy (no O(batch x pages) python loops),
+    so planning cost stays flat at production batch sizes."""
     assert num_q_heads % num_kv_heads == 0
     group_size = num_q_heads // num_kv_heads
     page = plan.page_size
     Hkv = num_kv_heads
+    Hq = num_q_heads
 
     # --- assign a tile config to every item (constant-time per item) -------
     buckets: dict = {}
@@ -279,6 +409,9 @@ def build_work_plan(
     merge_q: List[np.ndarray] = []
     merge_head: List[np.ndarray] = []
     merge_rid: List[np.ndarray] = []
+    # per-group pair vectors, kept for the split-aware second pass (split
+    # classification needs the part counts of the WHOLE plan)
+    pair_vectors: List[tuple] = []
     row_base = 0  # global offset into the concatenated partial rows
 
     for (m, n), items in sorted(buckets.items()):
@@ -299,6 +432,7 @@ def build_work_plan(
         step_len = np.clip(num_tokens[step_item64] - j_in * n, 0, n).astype(
             np.int32
         )
+        step_ord, act_steps, act_total = _activity_arrays(step_len)
 
         # item -> page table (also feeds the XLA fallback path)
         total_pages = int(npages.sum())
@@ -340,8 +474,8 @@ def build_work_plan(
         item_tok_offset = np.zeros(T, np.int32)
         q_starts = np.zeros(T, np.int64)
         q_starts[1:] = np.cumsum(nq)[:-1]
-        first_q = all_q[q_starts]  # [T]
-        if kv_lens is not None:
+        first_q = all_q[q_starts] if NQ else np.zeros(0, np.int64)
+        if kv_lens is not None and NQ:
             kv_arr = np.asarray(kv_lens, np.int64)
             tail = (nq == 1) & (num_tokens < npages * page)
             (tidx,) = np.nonzero(tail)
@@ -363,14 +497,15 @@ def build_work_plan(
         pair_e = np.repeat(np.arange(NQ, dtype=np.int64), group_size * Hkv)
         g_e = np.tile(np.repeat(np.arange(group_size), Hkv), NQ)
         h_e = np.tile(np.arange(Hkv), NQ * group_size)
-        merge_q.append(all_q[pair_e])
-        merge_head.append(h_e * group_size + g_e)
-        merge_rid.append(
-            row_base
-            + (pair_item[pair_e] * Hkv + h_e) * m
+        local_rid = (
+            (pair_item[pair_e] * Hkv + h_e) * m
             + qi_within[pair_e] * group_size
             + g_e
         )
+        merge_q.append(all_q[pair_e])
+        merge_head.append(h_e * group_size + g_e)
+        merge_rid.append(row_base + local_rid)
+        pair_vectors.append((all_q[pair_e], h_e * group_size + g_e, local_rid))
         row_base += T * Hkv * m
 
         groups.append(
@@ -392,10 +527,13 @@ def build_work_plan(
                 item_tail_query=item_tail_query,
                 item_tok_offset=item_tok_offset,
                 item_step_begin=item_step_begin.astype(np.int32),
+                step_ord=step_ord,
+                act_steps=act_steps,
+                act_total=act_total,
             )
         )
 
-    # --- merge table (one stable sort + scatter over all entries) ----------
+    # --- dense merge table (host-side oracle / property tests) -------------
     B = plan.batch_size
     if merge_q:
         q_all = np.concatenate(merge_q)
@@ -418,6 +556,60 @@ def build_work_plan(
     part_rows = np.full((B, num_q_heads, P), -1, np.int32)
     part_rows.reshape(B * num_q_heads, P)[skey, pos] = srid
 
+    # --- split classification + compact split-only merge table -------------
+    # A query is SPLIT iff it appears in more than one work item; only
+    # those round-trip fp32 partials + stats through the merge stage.
+    pair_counts = np.zeros(B, np.int64)
+    for g, (pq, _, _) in zip(groups, pair_vectors):
+        # each (item, query) pair contributes Hq consecutive entries in pq
+        if len(pq):
+            pair_counts += np.bincount(pq[::Hq], minlength=B)
+    split_mask = pair_counts > 1
+    split_ids = np.nonzero(split_mask)[0].astype(np.int32)
+    split_index = np.full(B, -1, np.int64)
+    split_index[split_ids] = np.arange(len(split_ids))
+
+    c_q: List[np.ndarray] = []
+    c_head: List[np.ndarray] = []
+    c_rid: List[np.ndarray] = []
+    split_base = 0
+    for g, (pq, phead, prid) in zip(groups, pair_vectors):
+        sel = split_mask[pq]
+        src = prid[sel].astype(np.int32)
+        g.split_src = src
+        g.row_sole = (
+            (g.row_query >= 0)
+            & ~split_mask[np.maximum(g.row_query, 0)]
+        ).astype(np.int32)
+        c_q.append(pq[sel])
+        c_head.append(phead[sel])
+        c_rid.append(split_base + np.arange(len(src), dtype=np.int64))
+        split_base += len(src)
+
+    n_split_rows = split_base
+    num_split = int(len(split_ids))
+    if num_split:
+        cq = np.concatenate(c_q)
+        ch = np.concatenate(c_head)
+        cr = np.concatenate(c_rid)
+        ckey = split_index[cq] * Hq + ch
+        corder = np.argsort(ckey, kind="stable")
+        skey2, srid2 = ckey[corder], cr[corder]
+        run_start2 = np.concatenate([[True], skey2[1:] != skey2[:-1]])
+        run_id2 = np.cumsum(run_start2) - 1
+        run_starts2 = np.nonzero(run_start2)[0]
+        pos2 = np.arange(len(skey2)) - run_starts2[run_id2]
+        P_split = int(pos2.max()) + 1
+        split_part_rows = np.full((num_split * Hq, P_split), -1, np.int32)
+        split_part_rows[skey2, pos2] = srid2
+        split_qh = (
+            np.repeat(split_ids.astype(np.int64), Hq) * Hq
+            + np.tile(np.arange(Hq, dtype=np.int64), num_split)
+        ).astype(np.int32)
+    else:
+        split_part_rows = np.zeros((0, 1), np.int32)
+        split_qh = np.zeros((0,), np.int32)
+
     return WorkPlan(
         groups=groups,
         part_rows=part_rows,
@@ -427,6 +619,10 @@ def build_work_plan(
         page_size=page,
         strategy=plan.strategy,
         total_partial_rows=row_base,
+        split_queries=split_ids,
+        split_part_rows=split_part_rows,
+        split_qh=split_qh,
+        total_split_rows=n_split_rows,
         meta=dict(plan.meta),
     )
 
@@ -436,9 +632,12 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
     from fresh ``kv_lens`` without re-packing. Valid exactly while the
     block-table structure (the plan fingerprint) is unchanged.
 
-    If the plan is device-resident, only the two refreshed arrays per group
-    (``step_len``, ``item_kv_len``) are re-uploaded; all other device arrays
-    are carried over untouched."""
+    If the plan is device-resident, only the refreshed arrays per group
+    (``step_len``, ``item_kv_len``, and the step-activity arrays that gate
+    the zero-token DMA skip) are re-uploaded; all other device arrays are
+    carried over untouched. Split classification is structural (it counts
+    work items, not tokens), so the compact merge tables never change under
+    a refresh — a step growing from 0 valid tokens merely becomes active."""
     kv_arr = np.asarray(kv_lens, np.int64)
     new_groups = []
     touched = []
@@ -446,7 +645,7 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
         tail = g.item_tail_query
         if tail is None or not (tail >= 0).any():
             new_groups.append(g)
-            touched.append(False)
+            touched.append((False, False))
             continue
         item_kv_len = g.item_kv_len.copy()
         step_len = g.step_len.copy()
@@ -464,10 +663,31 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
         srow, j = _csr_expand(k)
         sidx = g.item_step_begin[idxs][srow] + j
         step_len[sidx] = np.clip(valid[srow] - j * n, 0, n)
-        new_groups.append(
-            replace(g, item_kv_len=item_kv_len, step_len=step_len)
+        # The DMA-skip activity arrays depend only on the ACTIVE-STEP
+        # PATTERN (step_len > 0), which within-page growth never changes —
+        # a zero step turns active only when kv crosses into a fresh page.
+        # Recompute + re-upload them only on that (rare) transition, so
+        # the common refresh stays a 2-array upload.
+        act_changed = bool(
+            np.any((step_len[sidx] > 0) != (g.step_len[sidx] > 0))
         )
-        touched.append(True)
+        if act_changed:
+            step_ord, act_steps, act_total = _activity_arrays(step_len)
+            new_groups.append(
+                replace(
+                    g,
+                    item_kv_len=item_kv_len,
+                    step_len=step_len,
+                    step_ord=step_ord,
+                    act_steps=act_steps,
+                    act_total=act_total,
+                )
+            )
+        else:
+            new_groups.append(
+                replace(g, item_kv_len=item_kv_len, step_len=step_len)
+            )
+        touched.append((True, act_changed))
     new_wp = WorkPlan(
         groups=new_groups,
         part_rows=wp.part_rows,
@@ -477,28 +697,40 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
         page_size=wp.page_size,
         strategy=wp.strategy,
         total_partial_rows=wp.total_partial_rows,
+        split_queries=wp.split_queries,
+        split_part_rows=wp.split_part_rows,
+        split_qh=wp.split_qh,
+        total_split_rows=wp.total_split_rows,
         meta=wp.meta,
     )
     if wp.device is not None:
         dgs = []
-        for g_new, dg, was_touched in zip(new_groups, wp.device.groups, touched):
+        for g_new, dg, (was_touched, act_changed) in zip(
+            new_groups, wp.device.groups, touched
+        ):
             if not was_touched:
                 dgs.append(dg)
                 continue
             Sp = dg.step_len.shape[0]
             Tp = dg.item_kv_len.shape[0]
-            dgs.append(
-                replace(
-                    dg,
-                    step_len=jnp.asarray(_pad_rows(g_new.step_len, Sp)),
-                    item_kv_len=jnp.asarray(_pad_rows(g_new.item_kv_len, Tp)),
-                )
+            upd = dict(
+                step_len=jnp.asarray(_pad_rows(g_new.step_len, Sp)),
+                item_kv_len=jnp.asarray(_pad_rows(g_new.item_kv_len, Tp)),
             )
+            if act_changed:
+                upd.update(
+                    step_ord=jnp.asarray(_pad_rows(g_new.step_ord, Sp)),
+                    act_steps=jnp.asarray(_pad_rows(g_new.act_steps, Sp)),
+                    act_total=jnp.asarray(g_new.act_total),
+                )
+            dgs.append(replace(dg, **upd))
             _DEVICE_STATS["refresh_uploads"] += 1
-            _DEVICE_STATS["arrays_uploaded"] += 2
+            _DEVICE_STATS["arrays_uploaded"] += len(upd)
         new_wp.device = DeviceWorkPlan(
             groups=dgs,
-            part_rows=wp.device.part_rows,
+            split_part_rows=wp.device.split_part_rows,
+            split_qh=wp.device.split_qh,
+            split_cap=wp.device.split_cap,
             bucketed=wp.device.bucketed,
         )
     return new_wp

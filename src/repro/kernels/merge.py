@@ -1,17 +1,24 @@
 """Output-merge kernel (paper §7): online-softmax combine of partials.
 
-The forward stage emits, per packed row, an unnormalised fp32 numerator
-``o`` plus ``(max, denom)`` stats. For each (query, head) the merge combines
-its P partial rows:
+The forward stage emits, per SPLIT packed row (a row whose query's KV was
+genuinely decomposed across work items), an unnormalised fp32 numerator
+``o`` plus ``(max, denom)`` stats. For each split (query, head) the merge
+combines its P partial rows:
 
     M   = max_p m_p
     w_p = exp(m_p - M)
     out = (sum_p w_p * o_p) / (sum_p w_p * l_p)
 
-The gather of partial rows (indexed by the plan's ``part_rows`` table) is
-done by XLA (`jnp.take`) — on TPU a flat gather fuses well — and the
-combine itself runs as a small Pallas kernel over row blocks. A pure-jnp
-path (`ref.merge_partials_ref`) is the oracle and the dry-run fallback.
+Split-aware datapath (DESIGN.md §3): `merge_rows` consumes a COMPACT table
+``rows_table [R, P]`` whose R rows are exactly the split (query, head)
+pairs — single-partial queries were normalised in the forward epilogue and
+never reach this stage. The gather of partial rows is done by XLA
+(`jnp.take`) — on TPU a flat gather fuses well — and the combine itself
+runs as a small Pallas kernel over row blocks; the caller scatters the
+merged rows into the same [B, Hq, dv] output the fast path wrote. A
+pure-jnp path (`ref.merge_rows_ref`) is the oracle and the dry-run
+fallback. `merge_partials` keeps the legacy dense [B, Hq, P] signature as
+a thin wrapper for oracle-style callers.
 """
 
 from __future__ import annotations
@@ -41,21 +48,20 @@ def _merge_kernel(o_ref, st_ref, valid_ref, out_ref, *, P: int):
     out_ref[...] = num / jnp.maximum(den, 1e-30)
 
 
-def merge_partials(
-    partial_o: jax.Array,  # [R, dv] fp32
-    partial_stats: jax.Array,  # [R, 2] fp32
-    part_rows: jax.Array,  # [B, Hq, P] int32 (-1 pad)
+def merge_rows(
+    partial_o: jax.Array,  # [R_buf, dv] fp32 compact split-row numerators
+    partial_stats: jax.Array,  # [R_buf, 2] fp32
+    rows_table: jax.Array,  # [R, P] int32 (-1 pad)
     *,
     rows_block: int = 8,
     interpret: bool = True,
 ) -> jax.Array:
-    """Returns [B, Hq, dv] fp32 merged outputs."""
-    B, Hq, P = part_rows.shape
+    """Merges each table row's partials; returns [R, dv] fp32."""
+    R, P = rows_table.shape
     dv = partial_o.shape[-1]
-    R = B * Hq
     Rpad = -(-R // rows_block) * rows_block
 
-    flat = part_rows.reshape(R, P)
+    flat = rows_table
     if Rpad != R:
         flat = jnp.concatenate(
             [flat, jnp.full((Rpad - R, P), -1, flat.dtype)], axis=0
@@ -78,4 +84,26 @@ def merge_partials(
         interpret=interpret,
         name="pat_merge",
     )(g_o, g_st, valid)
-    return out[:R].reshape(B, Hq, dv)
+    return out[:R]
+
+
+def merge_partials(
+    partial_o: jax.Array,  # [R, dv] fp32
+    partial_stats: jax.Array,  # [R, 2] fp32
+    part_rows: jax.Array,  # [B, Hq, P] int32 (-1 pad)
+    *,
+    rows_block: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Legacy dense-table entry point; returns [B, Hq, dv] fp32 merged
+    outputs. The executed datapath uses `merge_rows` on the compact
+    split-only table instead."""
+    B, Hq, P = part_rows.shape
+    out = merge_rows(
+        partial_o,
+        partial_stats,
+        part_rows.reshape(B * Hq, P),
+        rows_block=rows_block,
+        interpret=interpret,
+    )
+    return out.reshape(B, Hq, -1)

@@ -1,22 +1,34 @@
 """Jit-cached, device-resident dispatch for the PAT kernels.
 
-`pat_paged_attention` executes a WorkPlan: per tile group it packs the Q
-rows, runs the forward kernel (Pallas, or an XLA fallback with identical
-semantics for the multi-device dry-run), then merges partials per query.
+`pat_paged_attention` executes a WorkPlan through the SPLIT-AWARE merge
+datapath (DESIGN.md §3): per tile group it packs the Q rows and runs the
+forward kernel (Pallas, or an XLA fallback with identical semantics), then
+
+  * FAST PATH — rows whose query landed in exactly ONE work item (the
+    dominant fraction of a typical decode batch) come out of the forward
+    epilogue already normalised (acc / l) and are scattered straight into
+    the final [B, Hq, dv] output. No fp32 partials, no stats, no merge
+    read-back: their only HBM write is the output itself.
+  * SLOW PATH — rows of genuinely decomposed (split) queries keep the
+    unnormalised numerator + (max, denom) stats contract. They are
+    compacted into split-only partial buffers (sized for split rows, not
+    for the whole batch — there is no cross-group concatenation of full
+    partial tensors), merged through the compact ``split_part_rows``
+    table, and the merged rows are scattered into the same output.
 
 Dispatch (ISSUE 1 tentpole): plans coming off the lazy-update cache are
 device-resident (`WorkPlan.to_device()` uploaded their arrays once, padded
-to power-of-two (S, T, P) buckets) and execute through ONE jitted
-forward+merge whose cache key is the bucketed shape signature — so a given
-(m, n, S_bucket, T_bucket, dk, dv) compiles once and is reused across
-decode steps, layers, and batches. The legacy per-call path (host arrays
-moved with `jnp.asarray` at every invocation, eager op dispatch) remains
-for plans built directly by `build_work_plan`, e.g. one-shot tests; pass
+to power-of-two buckets) and execute through ONE jitted forward+merge whose
+cache key is the bucketed shape signature — so a given (m, n, S_bucket,
+T_bucket, dk, dv, split_cap) compiles once and is reused across decode
+steps, layers, and batches. The legacy per-call path (host arrays moved
+with `jnp.asarray` at every invocation, eager op dispatch) remains for
+plans built directly by `build_work_plan`, e.g. one-shot tests; pass
 ``dispatch="jit"`` / ``dispatch="eager"`` to force either.
 
 The XLA fallback exists because Pallas TPU kernels cannot be compiled for a
-CPU host-platform target; it computes the same unnormalised partials from
-the same plan arrays, so tests assert the two paths are numerically
+CPU host-platform target; it computes the same (sole-normalised) partials
+from the same plan arrays, so tests assert the two paths are numerically
 identical and the dry-run's memory/collective profile stays representative.
 """
 
@@ -32,12 +44,17 @@ import numpy as np
 from repro.kernels import merge as merge_mod
 from repro.kernels import pat_decode
 from repro.kernels import ref as ref_mod
-from repro.core.work_plan import TileGroupPlan, WorkPlan
+from repro.core.work_plan import DeviceGroupArrays, TileGroupPlan, WorkPlan
 
 # Instrumentation for the overhead benchmark and the dispatch-cache
 # regression test: `traces` increments only when jax actually (re)traces the
 # forward+merge — zero growth across steps means the jit cache is warm.
 _DISPATCH_STATS = {"traces": 0, "jit_calls": 0, "eager_calls": 0}
+
+# Bound on the one-shot page gather of the XLA fallback: items are
+# processed in chunks of this many, so the gathered KV working set is
+# O(chunk * max_pages * page) instead of O(T * max_pages * page).
+XLA_ITEM_CHUNK = 16
 
 
 def dispatch_stats() -> dict:
@@ -70,31 +87,30 @@ def pack_q_rows(
     return packed.reshape(T, m, num_kv_heads, dk).transpose(0, 2, 1, 3)
 
 
-def xla_group_forward(
-    q_packed: jax.Array,  # [T, Hkv, m, dk]
+def _xla_items_forward(
+    q_packed: jax.Array,  # [c, Hkv, m, dk]
     k_pages: jax.Array,  # [Hkv, P, page, dk]
     v_pages: Optional[jax.Array],
-    item_pages: jax.Array,  # [T, maxp] int32
-    item_kv_len: jax.Array,  # [T] int32
+    item_pages: jax.Array,  # [c, maxp] int32
+    item_kv_len: jax.Array,  # [c] int32
     *,
     scale: float,
-    v_head_dim: Optional[int] = None,
+    dv: int,
 ) -> Tuple[jax.Array, jax.Array]:
-    """XLA-only forward with kernel-identical semantics (unnormalised
+    """Kernel-identical forward over one chunk of items (unnormalised
     partials + stats)."""
-    T, Hkv, m, dk = q_packed.shape
+    c, Hkv, m, dk = q_packed.shape
     share_kv = v_pages is None
-    dv = v_head_dim if share_kv else v_pages.shape[-1]
     maxp, page = item_pages.shape[1], k_pages.shape[2]
     L = maxp * page
 
-    k_it = jnp.take(k_pages, item_pages.reshape(-1), axis=1)  # [Hkv, T*maxp, page, dk]
-    k_it = k_it.reshape(Hkv, T, L, dk).transpose(1, 0, 2, 3)  # [T, Hkv, L, dk]
+    k_it = jnp.take(k_pages, item_pages.reshape(-1), axis=1)  # [Hkv, c*maxp, page, dk]
+    k_it = k_it.reshape(Hkv, c, L, dk).transpose(1, 0, 2, 3)  # [c, Hkv, L, dk]
     if share_kv:
         v_it = k_it[..., :dv]
     else:
         v_it = jnp.take(v_pages, item_pages.reshape(-1), axis=1)
-        v_it = v_it.reshape(Hkv, T, L, dv).transpose(1, 0, 2, 3)
+        v_it = v_it.reshape(Hkv, c, L, dv).transpose(1, 0, 2, 3)
 
     scores = (
         jnp.einsum(
@@ -104,33 +120,123 @@ def xla_group_forward(
         )
         * scale
     )
-    mask = jnp.arange(L)[None, :] < item_kv_len[:, None]  # [T, L]
+    mask = jnp.arange(L)[None, :] < item_kv_len[:, None]  # [c, L]
     scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
-    m_i = jnp.max(scores, axis=-1)  # [T, Hkv, m]
+    m_i = jnp.max(scores, axis=-1)  # [c, Hkv, m]
     # all-masked items (0 valid tokens: pre-allocated pages only) must not
     # produce NaNs; their (m=-inf, l=0) partials carry zero merge weight
     m_safe = jnp.where(jnp.isfinite(m_i), m_i, 0.0)
     p = jnp.exp(scores - m_safe[..., None])
     p = jnp.where(mask[:, None, None, :], p, 0.0)
-    l_i = jnp.sum(p, axis=-1)  # [T, Hkv, m]
+    l_i = jnp.sum(p, axis=-1)  # [c, Hkv, m]
     num = jnp.einsum("thml,thld->thmd", p, v_it.astype(jnp.float32))
-    stats = jnp.stack([m_i, l_i], axis=2)  # [T, Hkv, 2, m]
+    stats = jnp.stack([m_i, l_i], axis=2)  # [c, Hkv, 2, m]
     return num, stats
 
 
-def _group_arrays(g: TileGroupPlan):
+def xla_group_forward(
+    q_packed: jax.Array,  # [T, Hkv, m, dk]
+    k_pages: jax.Array,  # [Hkv, P, page, dk]
+    v_pages: Optional[jax.Array],
+    item_pages: jax.Array,  # [T, maxp] int32
+    item_kv_len: jax.Array,  # [T] int32
+    *,
+    scale: float,
+    v_head_dim: Optional[int] = None,
+    row_sole: Optional[jax.Array] = None,  # [T, m] int32 fast-path flags
+    item_chunk: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """XLA-only forward with kernel-identical semantics.
+
+    Items are processed in chunks of ``item_chunk`` (default
+    ``XLA_ITEM_CHUNK``), so the page gather materialises at most
+    ``item_chunk * maxp`` pages at a time instead of the whole group's
+    ``T * maxp`` — keeping the CPU fallback usable at production batch/KV
+    sizes. Under jit the chunks run as a `lax.map` (compiled once); on the
+    eager path they run as a python loop, because an eager `lax.map`
+    re-traces its body on every call. Rows flagged in ``row_sole`` are
+    returned normalised (final values), matching the Pallas epilogue."""
+    T, Hkv, m, dk = q_packed.shape
+    share_kv = v_pages is None
+    dv = v_head_dim if share_kv else v_pages.shape[-1]
+    c = XLA_ITEM_CHUNK if item_chunk is None else item_chunk
+
+    if T <= c:
+        num, stats = _xla_items_forward(
+            q_packed, k_pages, v_pages, item_pages, item_kv_len,
+            scale=scale, dv=dv,
+        )
+    elif not isinstance(q_packed, jax.core.Tracer):
+        outs = [
+            _xla_items_forward(
+                q_packed[j : j + c], k_pages, v_pages,
+                item_pages[j : j + c], item_kv_len[j : j + c],
+                scale=scale, dv=dv,
+            )
+            for j in range(0, T, c)
+        ]
+        num = jnp.concatenate([o for o, _ in outs], axis=0)
+        stats = jnp.concatenate([s for _, s in outs], axis=0)
+    else:
+        Tp = -(-T // c) * c
+        qp = jnp.pad(q_packed, ((0, Tp - T), (0, 0), (0, 0), (0, 0)))
+        ip = jnp.pad(item_pages, ((0, Tp - T), (0, 0)))
+        ikl = jnp.pad(item_kv_len, (0, Tp - T))
+        nc = Tp // c
+
+        def chunk_fn(args):
+            qc, ic, lc = args
+            return _xla_items_forward(
+                qc, k_pages, v_pages, ic, lc, scale=scale, dv=dv
+            )
+
+        num, stats = jax.lax.map(
+            chunk_fn,
+            (
+                qp.reshape(nc, c, Hkv, m, dk),
+                ip.reshape(nc, c, -1),
+                ikl.reshape(nc, c),
+            ),
+        )
+        num = num.reshape(Tp, Hkv, m, dv)[:T]
+        stats = stats.reshape(Tp, Hkv, 2, m)[:T]
+
+    if row_sole is not None:
+        num = ref_mod.sole_normalize_ref(num, stats, row_sole)
+    return num, stats
+
+
+def _host_group_arrays(
+    g: TileGroupPlan, split_base: int, split_cap: int
+) -> DeviceGroupArrays:
     """Legacy per-call upload of one group's host arrays (eager path only;
-    the hot path uses the plan's device-resident copies instead)."""
-    return (
-        jnp.asarray(g.step_item),
-        jnp.asarray(g.step_pages),
-        jnp.asarray(g.step_len),
-        jnp.asarray(g.step_start),
-        jnp.asarray(g.step_end),
-        jnp.asarray(g.row_query),
-        jnp.asarray(g.row_group),
-        jnp.asarray(g.item_pages),
-        jnp.asarray(g.item_kv_len),
+    the hot path uses the plan's device-resident copies instead).
+    DeviceGroupArrays is a registered pytree, so both paths hand the SAME
+    structure to the forward+merge body — one field list, no parallel
+    positional tuples."""
+    n_split = g.num_split_rows
+    split_dst = split_base + np.arange(max(1, n_split), dtype=np.int32)
+    if n_split == 0:
+        split_dst = np.full(1, max(split_cap, 1), np.int32)
+    split_src = g.split_src if n_split else np.zeros(1, np.int32)
+    return DeviceGroupArrays(
+        kv_tile=g.tile.n,
+        pages_per_block=g.pages_per_block,
+        step_item=jnp.asarray(g.step_item),
+        step_pages=jnp.asarray(g.step_pages),
+        step_len=jnp.asarray(g.step_len),
+        step_start=jnp.asarray(g.step_start),
+        step_end=jnp.asarray(g.step_end),
+        step_ord=jnp.asarray(g.step_ord),
+        act_steps=jnp.asarray(g.act_steps),
+        act_total=jnp.asarray(g.act_total),
+        row_query=jnp.asarray(g.row_query),
+        row_group=jnp.asarray(g.row_group),
+        row_sole=jnp.asarray(g.row_sole),
+        item_pages=jnp.asarray(g.item_pages),
+        item_kv_len=jnp.asarray(g.item_kv_len),
+        split_src=jnp.asarray(split_src),
+        split_dst=jnp.asarray(split_dst),
     )
 
 
@@ -138,83 +244,123 @@ def _forward_merge(
     q: jax.Array,
     k_pages: jax.Array,
     v_pages: Optional[jax.Array],
-    group_arrays: Tuple,  # per group: the 9-tuple of plan arrays
-    part_rows: jax.Array,
+    group_arrays: Tuple,  # per group: DeviceGroupArrays (pytree)
+    split_table: jax.Array,  # [R_split, P] compact merge table
+    split_qh: jax.Array,  # [R_split] output rows of merged results
     *,
-    kv_tiles: Tuple[int, ...],
     scale: float,
     impl: str,
     merge_impl: str,
     v_head_dim: Optional[int],
     num_kv_heads: int,
+    split_cap: int,
     interpret: bool,
 ) -> jax.Array:
-    """Shared pack -> forward -> merge body (traced under jit on the hot
-    path, executed eagerly on the legacy path)."""
+    """Shared pack -> forward -> split-aware merge body (traced under jit
+    on the hot path, executed eagerly on the legacy path)."""
+    B, Hq, _ = q.shape
     Hkv = num_kv_heads
+    G = Hq // Hkv
     dv = v_head_dim if v_pages is None else v_pages.shape[-1]
-    os, sts = [], []
-    for (si, sp, sl, ss, se, rq, rg, ip, ikl), n in zip(group_arrays, kv_tiles):
+    # Every output row is written exactly once: sole rows by the fast-path
+    # scatter, split rows by the merge scatter. Padded scatter entries
+    # carry an out-of-bounds destination and are dropped.
+    out = jnp.zeros((B * Hq, dv), jnp.float32)
+    use_slow = split_cap > 0 and split_table.shape[0] > 0
+    if use_slow:
+        split_o = jnp.zeros((split_cap, dv), jnp.float32)
+        split_st = jnp.zeros((split_cap, 2), jnp.float32)
+
+    for ga in group_arrays:
+        rq, rg = ga.row_query, ga.row_group
         qp = pack_q_rows(q, rq, rg, Hkv)
         if impl == "pallas":
             o, st = pat_decode.pat_decode_forward(
                 qp,
                 k_pages,
                 v_pages,
-                si,
-                sp,
-                sl,
-                ss,
-                se,
-                kv_tile=n,
+                ga.step_item,
+                ga.step_pages,
+                ga.step_len,
+                ga.step_start,
+                ga.step_end,
+                ga.step_ord,
+                ga.act_steps,
+                ga.act_total,
+                ga.row_sole,
+                kv_tile=ga.kv_tile,
                 scale=scale,
                 v_head_dim=dv,
                 interpret=interpret,
             )
         elif impl == "xla":
             o, st = xla_group_forward(
-                qp, k_pages, v_pages, ip, ikl, scale=scale, v_head_dim=dv
+                qp, k_pages, v_pages, ga.item_pages, ga.item_kv_len,
+                scale=scale, v_head_dim=dv, row_sole=ga.row_sole,
             )
         else:
             raise ValueError(impl)
         T, _, m, _ = qp.shape
-        os.append(o.reshape(T * Hkv * m, dv))
-        sts.append(st.transpose(0, 1, 3, 2).reshape(T * Hkv * m, 2))
+        flat_o = o.reshape(T * Hkv * m, dv)
 
-    big_o = jnp.concatenate(os, axis=0)
-    big_st = jnp.concatenate(sts, axis=0)
-    if merge_impl == "pallas":
-        out = merge_mod.merge_partials(big_o, big_st, part_rows, interpret=interpret)
-    else:
-        out = ref_mod.merge_partials_ref(big_o, big_st, part_rows)
-    return out.astype(q.dtype)
+        # fast path: sole rows are final — scatter them straight into the
+        # output (this cast to the output dtype is their ONLY HBM write in
+        # the modeled datapath; no partials, no stats, no merge read-back)
+        h_ix = jnp.arange(Hkv, dtype=jnp.int32)[None, :, None]
+        dst = rq[:, None, :] * Hq + h_ix * G + rg[:, None, :]
+        sole = (ga.row_sole > 0) & (rq >= 0)
+        dst = jnp.where(sole[:, None, :], dst, B * Hq)
+        out = out.at[dst.reshape(-1)].set(flat_o, mode="drop")
+
+        # slow path: compact this group's split rows into the split-only
+        # partial buffers (sized for split rows, not the whole batch)
+        if use_slow:
+            flat_st = st.transpose(0, 1, 3, 2).reshape(T * Hkv * m, 2)
+            rows_o = jnp.take(flat_o, ga.split_src, axis=0)
+            rows_st = jnp.take(flat_st, ga.split_src, axis=0)
+            split_o = split_o.at[ga.split_dst].set(rows_o, mode="drop")
+            split_st = split_st.at[ga.split_dst].set(rows_st, mode="drop")
+
+    if use_slow:
+        if merge_impl == "pallas":
+            merged = merge_mod.merge_rows(
+                split_o, split_st, split_table, interpret=interpret
+            )
+        else:
+            merged = ref_mod.merge_rows_ref(split_o, split_st, split_table)
+        out = out.at[split_qh].set(merged, mode="drop")
+    return out.reshape(B, Hq, dv).astype(q.dtype)
 
 
 def _traced_forward_merge(
-    q, k_pages, v_pages, group_arrays, part_rows,
-    *, kv_tiles, scale, impl, merge_impl, v_head_dim, num_kv_heads, interpret,
+    q, k_pages, v_pages, group_arrays, split_table, split_qh,
+    *, scale, impl, merge_impl, v_head_dim, num_kv_heads,
+    split_cap, interpret,
 ):
     # runs only when jax traces (i.e. on a jit-cache miss)
     _DISPATCH_STATS["traces"] += 1
     return _forward_merge(
-        q, k_pages, v_pages, group_arrays, part_rows,
-        kv_tiles=kv_tiles, scale=scale, impl=impl, merge_impl=merge_impl,
-        v_head_dim=v_head_dim, num_kv_heads=num_kv_heads, interpret=interpret,
+        q, k_pages, v_pages, group_arrays, split_table, split_qh,
+        scale=scale, impl=impl, merge_impl=merge_impl,
+        v_head_dim=v_head_dim, num_kv_heads=num_kv_heads,
+        split_cap=split_cap, interpret=interpret,
     )
 
 
 # One jitted entry point: jax's jit cache keys on the static config plus the
-# (bucketed) shapes/dtypes of every argument array, which IS the dispatch
-# signature (m, n, S_bucket, T_bucket, dk, dv, B, Hq, ...).
+# (bucketed) shapes/dtypes of every argument array — DeviceGroupArrays is a
+# pytree whose (kv_tile, pages_per_block) metadata is part of the treedef —
+# which IS the dispatch signature (m, n, S_bucket, T_bucket, dk, dv,
+# split_cap, B, Hq, ...).
 _forward_merge_jit = jax.jit(
     _traced_forward_merge,
     static_argnames=(
-        "kv_tiles",
         "scale",
         "impl",
         "merge_impl",
         "v_head_dim",
         "num_kv_heads",
+        "split_cap",
         "interpret",
     ),
 )
@@ -233,7 +379,8 @@ def pat_paged_attention(
     interpret: bool = True,
     dispatch: str = "auto",  # "auto" | "jit" | "eager"
 ) -> jax.Array:
-    """Full pack->forward->merge decode attention. Returns [B, Hq, dv].
+    """Full pack->forward->split-aware-merge decode attention. Returns
+    [B, Hq, dv].
 
     ``dispatch="auto"`` uses the jit-cached device-resident path whenever
     the plan has already been uploaded (plans served by the lazy-update
@@ -248,51 +395,41 @@ def pat_paged_attention(
     use_jit = dispatch == "jit" or (dispatch == "auto" and wp.device is not None)
     if use_jit:
         dwp = wp.to_device()
-        group_arrays = tuple(
-            (
-                g.step_item,
-                g.step_pages,
-                g.step_len,
-                g.step_start,
-                g.step_end,
-                g.row_query,
-                g.row_group,
-                g.item_pages,
-                g.item_kv_len,
-            )
-            for g in dwp.groups
-        )
-        kv_tiles = tuple(g.kv_tile for g in dwp.groups)
         _DISPATCH_STATS["jit_calls"] += 1
         return _forward_merge_jit(
             q,
             k_pages,
             v_pages,
-            group_arrays,
-            dwp.part_rows,
-            kv_tiles=kv_tiles,
+            tuple(dwp.groups),
+            dwp.split_part_rows,
+            dwp.split_qh,
             scale=float(scale),
             impl=impl,
             merge_impl=merge_impl,
             v_head_dim=dv,
             num_kv_heads=Hkv,
+            split_cap=dwp.split_cap,
             interpret=interpret,
         )
 
     _DISPATCH_STATS["eager_calls"] += 1
-    group_arrays = tuple(_group_arrays(g) for g in wp.groups)
-    kv_tiles = tuple(g.tile.n for g in wp.groups)
+    group_arrays = []
+    split_base = 0
+    for g in wp.groups:
+        group_arrays.append(_host_group_arrays(g, split_base, wp.total_split_rows))
+        split_base += g.num_split_rows
     return _forward_merge(
         q,
         k_pages,
         v_pages,
-        group_arrays,
-        jnp.asarray(wp.part_rows),
-        kv_tiles=kv_tiles,
+        tuple(group_arrays),
+        jnp.asarray(wp.split_part_rows),
+        jnp.asarray(wp.split_qh),
         scale=scale,
         impl=impl,
         merge_impl=merge_impl,
         v_head_dim=dv,
         num_kv_heads=Hkv,
+        split_cap=wp.total_split_rows,
         interpret=interpret,
     )

@@ -11,15 +11,30 @@ inter-item padding steps, so the execution bubble the GPU design fights
 never materialises (DESIGN.md §2).
 
 Memory movement (the part the paper optimises):
-  * K/V pages live in HBM (`memory_space=ANY`); each grid step DMAs the
-    ``pages_per_block`` pages of its KV tile into a double-buffered VMEM
-    scratch via `pltpu.make_async_copy` — the `cp_async` + double-buffering
-    structure of the paper, driven by scalar-prefetched page tables.
+  * K/V pages live in HBM (`memory_space=ANY`); each ACTIVE grid step DMAs
+    the ``pages_per_block`` pages of its KV tile into a double-buffered
+    VMEM scratch via `pltpu.make_async_copy` — the `cp_async` +
+    double-buffering structure of the paper, driven by scalar-prefetched
+    page tables.
+  * Steps with ``step_len == 0`` cover nothing but pre-allocated (not yet
+    filled) pages — the lazy update keeps them in the plan so the
+    fingerprint stays stable while the batch grows. They issue NO K/V DMA
+    at all: the double-buffer pipeline is driven by the scalar-prefetched
+    activity arrays (``step_ord`` ranks active steps, ``act_steps`` lists
+    them, ``act_total`` counts them), so buffer parity follows the count
+    of DMAs actually issued and stays correct across skipped steps
+    (DESIGN.md §4). Before this, every pre-allocated page was fetched and
+    discarded on every decode step — pure wasted bandwidth.
   * The packed Q tile [m, dk] is a regular BlockSpec input; because
     consecutive steps of one item share the block index, Pallas keeps it
     resident in VMEM (loaded once per item, not once per step).
-  * Outputs are *unnormalised* partial numerators + (max, denom) stats per
-    packed row; the merge kernel (merge.py) combines them per query.
+  * Outputs: rows whose query has exactly ONE partial (``row_sole``) are
+    normalised in the epilogue (acc / l) and are FINAL — the dispatch
+    scatters them straight into the [B, Hq, dv] output, so they never
+    round-trip unnormalised fp32 partials + stats through HBM. Rows of
+    split queries keep the unnormalised numerator + (max, denom) stats
+    contract; the merge kernel (merge.py) combines them per query
+    (DESIGN.md §3).
 
 GQA packing: a query contributes ``group_size = Hq // Hkv`` rows per KV
 head, so even single-query items present >=4 MMA rows on typical GQA
@@ -50,8 +65,12 @@ def _kernel(
     step_len_ref,  # [S]
     step_start_ref,  # [S]
     step_end_ref,  # [S]
+    step_ord_ref,  # [S] rank among active steps
+    act_steps_ref,  # [S] indices of active steps (0-padded tail)
+    act_total_ref,  # [1] number of active steps
     # --- inputs ---
     q_ref,  # VMEM block (1, 1, m, dk)
+    row_sole_ref,  # VMEM block (1, m) int32: 1 = single-partial query row
     k_hbm,  # ANY [Hkv, P, page, dk]
     v_hbm,  # ANY [Hkv, P, page, dv] (aliases k_hbm when share_kv)
     # --- outputs ---
@@ -79,10 +98,15 @@ def _kernel(
 ):
     h = pl.program_id(0)
     s = pl.program_id(1)
-    # Double-buffer slot follows the *linear* grid index so parity stays
-    # consistent across the (h, S-1) -> (h+1, 0) wrap even for odd S.
-    lin = h * total_steps + s
-    slot = jax.lax.rem(lin, 2)
+    # The DMA pipeline advances over ACTIVE steps only (zero-token DMA
+    # skip). Buffer parity therefore follows the *active* linear index
+    # h * A + a — one slot flip per DMA actually issued — so it stays
+    # consistent across skipped steps and across the (h, last-active) ->
+    # (h+1, first-active) wrap even for odd active counts.
+    A = act_total_ref[0]
+    a = step_ord_ref[s]
+    active = step_len_ref[s] > 0
+    slot = jax.lax.rem(h * A + a, 2)
 
     def start_copies(head_idx, step_idx, buf_slot):
         for j in range(ppb):
@@ -99,10 +123,11 @@ def _kernel(
 
     def wait_copies(head_idx, step_idx, buf_slot):
         # Waits must be built from the same (head, page) descriptors whose
-        # copies were started (warm-up or the previous step's prefetch):
-        # a wait on a dummy ref like k_hbm.at[h, 0] happens to decrement the
-        # right semaphore today, but silently skews the bookkeeping the
-        # moment source shapes diverge from the started copy's.
+        # copies were started (warm-up or the previous active step's
+        # prefetch): a wait on a dummy ref like k_hbm.at[h, 0] happens to
+        # decrement the right semaphore today, but silently skews the
+        # bookkeeping the moment source shapes diverge from the started
+        # copy's.
         for j in range(ppb):
             pid = step_pages_ref[step_idx, j]
             pltpu.make_async_copy(
@@ -117,21 +142,28 @@ def _kernel(
                     v_sems.at[buf_slot, j],
                 ).wait()
 
-    # Warm-up: the very first step of the whole grid issues its own copies.
-    @pl.when(lin == 0)
+    # Warm-up: the very first ACTIVE step of the whole grid issues its own
+    # copies (inactive steps before it touch no buffer).
+    @pl.when(jnp.logical_and(h == 0, jnp.logical_and(active, a == 0)))
     def _():
-        start_copies(0, 0, 0)
+        start_copies(0, s, 0)
 
-    wait_copies(h, s, slot)
-
-    # Prefetch the next grid step's pages into the other buffer. At the
-    # (h, S-1) -> (h+1, 0) wrap the *next head's* step-0 pages are fetched.
-    is_last_overall = lin == num_kv_heads * total_steps - 1
-
-    @pl.when(jnp.logical_not(is_last_overall))
+    @pl.when(active)
     def _():
-        wrap = s == total_steps - 1
-        nxt_s = jnp.where(wrap, 0, s + 1)
+        wait_copies(h, s, slot)
+
+    # Prefetch the NEXT ACTIVE step's pages into the other buffer. At the
+    # (h, last-active) -> (h+1, first-active) wrap the *next head's* first
+    # active step's pages are fetched. Inactive steps issue nothing.
+    is_last_overall = jnp.logical_and(h == num_kv_heads - 1, a == A - 1)
+
+    @pl.when(jnp.logical_and(active, jnp.logical_not(is_last_overall)))
+    def _():
+        wrap = a == A - 1
+        nxt_idx = jnp.where(
+            wrap, 0, jnp.minimum(a + 1, total_steps - 1)
+        )
+        nxt_s = act_steps_ref[nxt_idx]
         nxt_h = jnp.where(wrap, h + 1, h)
         start_copies(nxt_h, nxt_s, 1 - slot)
 
@@ -144,9 +176,9 @@ def _kernel(
 
     valid = step_len_ref[s]
 
-    # Steps over pre-allocated (not yet filled) pages carry 0 valid tokens
-    # (lazy-update plans are stable across decode steps); they skip compute
-    # entirely — the DMA pipeline above still advances for simplicity.
+    # Inactive steps (0 valid tokens: pre-allocated pages only) skip both
+    # the DMA above and the compute below; the accumulator state simply
+    # carries across them.
     @pl.when(valid > 0)
     def _():
         q = q_ref[0, 0]  # (m, dk)
@@ -189,10 +221,16 @@ def _kernel(
         m_scr[...] = jnp.broadcast_to(m_cur, m_scr.shape)
         l_scr[...] = jnp.broadcast_to(l_cur, l_scr.shape)
 
-    # --- flush partials on the item's final step ---------------------------
+    # --- epilogue on the item's final step ---------------------------------
+    # Single-partial (sole) rows are normalised here and become FINAL
+    # output rows — no merge pass ever reads them back. Split rows keep
+    # the unnormalised-numerator contract for the online-softmax merge.
     @pl.when(step_end_ref[s] == 1)
     def _():
-        o_ref[0, 0] = acc_ref[...]
+        l = l_scr[:, 0:1]  # (m, 1)
+        sole = (row_sole_ref[0] > 0)[:, None]  # (m, 1)
+        inv = jnp.where(sole, 1.0 / jnp.maximum(l, 1e-30), 1.0)
+        o_ref[0, 0] = acc_ref[...] * inv
         stats_ref[0, 0, 0, :] = m_scr[:, 0]
         stats_ref[0, 0, 1, :] = l_scr[:, 0]
 
@@ -206,6 +244,10 @@ def pat_decode_forward(
     step_len: jax.Array,  # [S] int32
     step_start: jax.Array,  # [S] int32
     step_end: jax.Array,  # [S] int32
+    step_ord: jax.Array,  # [S] int32 rank among active steps
+    act_steps: jax.Array,  # [S] int32 active step indices (0-padded)
+    act_total: jax.Array,  # [1] int32 active step count
+    row_sole: jax.Array,  # [T, m] int32 fast-path flags
     *,
     kv_tile: int,
     scale: float,
@@ -213,7 +255,9 @@ def pat_decode_forward(
     interpret: bool = True,
 ):
     """Runs one tile group; returns (partial_o [T,Hkv,m,dv] fp32,
-    stats [T,Hkv,2,m] fp32)."""
+    stats [T,Hkv,2,m] fp32). Rows flagged in ``row_sole`` come back
+    already normalised (final values); all other rows are unnormalised
+    partial numerators to be combined by the merge kernel."""
     T, Hkv, m, dk = q_packed.shape
     share_kv = v_pages is None
     if share_kv:
@@ -242,12 +286,16 @@ def pat_decode_forward(
     )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,
+        num_scalar_prefetch=8,
         grid=(Hkv, S),
         in_specs=[
             pl.BlockSpec(
                 (1, 1, m, dk),
-                lambda h, s, si, sp, sl, ss, se: (si[s], h, 0, 0),
+                lambda h, s, *refs: (refs[0][s], h, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, m),
+                lambda h, s, *refs: (refs[0][s], 0),
             ),
             pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
@@ -255,11 +303,11 @@ def pat_decode_forward(
         out_specs=[
             pl.BlockSpec(
                 (1, 1, m, dv),
-                lambda h, s, si, sp, sl, ss, se: (si[s], h, 0, 0),
+                lambda h, s, *refs: (refs[0][s], h, 0, 0),
             ),
             pl.BlockSpec(
                 (1, 1, 2, m),
-                lambda h, s, si, sp, sl, ss, se: (si[s], h, 0, 0),
+                lambda h, s, *refs: (refs[0][s], h, 0, 0),
             ),
         ],
         scratch_shapes=[
@@ -284,5 +332,18 @@ def pat_decode_forward(
         out_shape=out_shapes,
         interpret=interpret,
         name=f"pat_decode_m{m}_n{n}",
-    )(step_item, step_pages, step_len, step_start, step_end, q_packed, k_pages, v_in)
+    )(
+        step_item,
+        step_pages,
+        step_len,
+        step_start,
+        step_end,
+        step_ord,
+        act_steps,
+        act_total,
+        q_packed,
+        row_sole,
+        k_pages,
+        v_in,
+    )
     return partial_o, stats

@@ -1,8 +1,17 @@
 """Pure-jnp oracles for every kernel in this package.
 
 These are the ground truth for all allclose tests: paged decode attention
-over block tables, the online-softmax partial merge, and dense (prefill)
-attention. They are written for clarity, not speed.
+over block tables, the online-softmax partial merge (both the legacy dense
+table and the compact split-only table of the mixed fast/slow datapath),
+the fast path's epilogue normalisation, and dense (prefill) attention.
+They are written for clarity, not speed.
+
+Oracle structure for the split-aware datapath (DESIGN.md §3):
+`paged_attention_ref` is the end-to-end ground truth the mixed path must
+reproduce; `sole_normalize_ref` mirrors the forward epilogue's in-kernel
+normalisation of single-partial rows, and `merge_rows_ref` mirrors the
+compact merge of split rows — so each half of the mixed path can be
+checked in isolation as well as end to end.
 """
 
 from __future__ import annotations
@@ -50,28 +59,56 @@ def paged_attention_ref(
     return jax.vmap(one_query)(jnp.arange(B)).astype(q.dtype)
 
 
+def merge_rows_ref(
+    partial_o: jax.Array,  # [R_buf, dv] fp32 unnormalised numerators
+    partial_stats: jax.Array,  # [R_buf, 2] fp32 (running max, denominator)
+    rows_table: jax.Array,  # [R, P] int32, -1 = padding
+) -> jax.Array:
+    """Online-softmax merge over a flat rows table (paper §7); the oracle
+    for `merge.merge_rows` on the compact split-only table. Returns
+    [R, dv] fp32."""
+    R, P = rows_table.shape
+    dv = partial_o.shape[-1]
+    idx = jnp.maximum(rows_table, 0)
+    valid = (rows_table >= 0)[..., None]  # [R, P, 1]
+    o = jnp.take(partial_o, idx.reshape(-1), axis=0).reshape(R, P, dv)
+    st = jnp.take(partial_stats, idx.reshape(-1), axis=0).reshape(R, P, 2)
+    m_p = jnp.where(valid[..., 0], st[..., 0], -jnp.inf)
+    l_p = jnp.where(valid[..., 0], st[..., 1], 0.0)
+    o = jnp.where(valid, o, 0.0)
+    m_max = jnp.max(m_p, axis=-1, keepdims=True)  # [R, 1]
+    # guard all-invalid rows (table padding)
+    m_max_safe = jnp.where(jnp.isfinite(m_max), m_max, 0.0)
+    w = jnp.where(jnp.isfinite(m_p), jnp.exp(m_p - m_max_safe), 0.0)  # [R, P]
+    num = jnp.einsum("rp,rpd->rd", w, o)
+    den = jnp.sum(w * l_p, axis=-1, keepdims=True)
+    return num / jnp.maximum(den, 1e-30)
+
+
 def merge_partials_ref(
     partial_o: jax.Array,  # [R, dv] fp32 unnormalised numerators
     partial_stats: jax.Array,  # [R, 2] fp32 (running max, denominator)
     part_rows: jax.Array,  # [B, Hq, P] int32, -1 = padding
 ) -> jax.Array:
-    """Online-softmax merge of per-item partial results (paper §7)."""
+    """Online-softmax merge of per-item partial results over the legacy
+    dense [B, Hq, P] table (paper §7)."""
     B, Hq, P = part_rows.shape
-    dv = partial_o.shape[-1]
-    idx = jnp.maximum(part_rows, 0)
-    valid = (part_rows >= 0)[..., None]  # [B, Hq, P, 1]
-    o = jnp.take(partial_o, idx.reshape(-1), axis=0).reshape(B, Hq, P, dv)
-    st = jnp.take(partial_stats, idx.reshape(-1), axis=0).reshape(B, Hq, P, 2)
-    m_p = jnp.where(valid[..., 0], st[..., 0], -jnp.inf)
-    l_p = jnp.where(valid[..., 0], st[..., 1], 0.0)
-    o = jnp.where(valid, o, 0.0)
-    m_max = jnp.max(m_p, axis=-1, keepdims=True)  # [B, Hq, 1]
-    # guard all-invalid rows (cannot happen for live queries)
-    m_max_safe = jnp.where(jnp.isfinite(m_max), m_max, 0.0)
-    w = jnp.where(jnp.isfinite(m_p), jnp.exp(m_p - m_max_safe), 0.0)  # [B,Hq,P]
-    num = jnp.einsum("bhp,bhpd->bhd", w, o)
-    den = jnp.sum(w * l_p, axis=-1, keepdims=True)
-    return num / jnp.maximum(den, 1e-30)
+    out = merge_rows_ref(partial_o, partial_stats, part_rows.reshape(B * Hq, P))
+    return out.reshape(B, Hq, -1)
+
+
+def sole_normalize_ref(
+    partial_o: jax.Array,  # [T, Hkv, m, dv] fp32 unnormalised numerators
+    stats: jax.Array,  # [T, Hkv, 2, m] fp32 (running max, denominator)
+    row_sole: jax.Array,  # [T, m] int32: 1 = single-partial query row
+) -> jax.Array:
+    """Oracle for the forward epilogue's fast path: rows whose query has
+    exactly one partial are normalised (acc / l) in-kernel and become final
+    output rows; all other rows pass through unchanged."""
+    l = stats[:, :, 1, :]  # [T, Hkv, m]
+    sole = (row_sole > 0)[:, None, :]  # [T, 1, m]
+    inv = jnp.where(sole, 1.0 / jnp.maximum(l, 1e-30), 1.0)
+    return partial_o * inv[..., None]
 
 
 def dense_attention_chunked(

@@ -64,7 +64,18 @@ class EngineMetrics:
     decode_time: float = 0.0
     plan_time: float = 0.0
     steps: int = 0
+    # Split-aware datapath observability (DESIGN.md §3): per decode step,
+    # how many queries took the in-kernel-normalised fast path vs the
+    # compact partial+merge slow path. The fast-path fraction is the
+    # fraction of the batch that pays ZERO intermediate HBM traffic.
+    fast_path_queries: int = 0
+    split_queries: int = 0
     finished: List[Request] = field(default_factory=list)
+
+    @property
+    def fast_path_fraction(self) -> float:
+        total = self.fast_path_queries + self.split_queries
+        return self.fast_path_queries / total if total else 1.0
 
 
 class Engine:
@@ -267,6 +278,9 @@ class Engine:
         tp = time.perf_counter()
         wp = self.backend.plan(bt, kv_lens)
         self.metrics.plan_time += time.perf_counter() - tp
+        n_split = wp.num_split_queries
+        self.metrics.split_queries += n_split
+        self.metrics.fast_path_queries += B - n_split
 
         logits = self._paged_decode_step(tokens, positions, wp)
         self.key, sub = jax.random.split(self.key)

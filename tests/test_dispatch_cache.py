@@ -84,12 +84,16 @@ def test_fingerprint_hits_and_single_upload():
     # ...and the static device arrays are the SAME buffers across steps
     d_first, d_last = wps[0].device, wps[-1].device
     assert d_first is not None and d_last is not None
-    assert d_first.part_rows is d_last.part_rows
+    assert d_first.split_part_rows is d_last.split_part_rows
+    assert d_first.split_qh is d_last.split_qh
     for g0, g1 in zip(d_first.groups, d_last.groups):
         assert g0.step_pages is g1.step_pages
         assert g0.step_item is g1.step_item
         assert g0.row_query is g1.row_query
+        assert g0.row_sole is g1.row_sole
         assert g0.item_pages is g1.item_pages
+        assert g0.split_src is g1.split_src
+        assert g0.split_dst is g1.split_dst
 
 
 def test_refresh_touches_only_length_arrays():
@@ -101,16 +105,29 @@ def test_refresh_touches_only_length_arrays():
     q = jnp.asarray(rng.normal(size=(B, 8, dk)), jnp.float32)
     backend = _make_backend()
     wps = _run_steps(backend, q, k_pages, v_pages, bt, kv, steps)
+    from repro.core import work_plan as wp_mod
+
     st = backend.cache.stats
     assert st.refreshes == steps - 1
-    assert st.refresh_uploads >= 1  # step_len/item_kv_len-only uploads
-    # a refresh re-uploads at most 2 arrays per touched group, never 10
-    assert st.arrays_uploaded < 10 * len(wps[0].groups) + 1 + 10 * st.refreshes
+    assert st.refresh_uploads >= 1  # length/activity-only uploads
+    # a refresh re-uploads at most ARRAYS_PER_REFRESH arrays per touched
+    # group (step_len, item_kv_len + the DMA-skip activity arrays), never
+    # the full ARRAYS_PER_GROUP set
+    n_groups = len(wps[0].groups)
+    full = wp_mod.ARRAYS_PER_GROUP * n_groups + 2
+    per_refresh = wp_mod.ARRAYS_PER_REFRESH * n_groups
+    assert st.arrays_uploaded <= full + per_refresh * st.refreshes
+    assert st.arrays_uploaded < 2 * full  # refreshes never re-upload the plan
     d0, d1 = wps[0].device, wps[1].device
     changed = [
         g0.step_len is not g1.step_len for g0, g1 in zip(d0.groups, d1.groups)
     ]
     assert any(changed), "lazy refresh must re-upload step_len"
+    static_kept = [
+        g0.split_src is g1.split_src and g0.row_sole is g1.row_sole
+        for g0, g1 in zip(d0.groups, d1.groups)
+    ]
+    assert all(static_kept), "refresh must not re-upload split/sole arrays"
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas"])

@@ -1,0 +1,42 @@
+"""Perf smoke (slow profile): regenerate the decode-attention bench
+numbers and diff them against the committed BENCH_decode_attention.json
+via benchmarks/check_regression.py — >10% per-step wall-clock regression
+on the jitted dispatch path (or ANY growth of the deterministic modeled
+quantities) fails.
+
+Run with `pytest -m slow`; excluded from the fast tier-1 profile because
+it measures wall-clock (seconds of warm-up + measurement).
+"""
+
+import os
+import sys
+
+import pytest
+
+# benchmarks/ is a plain directory next to tests/, importable from the
+# repo root (the pytest rootdir)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import bench_report, check_regression  # noqa: E402
+
+
+@pytest.mark.slow
+def test_bench_artifact_matches_current_code():
+    """The committed artifact must reflect the current code's modeled
+    numbers (deterministic): regenerating the modeled sections must not
+    show the committed values as stale-better."""
+    committed = bench_report.load()
+    assert committed.get("schema") == bench_report.SCHEMA
+    assert "dispatch" in committed and "modeled_hbm" in committed
+    # acceptance invariant (ISSUE 2): split-aware intermediate traffic on
+    # the default no-share decode batch is >= 80% below the dense model
+    hbm = committed["modeled_hbm"]["no_share_64x1024"]
+    assert hbm["inter_reduction_pct"] >= 80.0
+
+
+@pytest.mark.slow
+def test_no_perf_regression_vs_committed():
+    fresh = bench_report.collect(fast=True, verbose=False)
+    committed = bench_report.load()
+    failures = check_regression.compare(committed, fresh)
+    assert not failures, "\n".join(failures)

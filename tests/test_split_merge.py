@@ -1,0 +1,288 @@
+"""ISSUE 2 tentpole regression: the split-aware merge datapath.
+
+Covers (a) numeric parity of the mixed fast/slow path — in-kernel epilogue
+normalisation for single-partial queries, compact split-only merge for the
+rest — against the end-to-end oracle across GQA group sizes, MLA share_kv,
+and batches mixing split and unsplit queries; (b) the property that the
+compact merge table contains exactly the split queries and nothing else;
+(c) the zero-token DMA skip: plans whose steps cover only pre-allocated
+pages mark them inactive, the activity arrays the kernel pipelines on
+match step_len exactly, and correctness holds across refreshes that turn
+inactive steps active.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.pack_scheduler import plan_query_part_counts, schedule
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import build_work_plan, refresh_lengths
+from repro.kernels.merge import merge_rows
+from repro.kernels.ops import pat_paged_attention, xla_group_forward, pack_q_rows
+from repro.kernels.ref import (
+    merge_rows_ref,
+    paged_attention_ref,
+    sole_normalize_ref,
+)
+
+PAGE = 16
+
+
+def mixed_batch(rng, n_sole=4, n_share=4, share_pages=8, priv_pages=(2, 5)):
+    """Batch mixing never-decomposed queries (private KV only, below the
+    long-KV-split cap) with genuinely split ones (long shared prefix)."""
+    rows, nxt = [], 0
+    kv = []
+    for _ in range(n_sole):
+        k = int(rng.integers(*priv_pages))
+        rows.append(list(range(nxt, nxt + k)))
+        nxt += k
+        kv.append((k - 1) * PAGE + int(rng.integers(1, PAGE + 1)))
+    if n_share:
+        shared = list(range(nxt, nxt + share_pages))
+        nxt += share_pages
+        for _ in range(n_share):
+            k = int(rng.integers(*priv_pages))
+            rows.append(shared + list(range(nxt, nxt + k)))
+            nxt += k
+            kv.append((share_pages + k - 1) * PAGE + int(rng.integers(1, PAGE + 1)))
+    maxp = max(len(r) for r in rows)
+    bt = -np.ones((len(rows), maxp), np.int32)
+    for b, r in enumerate(rows):
+        bt[b, : len(r)] = r
+    return bt, np.asarray(kv, np.int64), nxt
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize(
+    "Hq,Hkv,dk",
+    [(8, 8, 64), (8, 4, 64), (16, 2, 64), pytest.param(32, 8, 128, marks=pytest.mark.slow)],
+)
+def test_mixed_fast_slow_parity(Hq, Hkv, dk, impl):
+    """Mixed split/unsplit batches match the oracle at 1e-5 across GQA
+    group sizes and both forward implementations."""
+    rng = np.random.default_rng(Hq * 10 + Hkv)
+    bt, kv, P = mixed_batch(rng)
+    k_pages = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(len(kv), Hq, dk)), jnp.float32)
+    sel = TileSelector(head_dim=dk, page_size=PAGE, q_bytes=4, kv_bytes=4)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv)
+    # the batch must actually exercise BOTH paths
+    assert wp.num_split_queries > 0
+    assert wp.num_split_queries < wp.batch_size
+    out = pat_paged_attention(q, k_pages, v_pages, wp, impl=impl, merge_impl=impl)
+    ref = paged_attention_ref(
+        q, k_pages, v_pages, jnp.asarray(np.maximum(bt, 0)), jnp.asarray(kv)
+    )
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_mla_share_kv_mixed():
+    """MLA-style shared-KV (v_pages=None) through the mixed datapath."""
+    rng = np.random.default_rng(5)
+    Hq, Hkv, dk, dv = 16, 1, 96, 64
+    bt, kv, P = mixed_batch(rng, n_sole=3, n_share=3)
+    k_pages = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(len(kv), Hq, dk)), jnp.float32)
+    sel = TileSelector(head_dim=dk, page_size=PAGE, q_bytes=4, kv_bytes=4,
+                       v_head_dim=dv)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv)
+    assert 0 < wp.num_split_queries < wp.batch_size
+    out = pat_paged_attention(q, k_pages, None, wp, v_head_dim=dv, impl="pallas")
+    ref = paged_attention_ref(
+        q, k_pages, k_pages[..., :dv], jnp.asarray(np.maximum(bt, 0)),
+        jnp.asarray(kv),
+    )
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_epilogue_normalization_matches_host_ref():
+    """The forward kernels' in-kernel fast-path normalisation equals the
+    host-side oracle applied to raw partials."""
+    rng = np.random.default_rng(11)
+    Hq, Hkv, dk = 8, 4, 64
+    bt, kv, P = mixed_batch(rng)
+    k_pages = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(len(kv), Hq, dk)), jnp.float32)
+    sel = TileSelector(head_dim=dk, page_size=PAGE, q_bytes=4, kv_bytes=4)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv)
+    g = wp.groups[0]
+    qp = pack_q_rows(q, jnp.asarray(g.row_query), jnp.asarray(g.row_group), Hkv)
+    scale = 1.0 / dk**0.5
+    # raw partials (no normalisation), then host-side sole normalisation
+    raw_o, raw_st = xla_group_forward(
+        qp, k_pages, v_pages, jnp.asarray(g.item_pages),
+        jnp.asarray(g.item_kv_len), scale=scale,
+    )
+    expect = sole_normalize_ref(raw_o, raw_st, jnp.asarray(g.row_sole))
+    # normalised in one go by the fallback
+    norm_o, _ = xla_group_forward(
+        qp, k_pages, v_pages, jnp.asarray(g.item_pages),
+        jnp.asarray(g.item_kv_len), scale=scale,
+        row_sole=jnp.asarray(g.row_sole),
+    )
+    np.testing.assert_allclose(norm_o, expect, atol=1e-6, rtol=1e-6)
+
+
+def test_xla_item_chunking_is_exact():
+    """The chunked (memory-bounded) XLA fallback equals the one-shot
+    gather bit-for-bit."""
+    rng = np.random.default_rng(2)
+    Hq, Hkv, dk = 8, 4, 64
+    bt, kv, P = mixed_batch(rng, n_sole=12, n_share=6)
+    k_pages = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(len(kv), Hq, dk)), jnp.float32)
+    sel = TileSelector(head_dim=dk, page_size=PAGE, q_bytes=4, kv_bytes=4)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv)
+    g = max(wp.groups, key=lambda g: g.num_items)
+    assert g.num_items > 3  # chunking must kick in below
+    qp = pack_q_rows(q, jnp.asarray(g.row_query), jnp.asarray(g.row_group), Hkv)
+    args = (qp, k_pages, v_pages, jnp.asarray(g.item_pages), jnp.asarray(g.item_kv_len))
+    one_o, one_st = xla_group_forward(*args, scale=0.125, item_chunk=10**9)
+    chk_o, chk_st = xla_group_forward(*args, scale=0.125, item_chunk=3)
+    np.testing.assert_array_equal(np.asarray(one_o), np.asarray(chk_o))
+    np.testing.assert_array_equal(np.asarray(one_st), np.asarray(chk_st))
+
+
+def test_merge_rows_kernel_vs_ref():
+    rng = np.random.default_rng(13)
+    Rbuf, dv, R, P = 48, 128, 10, 3
+    o = jnp.asarray(rng.normal(size=(Rbuf, dv)), jnp.float32)
+    st = jnp.stack(
+        [jnp.asarray(rng.normal(size=(Rbuf,)), jnp.float32),
+         jnp.asarray(rng.uniform(0.5, 2.0, size=(Rbuf,)), jnp.float32)], axis=1
+    )
+    tbl = rng.integers(-1, Rbuf, size=(R, P)).astype(np.int32)
+    tbl[:, 0] = np.abs(tbl[:, 0])  # at least one valid part per row
+    tbl[-1, :] = -1  # all-invalid padding row must yield 0, not NaN
+    a = merge_rows(o, st, jnp.asarray(tbl))
+    b = merge_rows_ref(o, st, jnp.asarray(tbl))
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+    assert np.all(np.isfinite(np.asarray(a)))
+    np.testing.assert_array_equal(np.asarray(a[-1]), 0.0)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_compact_table_contains_exactly_split_queries(seed):
+    """Property: split_queries == {q : covered by > 1 item}; the compact
+    table has one row per (split query, head) with exactly part_count
+    valid entries; row_sole flags exactly the sole queries' rows; and the
+    compact row ids tile the split buffer without gaps or overlaps."""
+    rng = np.random.default_rng(seed)
+    Hq, Hkv = 8, 4
+    bt, kv, _ = mixed_batch(
+        rng, n_sole=int(rng.integers(1, 6)), n_share=int(rng.integers(0, 6))
+    )
+    sel = TileSelector(head_dim=64, page_size=PAGE, q_bytes=4, kv_bytes=4)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv)
+    counts = plan_query_part_counts(plan)
+    expect_split = set(np.nonzero(counts > 1)[0].tolist())
+    assert set(wp.split_queries.tolist()) == expect_split
+    # table shape/content: one row per (split query, head)
+    ns = len(expect_split)
+    assert wp.split_part_rows.shape[0] == ns * Hq
+    assert wp.split_qh.shape[0] == ns * Hq
+    valid_per_row = (wp.split_part_rows >= 0).sum(axis=1)
+    for j, qid in enumerate(np.repeat(sorted(expect_split), Hq)):
+        assert valid_per_row[j] == counts[qid]
+        assert wp.split_qh[j] == qid * Hq + j % Hq
+    # compact ids tile [0, total_split_rows) exactly once
+    ids = wp.split_part_rows[wp.split_part_rows >= 0]
+    assert sorted(ids.tolist()) == list(range(wp.total_split_rows))
+    # row_sole marks exactly rows of sole queries
+    for g in wp.groups:
+        rq = g.row_query
+        expect_sole = (rq >= 0) & (counts[np.maximum(rq, 0)] == 1)
+        np.testing.assert_array_equal(g.row_sole.astype(bool), expect_sole)
+        # split_src points at rows of split queries only
+        m = rq.shape[1]
+        t = g.split_src // (Hkv * m)
+        col = g.split_src % m
+        assert np.all(counts[rq[t, col]] > 1)
+
+
+def test_zero_valid_steps_issue_no_dma():
+    """Plans over pre-allocated (unfilled) pages mark those steps inactive:
+    the activity arrays the kernel's DMA pipeline runs on match step_len
+    exactly, and dma_page_fetches() counts only active steps."""
+    Hq, Hkv = 8, 4
+    B, priv, budget = 4, 2, 3
+    rows, nxt = [], 0
+    kv = np.zeros(B, np.int64)
+    for b in range(B):
+        rows.append(list(range(nxt, nxt + priv + budget)))
+        nxt += priv + budget
+        kv[b] = priv * PAGE - 3  # budget pages completely unfilled
+    bt = np.asarray(rows, np.int32)
+    sel = TileSelector(head_dim=64, page_size=PAGE, q_bytes=4, kv_bytes=4)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv, block_tables=bt)
+    total_steps = sum(g.num_steps for g in wp.groups)
+    active_steps = sum(int(np.count_nonzero(g.step_len > 0)) for g in wp.groups)
+    assert active_steps < total_steps, "batch must contain zero-valid steps"
+    # plan-level DMA accounting: only active steps fetch pages
+    expect = sum(
+        int(np.count_nonzero(g.step_len > 0)) * g.pages_per_block
+        for g in wp.groups
+    ) * Hkv
+    assert wp.dma_page_fetches() == expect
+    naive = sum(g.num_steps * g.pages_per_block for g in wp.groups) * Hkv
+    assert wp.dma_page_fetches() < naive
+    for g in wp.groups:
+        act = g.step_len > 0
+        assert int(g.act_total[0]) == int(act.sum())
+        np.testing.assert_array_equal(g.step_ord, np.cumsum(act) - act)
+        np.testing.assert_array_equal(
+            g.act_steps[: int(act.sum())], np.nonzero(act)[0]
+        )
+
+
+def test_dma_skip_correct_across_zero_to_active_refresh():
+    """A step that starts with 0 valid tokens (pre-allocated page) becomes
+    active after a lazy refresh; the Pallas pipeline must stay numerically
+    exact through the transition (parity bookkeeping follows the active
+    count)."""
+    rng = np.random.default_rng(21)
+    Hq, Hkv, dk = 8, 4, 64
+    B, priv, budget = 3, 2, 2
+    rows, nxt = [], 0
+    kv = np.zeros(B, np.int64)
+    for b in range(B):
+        rows.append(list(range(nxt, nxt + priv + budget)))
+        nxt += priv + budget
+        kv[b] = priv * PAGE - 1  # one token below the page boundary
+    bt = np.asarray(rows, np.int32)
+    k_pages = jnp.asarray(rng.normal(size=(Hkv, nxt + 1, PAGE, dk)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(Hkv, nxt + 1, PAGE, dk)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, Hq, dk)), jnp.float32)
+    sel = TileSelector(head_dim=dk, page_size=PAGE, q_bytes=4, kv_bytes=4)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv, block_tables=bt)
+    fetches0 = wp.dma_page_fetches()
+    for step in range(PAGE + 2):  # crosses into the pre-allocated page
+        out = pat_paged_attention(q, k_pages, v_pages, wp, impl="pallas",
+                                  merge_impl="pallas")
+        ref = paged_attention_ref(
+            q, k_pages, v_pages, jnp.asarray(bt), jnp.asarray(kv)
+        )
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+        kv = kv + 1
+        wp = refresh_lengths(wp, kv)
+    # growth activated previously-skipped steps
+    assert wp.dma_page_fetches() > fetches0
