@@ -12,6 +12,11 @@ across PRs (ISSUE 2):
                        (benchmarks/memory_traffic.split_aware_report).
   * ``kernel_latency`` — analytic latency-model numbers for a fixed subset
                        of Fig. 10 configs (benchmarks/kernel_perf).
+  * ``fused_launch`` — ISSUE 3: launches per decode step, jitted ms/step
+                       of the fused single-launch path vs the per-group
+                       oracle (benchmarks/overhead.fused_vs_groups), and
+                       the deep-tree straggler ratio before/after KV-split
+                       rebalancing (memory_traffic.straggler_report).
 
 `benchmarks/check_regression.py` diffs the current artifact against the
 previously committed one and fails on >10% per-step wall-clock regression;
@@ -96,11 +101,21 @@ def collect(fast: bool = False, verbose: bool = True) -> Dict:
         verbose=verbose,
     )
     kern = kernel_section(rows)
+    fused = {
+        "shared": overhead.fused_vs_groups(
+            batch=64, steps=8 if fast else 20, shared_pages=4, verbose=verbose
+        ),
+        "split_light": overhead.fused_vs_groups(
+            batch=64, steps=8 if fast else 20, shared_pages=0, verbose=verbose
+        ),
+        "balance": memory_traffic.straggler_report(verbose=verbose),
+    }
     return {
         "dispatch": disp,
         "dispatch_split_light": disp_light,
         "modeled_hbm": hbm,
         "kernel_latency": kern,
+        "fused_launch": fused,
     }
 
 

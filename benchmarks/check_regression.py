@@ -87,6 +87,51 @@ def compare(baseline: Dict, current: Dict) -> List[str]:
         if "pat_us" in b_k[key] and "pat_us" in c_k[key]:
             model(f"kernel_latency.{key}.pat_us", b_k[key]["pat_us"], c_k[key]["pat_us"])
 
+    # --- fused single-launch gates (ISSUE 3) -------------------------------
+    b_f, c_f = baseline.get("fused_launch", {}), current.get("fused_launch", {})
+    for scen in ("shared", "split_light"):
+        cur = c_f.get(scen, {})
+        if not cur:
+            continue
+        base_s = b_f.get(scen, {})
+        if base_s.get("batch") == cur.get("batch") and "fused_ms_per_step" in base_s:
+            wall(
+                f"fused_launch.{scen}.fused_ms_per_step",
+                base_s["fused_ms_per_step"], cur["fused_ms_per_step"],
+            )
+        # structural: one decode step = ONE forward launch, always
+        if cur.get("launches_fused", 1) != 1:
+            failures.append(
+                f"fused_launch.{scen}.launches_fused is "
+                f"{cur.get('launches_fused')} (must be 1)"
+            )
+        # within-artifact A/B: fusing must not be slower than the
+        # per-group oracle it replaced (same run, same machine)
+        if "groups_ms_per_step" in cur and (
+            cur["fused_ms_per_step"]
+            > cur["groups_ms_per_step"] * (1 + WALL_CLOCK_THRESHOLD)
+            and cur["fused_ms_per_step"] - cur["groups_ms_per_step"]
+            > WALL_CLOCK_FLOOR_MS
+        ):
+            failures.append(
+                f"fused_launch.{scen}: fused path slower than per-group "
+                f"oracle ({cur['fused_ms_per_step']:.3f} vs "
+                f"{cur['groups_ms_per_step']:.3f} ms/step)"
+            )
+    for wl, bal in sorted(c_f.get("balance", {}).items()):
+        # acceptance bound: rebalanced max-item step count within 2x mean
+        if bal.get("ratio_after", 0.0) > 2.0 + 1e-9:
+            failures.append(
+                f"fused_launch.balance.{wl}.ratio_after = "
+                f"{bal['ratio_after']:.3f} exceeds the 2.0 bound"
+            )
+        b_bal = b_f.get("balance", {}).get(wl, {})
+        if "ratio_after" in b_bal:
+            model(
+                f"fused_launch.balance.{wl}.ratio_after",
+                b_bal["ratio_after"], bal["ratio_after"],
+            )
+
     return failures
 
 

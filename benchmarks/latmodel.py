@@ -5,6 +5,10 @@ mechanism — bytes across the slow-memory boundary — is exactly computable
 from a work plan. This model turns plans into normalised latencies
 (Fig. 10/12-style) using the paper's own A100 testbed constants by default:
 
+  fused        = max(live_bytes/BW, flops_u/peak) + t_launch
+                 (the executed datapath: ONE launch over the unified step
+                 list, page-granular DMA — only live pages cross HBM; MMA
+                 padded to the plan-wide (m_max, n_max))
   t_group      = max(kv_bytes_g / BW, flops_g / peak) + t_launch
   multi-stream = max_g(stream serialisation) ~ max(total_bytes/BW,
                  max_g flops_g/peak) + t_launch   (streams overlap)
@@ -51,39 +55,70 @@ def plan_latency(
     num_kv_heads: Optional[int] = None,
     num_q_heads: Optional[int] = None,
     split_aware: bool = True,
+    mode: Optional[str] = None,  # "fused" | "streams" | "serial"
 ) -> Dict[str, float]:
     """Models one decode-attention step from a built WorkPlan. Head counts
     can be overridden to model a full-size arch from a reduced-model plan
     (the plan's page structure is scale-invariant).
 
-    ``split_aware=True`` (the implemented datapath, DESIGN.md §3) charges
-    merge traffic only for rows of genuinely split queries — single-partial
-    rows are normalised in the forward epilogue and never round-trip
-    through HBM. ``split_aware=False`` models the pre-split-aware datapath
-    that paid the merge for every packed row."""
+    ``mode="fused"`` (the default whenever the plan has a unified step
+    list — the executed datapath, DESIGN.md §6) charges ONE launch over
+    the unified list: bytes are the LIVE pages of active steps
+    (page-granular DMA), flops pad every active step to the plan-wide
+    (m_max, n_max). ``"streams"`` is the pre-fused per-group overlap
+    model, ``"serial"`` the PAT-serial ablation (``serial=True`` is kept
+    as an alias).
+
+    ``split_aware=True`` (DESIGN.md §3) charges merge traffic only for
+    rows of genuinely split queries — single-partial rows are normalised
+    in the forward epilogue and never round-trip through HBM.
+    ``split_aware=False`` models the pre-split-aware datapath that paid
+    the merge for every packed row."""
     dv = v_head_dim if v_head_dim is not None else head_dim
     page = wp.page_size
     Hkv = num_kv_heads if num_kv_heads is not None else wp.num_kv_heads
     Hq = num_q_heads if num_q_heads is not None else wp.num_q_heads
     bw = hw.mem_bw * hw.bw_eff
+    if mode is None:
+        if serial:
+            mode = "serial"
+        else:
+            mode = "fused" if wp.unified is not None else "streams"
+    elif serial:
+        mode = "serial"
 
-    group_times = []
-    total_bytes = 0.0
-    max_flops_t = 0.0
-    for g in wp.groups:
-        n_pages = int(g.step_pages.size)  # pages DMA'd incl. tile padding
-        kv_bytes = n_pages * page * (head_dim + dv) * Hkv * kv_bytes_per_el
-        m = g.tile.m
-        flops = 2.0 * g.num_steps * m * g.tile.n * (head_dim + dv) * Hkv
-        t_g = max(kv_bytes / bw, flops / hw.peak_flops) + hw.launch_s
-        group_times.append(t_g)
-        total_bytes += kv_bytes
-        max_flops_t = max(max_flops_t, flops / hw.peak_flops)
-
-    if serial:
-        t_fwd = float(sum(group_times))
+    if mode == "fused":
+        u = wp.unified
+        assert u is not None, "fused latency model needs a unified step list"
+        act = u.step_len > 0
+        live_pages = int(u.step_npages[act].sum())
+        total_bytes = live_pages * page * (head_dim + dv) * Hkv * kv_bytes_per_el
+        flops = 2.0 * int(act.sum()) * u.tile.m * u.tile.n * (head_dim + dv) * Hkv
+        t_fwd = max(total_bytes / bw, flops / hw.peak_flops) + hw.launch_s
+        launches = 1
     else:
-        t_fwd = max(total_bytes / bw, max_flops_t) + hw.launch_s
+        group_times = []
+        total_bytes = 0.0
+        max_flops_t = 0.0
+        for g in wp.groups:
+            # active steps only, like the fused mode: the per-group kernel
+            # also skips zero-token steps' DMA *and* compute, so charging
+            # padded counts here would bias the fused-vs-streams A/B
+            act_g = g.step_len > 0
+            n_pages = int(g.step_npages[act_g].sum())
+            kv_bytes = n_pages * page * (head_dim + dv) * Hkv * kv_bytes_per_el
+            m = g.tile.m
+            flops = 2.0 * int(act_g.sum()) * m * g.tile.n * (head_dim + dv) * Hkv
+            t_g = max(kv_bytes / bw, flops / hw.peak_flops) + hw.launch_s
+            group_times.append(t_g)
+            total_bytes += kv_bytes
+            max_flops_t = max(max_flops_t, flops / hw.peak_flops)
+        launches = len(wp.groups)
+
+        if mode == "serial":
+            t_fwd = float(sum(group_times))
+        else:
+            t_fwd = max(total_bytes / bw, max_flops_t) + hw.launch_s
 
     if split_aware:
         # packed-row granularity: Hkv * m rows per item, but only rows of
@@ -100,6 +135,7 @@ def plan_latency(
         "kv_bytes": total_bytes,
         "merge_bytes": merge_bytes,
         "num_groups": len(wp.groups),
+        "launches": launches,
     }
 
 

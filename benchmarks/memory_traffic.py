@@ -31,8 +31,11 @@ from repro.core.pack_scheduler import (
     schedule,
     theoretical_min_kv_bytes,
 )
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import build_work_plan
 from repro.workloads.traces import (
     conversation_trace,
+    skewed_decode_batch,
     synthetic_decode_batch,
     toolagent_trace,
     trace_to_decode_batch,
@@ -114,10 +117,22 @@ def split_aware_report(
             no_share_batch=no_share_batch, no_share_len=no_share_len,
         )
     B, L = int(bt.shape[0]), int(kv.max())
-    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=HQ // HKV)
+    sel = TileSelector(head_dim=HEAD_DIM, page_size=PAGE)
+    plan = schedule(
+        bt, kv, PAGE, strategy="pat", rows_per_query=HQ // HKV,
+        max_query_rows=sel.max_query_rows, select_n=sel.rules.select_n,
+    )
     counts = plan_query_part_counts(plan)
     dense = plan_intermediate_bytes(plan, HEAD_DIM, HQ)
     sa = plan_intermediate_bytes(plan, HEAD_DIM, HQ, split_aware=True)
+    # fused-launch DMA accounting (DESIGN.md §6): live pages actually
+    # fetched by the single unified launch vs the per-group kernels'
+    # tile-padded page slots (the pre-fused datapath re-fetched page 0
+    # for every dead slot of a partial block)
+    wp = build_work_plan(plan, sel, HQ, HKV, kv_lens=kv, block_tables=bt)
+    padded_fetches = sum(
+        int((g.step_len > 0).sum()) * g.pages_per_block for g in wp.groups
+    ) * HKV
     out = {
         "batch": B,
         "kv_len": L,
@@ -128,6 +143,11 @@ def split_aware_report(
         "inter_bytes_split_aware": int(sa),
         "inter_reduction_pct": 100 * (1 - sa / max(dense, 1e-12)),
         "kv_bytes": int(plan_kv_bytes(plan, HEAD_DIM, HKV)),
+        "forward_launches": 1 if wp.unified is not None else len(wp.groups),
+        "tile_groups": len(wp.groups),
+        "dma_page_fetches": wp.dma_page_fetches(),
+        "dma_page_fetches_padded": padded_fetches,
+        "straggler_ratio": wp.step_balance()["straggler_ratio"],
     }
     if verbose:
         print(
@@ -140,9 +160,53 @@ def split_aware_report(
     return out
 
 
+def straggler_report(verbose: bool = True) -> Dict:
+    """ISSUE 3 acceptance metric: per-item step-count balance of the fused
+    unified step list, with the KV-split rebalancing pass OFF (today's
+    correctness-only long-KV split) vs ON. The rebalanced list's max-item
+    step count must stay within 2x the mean — otherwise a few long items
+    form the straggler tail of the single launch. Measured on the
+    deep-tree workload (Fig. 10 config 10, the acceptance case) and on a
+    skewed no-share batch where the token-mean cap of `long_kv_split`
+    alone demonstrably leaves the bound violated."""
+    sel = TileSelector(head_dim=HEAD_DIM, page_size=PAGE)
+    batches = {
+        "deep_tree": synthetic_decode_batch(
+            (1, 2, 8, 64), (128, 128, 256, 512), PAGE
+        ),
+        "skewed": skewed_decode_batch(page_size=PAGE),
+    }
+    out: Dict = {}
+    for name, (bt, kv) in batches.items():
+        entry: Dict = {}
+        for label, reb in (("before", False), ("after", True)):
+            plan = schedule(
+                bt, kv, PAGE, strategy="pat", rows_per_query=HQ // HKV,
+                max_query_rows=sel.max_query_rows, rebalance=reb,
+                select_n=sel.rules.select_n,
+            )
+            wp = build_work_plan(plan, sel, HQ, HKV, kv_lens=kv)
+            entry[label] = wp.step_balance()
+        entry["ratio_before"] = entry["before"]["straggler_ratio"]
+        entry["ratio_after"] = entry["after"]["straggler_ratio"]
+        out[name] = entry
+        if verbose:
+            print(
+                f"straggler {name:10s}: before={entry['ratio_before']:.2f} "
+                f"(max {entry['before']['max_item_steps']} / mean "
+                f"{entry['before']['mean_item_steps']:.2f}) -> "
+                f"after={entry['ratio_after']:.2f} "
+                f"(max {entry['after']['max_item_steps']} / mean "
+                f"{entry['after']['mean_item_steps']:.2f})",
+                flush=True,
+            )
+    return out
+
+
 if __name__ == "__main__":
     run()
     split_aware_report()  # default: no-prefix decode batch (configs 19-20)
     split_aware_report(  # deep sharing tree (Fig. 10 config 10)
         widths=(1, 2, 8, 64), lens=(128, 128, 256, 512)
     )
+    straggler_report()

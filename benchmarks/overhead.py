@@ -141,19 +141,7 @@ def dispatch_overhead(
     Hq, Hkv, dk = 8, 4, 64
     # (optionally shared-prefix) batch with vLLM-style pre-allocated
     # generation pages
-    shared, priv, budget = shared_pages, 2, 2
-    rows, nxt = [], 0
-    prefix = list(range(shared))
-    nxt = shared
-    kv = np.zeros(batch, np.int64)
-    for b in range(batch):
-        mine = list(range(nxt, nxt + priv + budget))
-        nxt += priv + budget
-        rows.append(prefix + mine)
-        kv[b] = (shared + priv) * PAGE + 1 + b % 7
-    bt = -np.ones((batch, shared + priv + budget), np.int32)
-    for b, r in enumerate(rows):
-        bt[b, : len(r)] = r
+    bt, kv, nxt = _prealloc_shared_batch(batch, shared_pages)
     k_pages = jnp.asarray(
         rng.normal(size=(Hkv, nxt + 1, PAGE, dk)), jnp.float32
     )
@@ -232,6 +220,100 @@ def dispatch_overhead(
             f"speedup={res['speedup']:.1f}x "
             f"uploads(full={res['full_uploads']}, refresh={res['refresh_uploads']}) "
             f"retraces_after_warmup={res['jit_retraces_after_warmup']}",
+            flush=True,
+        )
+    return res
+
+
+def _prealloc_shared_batch(batch: int, shared_pages: int, priv: int = 2,
+                           budget: int = 2):
+    """(bt, kv, num_pages): optionally shared-prefix batch with vLLM-style
+    pre-allocated generation pages (the dispatch benchmarks' workload)."""
+    rows, nxt = [], 0
+    prefix = list(range(shared_pages))
+    nxt = shared_pages
+    kv = np.zeros(batch, np.int64)
+    for b in range(batch):
+        mine = list(range(nxt, nxt + priv + budget))
+        nxt += priv + budget
+        rows.append(prefix + mine)
+        kv[b] = (shared_pages + priv) * PAGE + 1 + b % 7
+    bt = -np.ones((batch, shared_pages + priv + budget), np.int32)
+    for b, r in enumerate(rows):
+        bt[b, : len(r)] = r
+    return bt, kv, nxt
+
+
+def fused_vs_groups(
+    batch: int = 64, steps: int = 20, repeats: int = 3,
+    shared_pages: int = 4, verbose: bool = True,
+) -> Dict:
+    """ISSUE 3 A/B: jitted per-step wall-clock of the FUSED single-launch
+    forward (dispatch="jit", the hot path) vs the jitted PER-GROUP oracle
+    (dispatch="jit_groups", one launch per tile group from device-resident
+    group arrays — the PR 2 datapath). Identical math, identical
+    device-resident plan service; min-of-repeats timing."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(11)
+    Hq, Hkv, dk = 8, 4, 64
+    bt, kv, nxt = _prealloc_shared_batch(batch, shared_pages)
+    k_pages = jnp.asarray(rng.normal(size=(Hkv, nxt + 1, PAGE, dk)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(Hkv, nxt + 1, PAGE, dk)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(batch, Hq, dk)), jnp.float32)
+    backend = PatAttentionBackend(
+        Hq, Hkv, dk, kv_dtype_bytes=4,
+        config=PatConfig(impl="xla", merge_impl="xla"),
+    )
+
+    def run_path(dispatch: str) -> float:
+        wp = backend.plan(bt, kv)
+        out = ops.pat_paged_attention(
+            q, k_pages, v_pages, wp, impl="xla", merge_impl="xla",
+            dispatch=dispatch,
+        )
+        out.block_until_ready()  # warm-up: compile the path
+        t_best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for s in range(steps):
+                wp = backend.plan(bt, kv + 1 + s)
+                out = ops.pat_paged_attention(
+                    q, k_pages, v_pages, wp, impl="xla", merge_impl="xla",
+                    dispatch=dispatch,
+                )
+            t_best = min(t_best, (time.perf_counter() - t0) / steps)
+            out.block_until_ready()
+        return t_best
+
+    wp = backend.plan(bt, kv)
+    n_groups = len(wp.groups)
+    t_groups = run_path("jit_groups")
+    t_fused = run_path("jit")
+    # launch counts derived from the dispatch rule actually applied to this
+    # plan: dispatch="jit"/"auto" runs the unified list iff it exists, else
+    # falls back to one launch per group. (The structural per-jaxpr proof
+    # that the unified list is ONE pallas_call lives in
+    # tests/test_fused_launch.py::test_one_forward_launch_per_decode_step.)
+    res = {
+        "batch": batch,
+        "steps": steps,
+        "shared_pages": shared_pages,
+        "tile_groups": n_groups,
+        "launches_fused": 1 if wp.unified is not None else n_groups,
+        "launches_groups": n_groups,
+        "fused_ms_per_step": t_fused * 1e3,
+        "groups_ms_per_step": t_groups * 1e3,
+        "speedup": t_groups / max(t_fused, 1e-12),
+    }
+    if verbose:
+        print(
+            f"fused-vs-groups B={batch:4d} groups={n_groups}: "
+            f"fused={res['fused_ms_per_step']:.3f}ms/step "
+            f"per-group={res['groups_ms_per_step']:.3f}ms/step "
+            f"speedup={res['speedup']:.2f}x",
             flush=True,
         )
     return res

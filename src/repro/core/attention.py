@@ -31,6 +31,9 @@ class PatConfig:
     merge_impl: str = "pallas"
     page_size: int = 16
     split_long_kv: bool = True
+    # KV-split rebalancing for the fused single-launch step list (§6):
+    # splits straggler items so no item's step count dwarfs the mean.
+    rebalance_kv: bool = True
     alpha: float = 4.0
     interpret: bool = True  # CPU container: Pallas runs in interpret mode
     # Dispatch of the forward+merge: "auto" runs the jit-cached
@@ -57,12 +60,16 @@ class PatAttentionBackend:
         kv_dtype_bytes: int = 2,
         config: Optional[PatConfig] = None,
         spec: Optional[TpuSpec] = None,
+        share_kv: bool = False,
     ):
         self.config = config or PatConfig()
         self.num_q_heads = num_q_heads
         self.num_kv_heads = num_kv_heads
         self.head_dim = head_dim
         self.v_head_dim = v_head_dim if v_head_dim is not None else head_dim
+        # share_kv (MLA): V is a slice of the K tile, so the kernel
+        # allocates no V buffers — the tile solver must see the same
+        # working set or it forfeits VMEM that larger KV tiles could use.
         selector = TileSelector(
             head_dim=head_dim,
             page_size=self.config.page_size,
@@ -70,6 +77,7 @@ class PatAttentionBackend:
             kv_bytes=kv_dtype_bytes,
             spec=spec,
             v_head_dim=self.v_head_dim,
+            share_kv=share_kv,
         )
         self.selector = selector
         self.cache = PlanCache(
@@ -81,6 +89,7 @@ class PatAttentionBackend:
             split_long_kv=self.config.split_long_kv,
             to_device=self.config.dispatch != "eager",
             bucket=self.config.bucket,
+            rebalance=self.config.rebalance_kv,
         )
 
     def plan(self, block_tables: np.ndarray, kv_lens: np.ndarray) -> WorkPlan:

@@ -74,6 +74,7 @@ class PlanCache:
         split_long_kv: bool = True,
         to_device: bool = True,
         bucket: bool = True,
+        rebalance: bool = True,
     ):
         self.selector = selector
         self.num_q_heads = num_q_heads
@@ -83,6 +84,7 @@ class PlanCache:
         self.split_long_kv = split_long_kv
         self.to_device = to_device
         self.bucket = bucket
+        self.rebalance = rebalance
         self.stats = CacheStats()
         self._key: Optional[int] = None
         self._plan: Optional[work_plan.WorkPlan] = None
@@ -129,6 +131,12 @@ class PlanCache:
             max_query_rows=self.selector.max_query_rows,
             alpha=self.alpha,
             split_long_kv=self.split_long_kv,
+            rebalance=self.rebalance,
+            # the selector's KV-tile rule drives the rebalancing pass's
+            # step-count estimate (fused-launch load balance); the plan-
+            # wide joint-feasibility n-cap applied later by build_work_plan
+            # can still add steps to capped items in exotic configs
+            select_n=self.selector.rules.select_n,
         )
         plan = work_plan.build_work_plan(
             pack, self.selector, self.num_q_heads, self.num_kv_heads,

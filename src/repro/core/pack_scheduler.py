@@ -40,6 +40,11 @@ from repro.core.prefix_tree import PrefixNode, build_forest
 # default because it is the published algorithm).
 MERGE_ALPHA_DEFAULT = 4
 
+# KV-split rebalancing target (paper §5.3 load balance): no item may carry
+# more than this multiple of the mean per-item KV-step count in the fused
+# single-launch step list.
+REBALANCE_RATIO_DEFAULT = 2.0
+
 
 @dataclass
 class WorkItem:
@@ -274,25 +279,99 @@ def long_kv_split(plan: PackPlan, mean_cap: Optional[float] = None) -> PackPlan:
             out.append(it)
             continue
         k = -(-n_pages // cap_pages)
-        per = -(-n_pages // k)
-        for j in range(0, n_pages, per):
-            pages = it.pages[j : j + per]
-            start_tok = j * page
-            end_tok = min((j + len(pages)) * page, it.num_tokens)
-            # Parts covering only pre-allocated (not yet filled) pages are
-            # kept with 0 valid tokens: the kernel masks them, and keeping
-            # them makes the plan stable as kv_len grows (lazy update).
-            out.append(
-                WorkItem(
-                    list(it.query_ids), pages, max(0, end_tok - start_tok)
-                )
-            )
+        out.extend(_split_item_pages(it, -(-n_pages // k), page))
     return PackPlan(
         out,
         plan.batch_size,
         plan.page_size,
         strategy=plan.strategy,
         meta=dict(plan.meta, long_kv_split=True),
+    )
+
+
+def _split_item_pages(it: WorkItem, per: int, page: int) -> List[WorkItem]:
+    """Splits one item into page-aligned parts of at most ``per`` pages.
+    Parts covering only pre-allocated (not yet filled) pages keep 0 valid
+    tokens, exactly like `long_kv_split` — the kernel masks them and the
+    plan stays stable under the lazy update."""
+    out = []
+    n_pages = len(it.pages)
+    for j in range(0, n_pages, per):
+        pages = it.pages[j : j + per]
+        start_tok = j * page
+        end_tok = min((j + len(pages)) * page, it.num_tokens)
+        out.append(
+            WorkItem(list(it.query_ids), pages, max(0, end_tok - start_tok))
+        )
+    return out
+
+
+def item_step_count(
+    it: WorkItem, page: int, select_n: Optional[Callable[[int], int]] = None
+) -> int:
+    """KV steps this item contributes to the fused step list: its page count
+    divided by the pages-per-block of the KV tile the selector would pick
+    (page granularity when no selector rule is given). An estimate: the
+    plan-wide joint-feasibility n-cap in build_work_plan can still shrink
+    a capped item's tile — and so add steps — in exotic hardware configs."""
+    npages = max(1, len(it.pages))
+    if select_n is None:
+        return npages
+    n = max(page, select_n(max(1, it.num_tokens)))
+    return -(-npages // max(1, n // page))
+
+
+def rebalance_kv_split(
+    plan: PackPlan,
+    select_n: Optional[Callable[[int], int]] = None,
+    ratio: float = REBALANCE_RATIO_DEFAULT,
+    max_rounds: int = 6,
+) -> PackPlan:
+    """KV-split load balancing for the fused single-launch forward (paper
+    §5.3). `long_kv_split` splits for *correctness* (bounding any one
+    item's KV); this pass splits for *balance*: with every tile group fused
+    into ONE launch, a single long item whose steps dwarf the mean becomes
+    the straggler tail of the whole step list. Items whose step count
+    exceeds ``ratio`` x the mean are split into equal page-aligned parts
+    until the list is balanced (or parts reach one page). Splitting is
+    always safe: parts merge through online softmax like any other
+    partial."""
+    if not plan.items:
+        return plan
+    page = plan.page_size
+    items = list(plan.items)
+    for _ in range(max_rounds):
+        steps = np.array(
+            [item_step_count(it, page, select_n) for it in items], np.float64
+        )
+        cap = max(1.0, ratio * float(steps.mean()))
+        over = steps > cap
+        if not over.any():
+            break
+        new_items: List[WorkItem] = []
+        changed = False
+        for it, s, o in zip(items, steps, over):
+            n_pages = len(it.pages)
+            if not o or n_pages <= 1:
+                new_items.append(it)
+                continue
+            k = min(n_pages, int(-(-s // cap)))  # parts to cut into
+            if k < 2:
+                new_items.append(it)
+                continue
+            new_items.extend(_split_item_pages(it, -(-n_pages // k), page))
+            changed = True
+        items = new_items
+        if not changed:
+            break
+    if len(items) == len(plan.items):
+        return plan
+    return PackPlan(
+        items,
+        plan.batch_size,
+        plan.page_size,
+        strategy=plan.strategy,
+        meta=dict(plan.meta, kv_rebalanced=True),
     )
 
 
@@ -329,10 +408,15 @@ def schedule(
     max_query_rows: int = 128,
     alpha: float = MERGE_ALPHA_DEFAULT,
     split_long_kv: bool = True,
+    rebalance: bool = True,
+    select_n: Optional[Callable[[int], int]] = None,
 ) -> PackPlan:
     """Packs one decode batch. ``rows_per_query`` is the GQA group size (a
     query contributes that many MMA rows per KV head); ``max_query_rows``
-    bounds the Q-tile."""
+    bounds the Q-tile. ``rebalance`` runs the KV-split load-balancing pass
+    for the fused single-launch step list; ``select_n`` (the tile
+    selector's KV-tile rule, when the caller has one) makes its step-count
+    estimate exact instead of page-granular."""
     batch = int(block_tables.shape[0])
     forest = build_forest(block_tables, kv_lens, page_size)
     if strategy == "pat":
@@ -354,6 +438,8 @@ def schedule(
     plan = chunk_queries(plan, max_q)
     if split_long_kv and strategy != "query_centric":
         plan = long_kv_split(plan)
+    if rebalance and strategy != "query_centric":
+        plan = rebalance_kv_split(plan, select_n=select_n)
     return plan
 
 

@@ -66,11 +66,20 @@ def vmem_working_set(
     q_bytes: int,
     kv_bytes: int,
     v_head_dim: int | None = None,
+    share_kv: bool = False,
 ) -> int:
-    """Bytes of VMEM the multi-tile kernel holds resident for a (m, n) pair."""
+    """Bytes of VMEM the multi-tile kernel holds resident for a (m, n) pair.
+
+    ``share_kv`` models the MLA working set: V is a prefix slice of the K
+    tile (DeepSeek-style compressed KV), so the kernel allocates NO V
+    buffers or V DMA semaphores — the solver must not charge for them, or
+    it under-reports the VMEM actually available to larger tiles."""
     d = head_dim
     dv = v_head_dim if v_head_dim is not None else head_dim
-    kv_blocks = 2 * (n * d * kv_bytes + n * dv * kv_bytes)  # K+V, double buffered
+    if share_kv:
+        kv_blocks = 2 * n * d * kv_bytes  # K only, double buffered
+    else:
+        kv_blocks = 2 * (n * d * kv_bytes + n * dv * kv_bytes)  # K+V, double buffered
     q_block = m * d * q_bytes
     acc = m * dv * 4  # fp32 accumulator
     scores = m * n * 4  # fp32 score tile
@@ -88,17 +97,21 @@ def feasible_tiles(
     m_candidates: Tuple[int, ...] = (8, 16, 32, 64, 128, 256),
     n_candidates: Tuple[int, ...] = (16, 32, 64, 128, 256, 512, 1024),
     v_head_dim: int | None = None,
+    share_kv: bool = False,
 ) -> List[TileConfig]:
     """Solves ①-③ and returns the feasible (m, n) set for this hardware.
 
     Returns configs sorted by (m, n). Infeasibility reasons mirror the
     paper's Fig. 7b annotations and are available via `tile_table()`.
+    ``share_kv=True`` solves for the MLA working set (no V buffers), which
+    admits larger KV tiles on the same VMEM budget.
     """
     out = []
     for m in m_candidates:
         for n in n_candidates:
             ok, _ = check_tile(
-                m, n, spec, head_dim, page_size, q_bytes, kv_bytes, v_head_dim
+                m, n, spec, head_dim, page_size, q_bytes, kv_bytes,
+                v_head_dim, share_kv,
             )
             if ok:
                 out.append(TileConfig(m, n))
@@ -114,6 +127,7 @@ def check_tile(
     q_bytes: int,
     kv_bytes: int,
     v_head_dim: int | None = None,
+    share_kv: bool = False,
 ) -> Tuple[bool, str]:
     """Checks one (m, n) pair against constraints ①-③."""
     sublane = spec.sublane_bf16 if q_bytes == 2 else spec.sublane_f32
@@ -127,12 +141,15 @@ def check_tile(
     if n < page_size:
         return False, "③ n below page size"
     # ① VMEM capacity
-    ws = vmem_working_set(m, n, head_dim, q_bytes, kv_bytes, v_head_dim)
+    ws = vmem_working_set(
+        m, n, head_dim, q_bytes, kv_bytes, v_head_dim, share_kv
+    )
     if ws > spec.vmem_bytes * spec.vmem_budget_frac:
         return False, "① VMEM working set exceeds budget"
-    # ② bandwidth in-flight lower bound (K+V next-step blocks in flight)
+    # ② bandwidth in-flight lower bound (next-step blocks in flight; MLA
+    # keeps only K in flight — V rides inside the K tile)
     dv = v_head_dim if v_head_dim is not None else head_dim
-    in_flight = n * (head_dim + dv) * kv_bytes
+    in_flight = n * (head_dim if share_kv else head_dim + dv) * kv_bytes
     need = spec.hbm_latency_s * spec.hbm_bandwidth * spec.bandwidth_util_target
     if in_flight < need:
         return False, "② in-flight bytes below latency-bandwidth product"

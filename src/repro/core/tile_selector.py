@@ -81,6 +81,7 @@ class TileSelector:
         kv_bytes: int = 2,
         spec: TpuSpec | None = None,
         v_head_dim: int | None = None,
+        share_kv: bool = False,
     ):
         self.spec = spec or TpuSpec()
         self.page_size = page_size
@@ -91,6 +92,7 @@ class TileSelector:
             q_bytes=q_bytes,
             kv_bytes=kv_bytes,
             v_head_dim=v_head_dim,
+            share_kv=share_kv,
         )
         if not self.tiles:
             raise ValueError(
@@ -102,6 +104,21 @@ class TileSelector:
     @property
     def max_query_rows(self) -> int:
         return max(t.m for t in self.tiles)
+
+    def is_feasible(self, m: int, n: int) -> bool:
+        return (m, n) in self._feasible
+
+    def cap_n(self, m: int, n: int) -> int:
+        """Largest feasible KV tile n' <= n for Q-tile m, or 0 when none.
+
+        The fused single-launch plan sizes its VMEM working set for the
+        JOINT (m_max, n_max) across all work items, so per-item n choices
+        must be capped to what remains feasible at the plan-wide m_max."""
+        while n >= self.page_size:
+            if (m, n) in self._feasible:
+                return n
+            n //= 2
+        return 0
 
     def select(self, query_rows: int, kv_len: int) -> TileConfig:
         m = self.rules.select_m(query_rows)

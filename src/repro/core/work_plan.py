@@ -1,17 +1,23 @@
 """Work-plan construction: pack plan -> device-resident arrays (paper §5-§7).
 
 Bridges the host-side pack scheduler and the Pallas forward/merge kernels.
-Items are grouped by their selected (m, n) tile configuration; each group
-becomes one `pallas_call` whose grid is a *flattened ragged work list* (CSR
-over per-item KV steps) — the TPU-native realisation of the paper's
-multi-stream forward: no inter-item padding steps, no tail bubbles
-(DESIGN.md §2).
+Items are grouped by their selected (m, n) tile configuration, and the
+groups are then FUSED into one *unified step list* spanning the whole
+batch — the executed datapath is ONE `pallas_call` per decode step whose
+grid is a flattened ragged work list (CSR over per-item KV steps) with a
+per-step live-page count: variable-n tiling inside a single kernel, the
+TPU-native realisation of the paper's multi-stream forward (DESIGN.md §6).
+The per-group plans are kept as the oracle the tests compare against.
 
-Arrays produced per tile group g (numpy, built with vectorised CSR
-construction so planning cost stays flat at production batch sizes):
+Arrays produced per tile group g — and, identically shaped, for the
+unified plan with (m, ppb) = (m_max, ppb_max) — (numpy, built with
+vectorised CSR construction so planning cost stays flat at production
+batch sizes):
 
   step_item   [S]        item index of each flattened KV step
   step_pages  [S, ppb]   physical page ids the step's DMA fetches
+  step_npages [S]        LIVE pages of the step (the DMA fetches only
+                         these; trailing slots are tile padding)
   step_len    [S]        valid tokens in the step (1..n; masks the tail)
   step_start  [S]        1 on an item's first step (reset accumulator)
   step_end    [S]        1 on an item's last step (flush partials)
@@ -42,16 +48,19 @@ straight into the final output, so no fp32 partials or stats round-trip
 through HBM for them.
 
 Device residency (ISSUE 1 tentpole): a WorkPlan is uploaded to device ONCE
-per plan fingerprint via `WorkPlan.to_device()`, which also pads each
-group's (S, T) — and the compact merge table — up to power-of-two buckets
-(padded steps carry step_len=0 and are masked out by the kernels). The
-bucketed `DeviceWorkPlan` is what the jit-cached dispatch in `kernels.ops`
-consumes: stable bucket shapes mean the jitted forward+merge for a given
-(m, n, S_bucket, T_bucket, dk, dv) compiles once and is reused across
-decode steps and batches. `refresh_lengths` keeps the device copy fresh by
-re-uploading ONLY the arrays the lazy update touches (`step_len`,
-`item_kv_len`, and the step-activity arrays derived from `step_len` that
-gate the zero-token DMA skip); everything else stays resident.
+per plan fingerprint via `WorkPlan.to_device()`, which uploads the UNIFIED
+step list, padding its (S, T) — and the compact merge table — up to
+power-of-two buckets (padded steps carry step_len=0 / step_npages=0 and
+are masked out by the kernel). The bucketed `DeviceWorkPlan` is what the
+jit-cached dispatch in `kernels.ops` consumes: stable bucket shapes mean
+the jitted forward+merge for a given (m_max, n_max, S_bucket, T_bucket,
+dk, dv) compiles once and is reused across decode steps and batches.
+`refresh_lengths` keeps the device copy fresh by re-uploading ONLY the
+arrays the lazy update touches (`step_len`, `item_kv_len`, and the
+step-activity arrays derived from `step_len` that gate the zero-token DMA
+skip); everything else stays resident. The per-group arrays go to device
+only on demand (`to_device_groups`), for the oracle-jit baseline the
+tests and the fused-launch benchmark compare against.
 """
 
 from __future__ import annotations
@@ -70,6 +79,10 @@ from repro.core.tile_selector import TileSelector
 
 @dataclass
 class TileGroupPlan:
+    """CSR step arrays for one (m, n) tile group — and, with
+    (m, ppb) = (m_max, ppb_max), for the fused unified step list
+    (`WorkPlan.unified`), which is an instance of this same class."""
+
     tile: TileConfig
     pages_per_block: int
     num_items: int
@@ -84,6 +97,9 @@ class TileGroupPlan:
     item_kv_len: np.ndarray
     item_pages: np.ndarray  # [T, max_item_pages] (XLA fallback path)
     item_num_pages: np.ndarray  # [T]
+    # Live pages per step (page-granular DMA): the kernel issues copies for
+    # exactly these; trailing page slots of step_pages are tile padding.
+    step_npages: np.ndarray = None  # [S]
     # Lazy-update support: single-query items may cover the query's growing
     # region (its final partial page + vLLM-style pre-allocated pages);
     # their lengths are refreshed in O(steps) from fresh kv_lens without
@@ -130,12 +146,12 @@ _DEVICE_STATS = {
     "arrays_uploaded": 0,  # total host->device array transfers
 }
 
-# Arrays uploaded per group on a full upload / at most per lazy refresh
-# (kept as named constants so the stats accounting and its tests stay in
-# sync). A common within-page refresh uploads only 2 (step_len,
+# Arrays uploaded for the unified plan on a full upload / at most per lazy
+# refresh (kept as named constants so the stats accounting and its tests
+# stay in sync). A common within-page refresh uploads only 2 (step_len,
 # item_kv_len); the activity arrays ride along only when growth crosses a
 # page boundary and changes the active-step pattern.
-ARRAYS_PER_GROUP = 15
+ARRAYS_PER_PLAN = 16
 ARRAYS_PER_REFRESH = 5
 
 
@@ -180,6 +196,7 @@ class DeviceGroupArrays:
     pages_per_block: int
     step_item: jax.Array  # [S_bucket]
     step_pages: jax.Array  # [S_bucket, ppb]
+    step_npages: jax.Array  # [S_bucket] live pages (page-granular DMA)
     step_len: jax.Array  # [S_bucket] (refreshed by lazy update)
     step_start: jax.Array  # [S_bucket]
     step_end: jax.Array  # [S_bucket]
@@ -200,6 +217,7 @@ jax.tree_util.register_dataclass(
     data_fields=[
         "step_item",
         "step_pages",
+        "step_npages",
         "step_len",
         "step_start",
         "step_end",
@@ -222,10 +240,12 @@ jax.tree_util.register_dataclass(
 class DeviceWorkPlan:
     """Device-resident, bucket-padded realisation of a WorkPlan.
 
-    Carries the COMPACT split-only merge tables — the dense [B, Hq, P]
-    gather of the pre-split-aware datapath does not exist on device."""
+    Carries the UNIFIED step list (one fused forward launch per decode
+    step) plus the COMPACT split-only merge tables — neither the per-group
+    arrays nor the dense [B, Hq, P] gather of the pre-split-aware datapath
+    exist on device on the hot path."""
 
-    groups: List[DeviceGroupArrays]
+    unified: DeviceGroupArrays
     split_part_rows: jax.Array  # [rows_bucket, P_bucket], -1 = pad
     split_qh: jax.Array  # [rows_bucket] out row b*Hq+h (OOB = pad)
     split_cap: int  # compact partial-buffer size (0 = no split rows)
@@ -244,6 +264,12 @@ class WorkPlan:
     page_size: int
     strategy: str
     total_partial_rows: int
+    # Unified fused step list (DESIGN.md §6): all tile groups concatenated,
+    # rows padded to m_max, per-step live-page counts carrying each step's
+    # effective KV tile. None when the groups cannot be fused (no KV tile
+    # is feasible at the plan-wide m_max) — dispatch then falls back to the
+    # per-group oracle path.
+    unified: Optional[TileGroupPlan] = None
     # --- split-aware merge datapath (DESIGN.md §3) --------------------------
     split_queries: np.ndarray = None  # [num_split] query ids with >1 partial
     split_part_rows: np.ndarray = None  # [num_split*Hq, P_split]
@@ -253,6 +279,11 @@ class WorkPlan:
     # populated lazily by to_device(); carried across refresh_lengths so the
     # static arrays are uploaded exactly once per plan fingerprint
     device: Optional[DeviceWorkPlan] = field(
+        default=None, repr=False, compare=False
+    )
+    # per-group device arrays, uploaded only on demand (oracle-jit baseline
+    # for tests and the fused-launch A/B benchmark — not the hot path)
+    device_groups: Optional[List[DeviceGroupArrays]] = field(
         default=None, repr=False, compare=False
     )
 
@@ -269,75 +300,104 @@ class WorkPlan:
         return 0 if self.split_queries is None else int(len(self.split_queries))
 
     def dma_page_fetches(self) -> int:
-        """Pages the forward kernels will actually DMA this step: active
-        (step_len > 0) steps only, per KV head. Zero-token steps over
-        pre-allocated pages are skipped by the pipeline (DESIGN.md §4)."""
+        """Pages the forward kernel will actually DMA this step: live pages
+        (step_npages) of active (step_len > 0) steps only, per KV head.
+        Zero-token steps over pre-allocated pages are skipped by the
+        pipeline (DESIGN.md §4) and tile-padding page slots are never
+        issued (page-granular DMA, DESIGN.md §6)."""
+        gs = [self.unified] if self.unified is not None else self.groups
         total = 0
-        for g in self.groups:
-            active = int(np.count_nonzero(g.step_len > 0))
-            total += active * g.pages_per_block * self.num_kv_heads
+        for g in gs:
+            act = g.step_len > 0
+            total += int(g.step_npages[act].sum()) * self.num_kv_heads
         return total
 
-    def to_device(self, bucket: bool = True) -> DeviceWorkPlan:
-        """Uploads the plan's arrays to device, padding each group's
-        (S, T, max_pages, split rows) — and the compact merge table — to
+    def step_balance(self) -> dict:
+        """Load-balance metric of the unified step list: per-item KV-step
+        counts. ``straggler_ratio`` = max / mean — the KV-split rebalancing
+        pass (pack_scheduler.rebalance_kv_split) keeps it bounded so no
+        single item forms the tail of the fused launch."""
+        if self.unified is not None and self.unified.num_steps:
+            counts = np.bincount(
+                self.unified.step_item, minlength=self.unified.num_items
+            )
+        elif self.groups:
+            counts = np.concatenate(
+                [np.bincount(g.step_item, minlength=g.num_items) for g in self.groups]
+            )
+        else:
+            counts = np.zeros(1, np.int64)
+        mx = int(counts.max()) if counts.size else 0
+        mean = float(counts.mean()) if counts.size else 0.0
+        return {
+            "num_items": int(counts.size),
+            "max_item_steps": mx,
+            "mean_item_steps": mean,
+            "straggler_ratio": mx / mean if mean else 0.0,
+        }
+
+    def _device_group(
+        self, g: TileGroupPlan, split_base: int, cap_bucket: int, bucket: bool
+    ) -> DeviceGroupArrays:
+        """Uploads one group's (or the unified plan's) arrays, padded to
+        power-of-two buckets."""
+        S, T = g.num_steps, g.num_items
+        Sp = _next_pow2(S) if bucket else S
+        Tp = _next_pow2(T) if bucket else T
+        maxp = g.item_pages.shape[1]
+        maxpp = _next_pow2(maxp) if bucket else maxp
+        n_split = g.num_split_rows
+        Rp = _next_pow2(n_split) if bucket else max(1, n_split)
+        # Compact-buffer slots of this group's split rows: unpadded bases
+        # (they must match the split_part_rows values); padded entries
+        # scatter out of bounds and are dropped.
+        split_dst = np.full(Rp, max(cap_bucket, 1), np.int32)
+        split_dst[:n_split] = split_base + np.arange(n_split, dtype=np.int32)
+        # Padded steps must target the LAST item's block, not item 0's:
+        # they carry step_len=0 (no compute, no flush) and step_npages=0
+        # (no DMA), but on real TPU the output window is copied out
+        # whenever the block index changes — revisiting item 0 after its
+        # flush would clobber its partials with stale buffer contents.
+        # Revisiting the final block only re-emits values that are either
+        # just-flushed (Tp-1 == T-1) or never referenced by any merge
+        # table / fast-path scatter (padded item).
+        return DeviceGroupArrays(
+            kv_tile=g.tile.n,
+            pages_per_block=g.pages_per_block,
+            step_item=jnp.asarray(_pad_rows(g.step_item, Sp, fill=Tp - 1)),
+            step_pages=jnp.asarray(_pad_rows(g.step_pages, Sp)),
+            step_npages=jnp.asarray(_pad_rows(g.step_npages, Sp)),
+            step_len=jnp.asarray(_pad_rows(g.step_len, Sp)),
+            step_start=jnp.asarray(_pad_rows(g.step_start, Sp)),
+            step_end=jnp.asarray(_pad_rows(g.step_end, Sp)),
+            step_ord=jnp.asarray(_pad_rows(g.step_ord, Sp)),
+            act_steps=jnp.asarray(_pad_rows(g.act_steps, Sp)),
+            act_total=jnp.asarray(g.act_total),
+            row_query=jnp.asarray(_pad_rows(g.row_query, Tp, fill=-1)),
+            row_group=jnp.asarray(_pad_rows(g.row_group, Tp)),
+            row_sole=jnp.asarray(_pad_rows(g.row_sole, Tp)),
+            item_pages=jnp.asarray(
+                _pad_rows(_pad_cols(g.item_pages, maxpp), Tp)
+            ),
+            item_kv_len=jnp.asarray(_pad_rows(g.item_kv_len, Tp)),
+            split_src=jnp.asarray(_pad_rows(g.split_src, Rp)),
+            split_dst=jnp.asarray(split_dst),
+        )
+
+    def to_device(self, bucket: bool = True) -> Optional[DeviceWorkPlan]:
+        """Uploads the UNIFIED step list to device, padding its (S, T,
+        max_pages, split rows) — and the compact merge table — to
         power-of-two buckets. Idempotent: the upload happens once per
         WorkPlan; plans produced by `refresh_lengths` inherit the resident
-        arrays."""
+        arrays. Returns None when the plan has no fusable unified list
+        (dispatch then stays on the per-group oracle path)."""
         if self.device is not None:
             return self.device
-        dgroups: List[DeviceGroupArrays] = []
+        if self.unified is None:
+            return None
         cap = self.total_split_rows
         cap_bucket = (_next_pow2(cap) if bucket else cap) if cap else 0
-        base = 0
-        for g in self.groups:
-            m = g.row_query.shape[1]
-            S, T = g.num_steps, g.num_items
-            Sp = _next_pow2(S) if bucket else S
-            Tp = _next_pow2(T) if bucket else T
-            maxp = g.item_pages.shape[1]
-            maxpp = _next_pow2(maxp) if bucket else maxp
-            n_split = g.num_split_rows
-            Rp = _next_pow2(n_split) if bucket else max(1, n_split)
-            # Compact-buffer slots of this group's split rows: unpadded
-            # bases (they must match the split_part_rows values); padded
-            # entries scatter out of bounds and are dropped.
-            split_dst = np.full(Rp, max(cap_bucket, 1), np.int32)
-            split_dst[:n_split] = base + np.arange(n_split, dtype=np.int32)
-            base += n_split
-            # Padded steps must target the LAST item's block, not item 0's:
-            # they carry step_len=0 (no compute, no flush, no DMA), but on
-            # real TPU the output window is copied out whenever the block
-            # index changes — revisiting item 0 after its flush would
-            # clobber its partials with stale buffer contents. Revisiting
-            # the final block only re-emits values that are either
-            # just-flushed (Tp-1 == T-1) or never referenced by any merge
-            # table / fast-path scatter (padded item).
-            dgroups.append(
-                DeviceGroupArrays(
-                    kv_tile=g.tile.n,
-                    pages_per_block=g.pages_per_block,
-                    step_item=jnp.asarray(
-                        _pad_rows(g.step_item, Sp, fill=Tp - 1)
-                    ),
-                    step_pages=jnp.asarray(_pad_rows(g.step_pages, Sp)),
-                    step_len=jnp.asarray(_pad_rows(g.step_len, Sp)),
-                    step_start=jnp.asarray(_pad_rows(g.step_start, Sp)),
-                    step_end=jnp.asarray(_pad_rows(g.step_end, Sp)),
-                    step_ord=jnp.asarray(_pad_rows(g.step_ord, Sp)),
-                    act_steps=jnp.asarray(_pad_rows(g.act_steps, Sp)),
-                    act_total=jnp.asarray(g.act_total),
-                    row_query=jnp.asarray(_pad_rows(g.row_query, Tp, fill=-1)),
-                    row_group=jnp.asarray(_pad_rows(g.row_group, Tp)),
-                    row_sole=jnp.asarray(_pad_rows(g.row_sole, Tp)),
-                    item_pages=jnp.asarray(
-                        _pad_rows(_pad_cols(g.item_pages, maxpp), Tp)
-                    ),
-                    item_kv_len=jnp.asarray(_pad_rows(g.item_kv_len, Tp)),
-                    split_src=jnp.asarray(_pad_rows(g.split_src, Rp)),
-                    split_dst=jnp.asarray(split_dst),
-                )
-            )
+        unified = self._device_group(self.unified, 0, cap_bucket, bucket)
 
         # Compact split-only merge table: values are compact-buffer slots
         # with unpadded bases, so no remap is needed — only tail padding of
@@ -353,16 +413,32 @@ class WorkPlan:
             # padded merge rows scatter out of bounds and are dropped
             sqh = _pad_rows(sqh, rows_b, fill=self.batch_size * self.num_q_heads)
         self.device = DeviceWorkPlan(
-            groups=dgroups,
+            unified=unified,
             split_part_rows=jnp.asarray(spr),
             split_qh=jnp.asarray(sqh),
             split_cap=cap_bucket,
             bucketed=bucket,
         )
         _DEVICE_STATS["full_uploads"] += 1
-        # ARRAYS_PER_GROUP plan arrays per group + the two compact tables
-        _DEVICE_STATS["arrays_uploaded"] += ARRAYS_PER_GROUP * len(dgroups) + 2
+        # ARRAYS_PER_PLAN unified arrays + the two compact tables
+        _DEVICE_STATS["arrays_uploaded"] += ARRAYS_PER_PLAN + 2
         return self.device
+
+    def to_device_groups(self, bucket: bool = True) -> List[DeviceGroupArrays]:
+        """On-demand upload of the PER-GROUP arrays — the jitted per-group
+        oracle the fused launch is A/B-tested and benchmarked against.
+        Not part of the hot path and not counted by the transfer stats."""
+        if self.device_groups is not None:
+            return self.device_groups
+        cap = self.total_split_rows
+        cap_bucket = (_next_pow2(cap) if bucket else cap) if cap else 0
+        base = 0
+        dgs = []
+        for g in self.groups:
+            dgs.append(self._device_group(g, base, cap_bucket, bucket))
+            base += g.num_split_rows
+        self.device_groups = dgs
+        return dgs
 
 
 def _csr_expand(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -375,6 +451,72 @@ def _csr_expand(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
     within = np.arange(total, dtype=np.int64) - starts[rows]
     return rows, within
+
+
+def _build_unified(
+    groups: List[TileGroupPlan], Hkv: int, page: int
+) -> TileGroupPlan:
+    """Fuses the per-group plans into ONE step list (DESIGN.md §6).
+
+    Items are concatenated in group order; Q rows pad to m_max (reusing the
+    ``row_query = -1`` padding), page blocks pad to ppb_max, and every step
+    keeps its own live-page count — so one kernel executes all tile groups
+    with variable-n tiling instead of one launch per (m, n). Split-row ids
+    are remapped into the unified (t, h, col) layout; because groups are
+    concatenated in the same order the compact buffer slots were assigned,
+    the split tables themselves need no change."""
+    m_max = max(g.row_query.shape[1] for g in groups)
+    ppb_max = max(g.pages_per_block for g in groups)
+    maxp = max(g.item_pages.shape[1] for g in groups)
+    t_off = np.cumsum([0] + [g.num_items for g in groups])[:-1]
+    s_off = np.cumsum([0] + [g.num_steps for g in groups])[:-1]
+
+    def cat(field_vals):
+        return np.concatenate(list(field_vals), axis=0)
+
+    step_item = cat(
+        g.step_item.astype(np.int64) + o for g, o in zip(groups, t_off)
+    ).astype(np.int32)
+    step_len = cat(g.step_len for g in groups)
+    step_ord, act_steps, act_total = _activity_arrays(step_len)
+
+    # split rows remapped to the unified row layout, in group order (the
+    # compact-slot assignment order)
+    srcs = []
+    for g, o in zip(groups, t_off):
+        m_g = g.row_query.shape[1]
+        src = g.split_src.astype(np.int64)
+        t, r = src // (Hkv * m_g), src % (Hkv * m_g)
+        h, c = r // m_g, r % m_g
+        srcs.append((((t + o) * Hkv + h) * m_max + c).astype(np.int32))
+
+    return TileGroupPlan(
+        tile=TileConfig(m_max, ppb_max * page),
+        pages_per_block=ppb_max,
+        num_items=int(sum(g.num_items for g in groups)),
+        num_steps=int(sum(g.num_steps for g in groups)),
+        step_item=step_item,
+        step_pages=cat(_pad_cols(g.step_pages, ppb_max) for g in groups),
+        step_npages=cat(g.step_npages for g in groups),
+        step_len=step_len,
+        step_start=cat(g.step_start for g in groups),
+        step_end=cat(g.step_end for g in groups),
+        row_query=cat(_pad_cols(g.row_query, m_max, fill=-1) for g in groups),
+        row_group=cat(_pad_cols(g.row_group, m_max) for g in groups),
+        item_kv_len=cat(g.item_kv_len for g in groups),
+        item_pages=cat(_pad_cols(g.item_pages, maxp) for g in groups),
+        item_num_pages=cat(g.item_num_pages for g in groups),
+        item_tail_query=cat(g.item_tail_query for g in groups),
+        item_tok_offset=cat(g.item_tok_offset for g in groups),
+        item_step_begin=cat(
+            g.item_step_begin + o for g, o in zip(groups, s_off)
+        ).astype(np.int32),
+        row_sole=cat(_pad_cols(g.row_sole, m_max) for g in groups),
+        split_src=cat(srcs) if srcs else np.zeros(0, np.int32),
+        step_ord=step_ord,
+        act_steps=act_steps,
+        act_total=act_total,
+    )
 
 
 def build_work_plan(
@@ -398,11 +540,28 @@ def build_work_plan(
     Hq = num_q_heads
 
     # --- assign a tile config to every item (constant-time per item) -------
+    # Two passes: the per-item round-up selection first, then a JOINT
+    # feasibility cap — the fused single launch sizes its VMEM working set
+    # for the plan-wide (m_max, n_max), so each item's KV tile is capped to
+    # the largest n still feasible alongside m_max (DESIGN.md §6). If no
+    # KV tile is feasible at m_max (pathological hardware specs), the plan
+    # stays unfused and dispatch falls back to the per-group oracle.
+    sel_cfgs = [
+        selector.select(it.num_queries * group_size, it.num_tokens)
+        for it in plan.items
+    ]
+    m_max = max((c.m for c in sel_cfgs), default=0)
+    fusable = bool(plan.items)
     buckets: dict = {}
-    for it in plan.items:
-        rows = it.num_queries * group_size
-        cfg = selector.select(rows, it.num_tokens)
-        buckets.setdefault((cfg.m, cfg.n), []).append(it)
+    for it, cfg in zip(plan.items, sel_cfgs):
+        n = cfg.n
+        if m_max and not selector.is_feasible(m_max, n):
+            n_cap = selector.cap_n(m_max, n)
+            if n_cap:
+                n = n_cap
+            else:
+                fusable = False
+        buckets.setdefault((cfg.m, n), []).append(it)
 
     groups: List[TileGroupPlan] = []
     # merge bookkeeping, accumulated flat across groups then scattered once
@@ -446,11 +605,16 @@ def build_work_plan(
             item_pages[prow, pcol] = all_pages
         item_num_pages = npages.astype(np.int32)
 
-        # per-step page blocks, gathered from the item page table
+        # per-step page blocks, gathered from the item page table; the
+        # live-page count bounds the page-granular DMA (trailing slots are
+        # tile padding the kernel never fetches)
         col = j_in[:, None] * ppb + np.arange(ppb)[None, :]  # [S, ppb]
         in_range = col < npages[step_item64][:, None]
         gathered = item_pages[step_item64[:, None], np.minimum(col, maxp - 1)]
         step_pages = np.where(in_range, gathered, 0).astype(np.int32)
+        step_npages = np.clip(npages[step_item64] - j_in * ppb, 0, ppb).astype(
+            np.int32
+        )
 
         # packed Q rows: row (t, qi*G + g) holds query query_ids[qi], head g
         NQ = int(nq.sum())
@@ -516,6 +680,7 @@ def build_work_plan(
                 num_steps=S,
                 step_item=step_item64.astype(np.int32),
                 step_pages=step_pages,
+                step_npages=step_npages,
                 step_len=step_len,
                 step_start=step_start,
                 step_end=step_end,
@@ -619,6 +784,7 @@ def build_work_plan(
         page_size=page,
         strategy=plan.strategy,
         total_partial_rows=row_base,
+        unified=_build_unified(groups, Hkv, page) if fusable and groups else None,
         split_queries=split_ids,
         split_part_rows=split_part_rows,
         split_qh=split_qh,
@@ -688,6 +854,22 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
                 replace(g, item_kv_len=item_kv_len, step_len=step_len)
             )
         touched.append((True, act_changed))
+
+    any_touched = any(t for t, _ in touched)
+    act_any = any(a for _, a in touched)
+    # Rebuild the unified step list's refreshed arrays by concatenation —
+    # its structure (items, steps, rows, split tables) is untouched by a
+    # lazy refresh, only lengths and (rarely) the activity pattern move.
+    unified = wp.unified
+    if unified is not None and any_touched:
+        u_step_len = np.concatenate([g.step_len for g in new_groups])
+        u_item_kv = np.concatenate([g.item_kv_len for g in new_groups])
+        upd_u = dict(step_len=u_step_len, item_kv_len=u_item_kv)
+        if act_any:
+            u_ord, u_act, u_tot = _activity_arrays(u_step_len)
+            upd_u.update(step_ord=u_ord, act_steps=u_act, act_total=u_tot)
+        unified = replace(unified, **upd_u)
+
     new_wp = WorkPlan(
         groups=new_groups,
         part_rows=wp.part_rows,
@@ -697,42 +879,55 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
         page_size=wp.page_size,
         strategy=wp.strategy,
         total_partial_rows=wp.total_partial_rows,
+        unified=unified,
         split_queries=wp.split_queries,
         split_part_rows=wp.split_part_rows,
         split_qh=wp.split_qh,
         total_split_rows=wp.total_split_rows,
         meta=wp.meta,
     )
-    if wp.device is not None:
-        dgs = []
-        for g_new, dg, (was_touched, act_changed) in zip(
-            new_groups, wp.device.groups, touched
-        ):
-            if not was_touched:
-                dgs.append(dg)
-                continue
-            Sp = dg.step_len.shape[0]
-            Tp = dg.item_kv_len.shape[0]
-            upd = dict(
-                step_len=jnp.asarray(_pad_rows(g_new.step_len, Sp)),
-                item_kv_len=jnp.asarray(_pad_rows(g_new.item_kv_len, Tp)),
+
+    def _refresh_device_group(dg, g_new, act_changed):
+        Sp = dg.step_len.shape[0]
+        Tp = dg.item_kv_len.shape[0]
+        upd = dict(
+            step_len=jnp.asarray(_pad_rows(g_new.step_len, Sp)),
+            item_kv_len=jnp.asarray(_pad_rows(g_new.item_kv_len, Tp)),
+        )
+        if act_changed:
+            upd.update(
+                step_ord=jnp.asarray(_pad_rows(g_new.step_ord, Sp)),
+                act_steps=jnp.asarray(_pad_rows(g_new.act_steps, Sp)),
+                act_total=jnp.asarray(g_new.act_total),
             )
-            if act_changed:
-                upd.update(
-                    step_ord=jnp.asarray(_pad_rows(g_new.step_ord, Sp)),
-                    act_steps=jnp.asarray(_pad_rows(g_new.act_steps, Sp)),
-                    act_total=jnp.asarray(g_new.act_total),
-                )
-            dgs.append(replace(dg, **upd))
+        return replace(dg, **upd), len(upd)
+
+    if wp.device is not None:
+        d_unified = wp.device.unified
+        if any_touched and unified is not None:
+            d_unified, n_arrays = _refresh_device_group(
+                d_unified, unified, act_any
+            )
             _DEVICE_STATS["refresh_uploads"] += 1
-            _DEVICE_STATS["arrays_uploaded"] += len(upd)
+            _DEVICE_STATS["arrays_uploaded"] += n_arrays
         new_wp.device = DeviceWorkPlan(
-            groups=dgs,
+            unified=d_unified,
             split_part_rows=wp.device.split_part_rows,
             split_qh=wp.device.split_qh,
             split_cap=wp.device.split_cap,
             bucketed=wp.device.bucketed,
         )
+    # per-group oracle arrays (benchmark/test path): refresh without stats
+    if wp.device_groups is not None:
+        dgs = []
+        for g_new, dg, (was_touched, act_changed) in zip(
+            new_groups, wp.device_groups, touched
+        ):
+            if not was_touched:
+                dgs.append(dg)
+            else:
+                dgs.append(_refresh_device_group(dg, g_new, act_changed)[0])
+        new_wp.device_groups = dgs
     return new_wp
 
 

@@ -1,8 +1,10 @@
 """Jit-cached, device-resident dispatch for the PAT kernels.
 
 `pat_paged_attention` executes a WorkPlan through the SPLIT-AWARE merge
-datapath (DESIGN.md §3): per tile group it packs the Q rows and runs the
-forward kernel (Pallas, or an XLA fallback with identical semantics), then
+datapath (DESIGN.md §3) over the UNIFIED fused step list (DESIGN.md §6):
+it packs the Q rows ONCE per decode step and runs ONE forward launch
+(Pallas, or an XLA fallback with identical semantics) covering every tile
+group, then
 
   * FAST PATH — rows whose query landed in exactly ONE work item (the
     dominant fraction of a typical decode batch) come out of the forward
@@ -16,15 +18,16 @@ forward kernel (Pallas, or an XLA fallback with identical semantics), then
     partial tensors), merged through the compact ``split_part_rows``
     table, and the merged rows are scattered into the same output.
 
-Dispatch (ISSUE 1 tentpole): plans coming off the lazy-update cache are
-device-resident (`WorkPlan.to_device()` uploaded their arrays once, padded
-to power-of-two buckets) and execute through ONE jitted forward+merge whose
-cache key is the bucketed shape signature — so a given (m, n, S_bucket,
-T_bucket, dk, dv, split_cap) compiles once and is reused across decode
-steps, layers, and batches. The legacy per-call path (host arrays moved
-with `jnp.asarray` at every invocation, eager op dispatch) remains for
-plans built directly by `build_work_plan`, e.g. one-shot tests; pass
-``dispatch="jit"`` / ``dispatch="eager"`` to force either.
+Dispatch: plans coming off the lazy-update cache are device-resident
+(`WorkPlan.to_device()` uploaded the unified arrays once, padded to
+power-of-two buckets) and execute through ONE jitted forward+merge whose
+cache key is the bucketed shape signature — so a given (m_max, n_max,
+S_bucket, T_bucket, dk, dv, split_cap) compiles once and is reused across
+decode steps, layers, and batches. The PER-GROUP path — one launch per
+(m, n) tile group, the pre-fused datapath — survives only as the oracle
+and A/B baseline: ``dispatch="eager"`` runs it from host arrays,
+``dispatch="jit_groups"`` runs it jitted from on-demand device arrays
+(`WorkPlan.to_device_groups`).
 
 The XLA fallback exists because Pallas TPU kernels cannot be compiled for a
 CPU host-platform target; it computes the same (sole-normalised) partials
@@ -46,10 +49,21 @@ from repro.kernels import pat_decode
 from repro.kernels import ref as ref_mod
 from repro.core.work_plan import DeviceGroupArrays, TileGroupPlan, WorkPlan
 
-# Instrumentation for the overhead benchmark and the dispatch-cache
-# regression test: `traces` increments only when jax actually (re)traces the
-# forward+merge — zero growth across steps means the jit cache is warm.
-_DISPATCH_STATS = {"traces": 0, "jit_calls": 0, "eager_calls": 0}
+# Instrumentation for the overhead benchmark and the dispatch-cache / fused-
+# launch regression tests: `traces` increments only when jax actually
+# (re)traces the forward+merge — zero growth across steps means the jit
+# cache is warm — and `forward_launches` counts forward-kernel launches
+# placed per EXECUTION OF THE BODY: once per call on the eager path, but
+# only at trace time on the jit path (warm-cache steps add 0). Consume it
+# on the eager path or across a known-fresh trace; the structural
+# launches-per-step guarantee is asserted on the jaxpr in
+# tests/test_fused_launch.py.
+_DISPATCH_STATS = {
+    "traces": 0,
+    "jit_calls": 0,
+    "eager_calls": 0,
+    "forward_launches": 0,
+}
 
 # Bound on the one-shot page gather of the XLA fallback: items are
 # processed in chunks of this many, so the gathered KV working set is
@@ -66,25 +80,55 @@ def reset_dispatch_stats() -> None:
         _DISPATCH_STATS[k] = 0
 
 
+def q_row_major(q: jax.Array, num_kv_heads: int) -> jax.Array:
+    """[B, Hq, dk] -> [B*G, Hkv, dk] row-major query layout.
+
+    This reshape/transpose depends only on (q, Hkv) — it is hoisted out of
+    the per-group packing so a decode step performs it exactly once (the
+    fused path has a single gather anyway; the per-group oracle path used
+    to redo it per tile group)."""
+    B, Hq, dk = q.shape
+    G = Hq // num_kv_heads
+    # [B, Hkv, G, dk] -> [B, G, Hkv, dk] -> [B*G, Hkv, dk]
+    return (
+        q.reshape(B, num_kv_heads, G, dk)
+        .transpose(0, 2, 1, 3)
+        .reshape(B * G, num_kv_heads, dk)
+    )
+
+
+def gather_q_rows(
+    qr: jax.Array,  # [B*G, Hkv, dk] from q_row_major
+    row_query: jax.Array,  # [T, m] int32 (-1 pad)
+    row_group: jax.Array,  # [T, m] int32
+    group_size: int,
+) -> jax.Array:
+    """Gathers packed Q rows for one step list -> [T, Hkv, m, dk].
+
+    Row (t, r) holds query ``row_query[t,r]``'s head ``h*G + row_group[t,r]``
+    for each KV head h of the grid.
+    """
+    Hkv, dk = qr.shape[1], qr.shape[2]
+    idx = jnp.maximum(row_query, 0) * group_size + row_group  # [T, m]
+    T, m = row_query.shape
+    packed = jnp.take(qr, idx.reshape(-1), axis=0)  # [T*m, Hkv, dk]
+    return packed.reshape(T, m, Hkv, dk).transpose(0, 2, 1, 3)
+
+
 def pack_q_rows(
     q: jax.Array,  # [B, Hq, dk]
     row_query: jax.Array,  # [T, m] int32 (-1 pad)
     row_group: jax.Array,  # [T, m] int32
     num_kv_heads: int,
 ) -> jax.Array:
-    """Packs query rows for one tile group -> [T, Hkv, m, dk].
-
-    Row (t, r) holds query ``row_query[t,r]``'s head ``h*G + row_group[t,r]``
-    for each KV head h of the grid.
-    """
-    B, Hq, dk = q.shape
-    G = Hq // num_kv_heads
-    # [B, Hkv, G, dk] -> [B, G, Hkv, dk] -> [B*G, Hkv, dk]
-    qr = q.reshape(B, num_kv_heads, G, dk).transpose(0, 2, 1, 3).reshape(B * G, num_kv_heads, dk)
-    idx = jnp.maximum(row_query, 0) * G + row_group  # [T, m]
-    T, m = row_query.shape
-    packed = jnp.take(qr, idx.reshape(-1), axis=0)  # [T*m, Hkv, dk]
-    return packed.reshape(T, m, num_kv_heads, dk).transpose(0, 2, 1, 3)
+    """Packs query rows for one step list -> [T, Hkv, m, dk]
+    (`q_row_major` + `gather_q_rows` in one call, for one-shot callers)."""
+    return gather_q_rows(
+        q_row_major(q, num_kv_heads),
+        row_query,
+        row_group,
+        q.shape[1] // num_kv_heads,
+    )
 
 
 def _xla_items_forward(
@@ -146,11 +190,12 @@ def xla_group_forward(
     row_sole: Optional[jax.Array] = None,  # [T, m] int32 fast-path flags
     item_chunk: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """XLA-only forward with kernel-identical semantics.
+    """XLA-only forward with kernel-identical semantics — runs one step
+    list (the fused unified plan, or one tile group on the oracle path).
 
     Items are processed in chunks of ``item_chunk`` (default
     ``XLA_ITEM_CHUNK``), so the page gather materialises at most
-    ``item_chunk * maxp`` pages at a time instead of the whole group's
+    ``item_chunk * maxp`` pages at a time instead of the whole list's
     ``T * maxp`` — keeping the CPU fallback usable at production batch/KV
     sizes. Under jit the chunks run as a `lax.map` (compiled once); on the
     eager path they run as a python loop, because an eager `lax.map`
@@ -209,9 +254,9 @@ def xla_group_forward(
 def _host_group_arrays(
     g: TileGroupPlan, split_base: int, split_cap: int
 ) -> DeviceGroupArrays:
-    """Legacy per-call upload of one group's host arrays (eager path only;
-    the hot path uses the plan's device-resident copies instead).
-    DeviceGroupArrays is a registered pytree, so both paths hand the SAME
+    """Legacy per-call upload of one group's host arrays (eager oracle path
+    only; the hot path uses the plan's device-resident unified arrays).
+    DeviceGroupArrays is a registered pytree, so every path hands the SAME
     structure to the forward+merge body — one field list, no parallel
     positional tuples."""
     n_split = g.num_split_rows
@@ -224,6 +269,7 @@ def _host_group_arrays(
         pages_per_block=g.pages_per_block,
         step_item=jnp.asarray(g.step_item),
         step_pages=jnp.asarray(g.step_pages),
+        step_npages=jnp.asarray(g.step_npages),
         step_len=jnp.asarray(g.step_len),
         step_start=jnp.asarray(g.step_start),
         step_end=jnp.asarray(g.step_end),
@@ -244,7 +290,7 @@ def _forward_merge(
     q: jax.Array,
     k_pages: jax.Array,
     v_pages: Optional[jax.Array],
-    group_arrays: Tuple,  # per group: DeviceGroupArrays (pytree)
+    group_arrays: Tuple,  # step lists: (unified,) fused, or per-group oracle
     split_table: jax.Array,  # [R_split, P] compact merge table
     split_qh: jax.Array,  # [R_split] output rows of merged results
     *,
@@ -257,7 +303,9 @@ def _forward_merge(
     interpret: bool,
 ) -> jax.Array:
     """Shared pack -> forward -> split-aware merge body (traced under jit
-    on the hot path, executed eagerly on the legacy path)."""
+    on the hot path, executed eagerly on the legacy path). On the fused
+    path ``group_arrays`` is the one-element unified step list, so exactly
+    ONE forward launch is placed per decode step."""
     B, Hq, _ = q.shape
     Hkv = num_kv_heads
     G = Hq // Hkv
@@ -271,9 +319,14 @@ def _forward_merge(
         split_o = jnp.zeros((split_cap, dv), jnp.float32)
         split_st = jnp.zeros((split_cap, 2), jnp.float32)
 
+    # The row-major Q layout is computed ONCE per decode step; each step
+    # list (one on the fused path) only gathers from it.
+    qr = q_row_major(q, Hkv)
+
     for ga in group_arrays:
         rq, rg = ga.row_query, ga.row_group
-        qp = pack_q_rows(q, rq, rg, Hkv)
+        qp = gather_q_rows(qr, rq, rg, G)
+        _DISPATCH_STATS["forward_launches"] += 1
         if impl == "pallas":
             o, st = pat_decode.pat_decode_forward(
                 qp,
@@ -281,6 +334,7 @@ def _forward_merge(
                 v_pages,
                 ga.step_item,
                 ga.step_pages,
+                ga.step_npages,
                 ga.step_len,
                 ga.step_start,
                 ga.step_end,
@@ -312,7 +366,7 @@ def _forward_merge(
         dst = jnp.where(sole[:, None, :], dst, B * Hq)
         out = out.at[dst.reshape(-1)].set(flat_o, mode="drop")
 
-        # slow path: compact this group's split rows into the split-only
+        # slow path: compact this list's split rows into the split-only
         # partial buffers (sized for split rows, not the whole batch)
         if use_slow:
             flat_st = st.transpose(0, 1, 3, 2).reshape(T * Hkv * m, 2)
@@ -350,7 +404,7 @@ def _traced_forward_merge(
 # One jitted entry point: jax's jit cache keys on the static config plus the
 # (bucketed) shapes/dtypes of every argument array — DeviceGroupArrays is a
 # pytree whose (kv_tile, pages_per_block) metadata is part of the treedef —
-# which IS the dispatch signature (m, n, S_bucket, T_bucket, dk, dv,
+# which IS the dispatch signature (m_max, n_max, S_bucket, T_bucket, dk, dv,
 # split_cap, B, Hq, ...).
 _forward_merge_jit = jax.jit(
     _traced_forward_merge,
@@ -377,14 +431,18 @@ def pat_paged_attention(
     merge_impl: str = "pallas",  # "pallas" | "xla"
     v_head_dim: Optional[int] = None,
     interpret: bool = True,
-    dispatch: str = "auto",  # "auto" | "jit" | "eager"
+    dispatch: str = "auto",  # "auto" | "jit" | "jit_groups" | "eager"
 ) -> jax.Array:
     """Full pack->forward->split-aware-merge decode attention. Returns
     [B, Hq, dv].
 
-    ``dispatch="auto"`` uses the jit-cached device-resident path whenever
-    the plan has already been uploaded (plans served by the lazy-update
-    PlanCache always are) and the legacy eager path otherwise.
+    ``dispatch="auto"`` uses the fused jit-cached device-resident path
+    (ONE forward launch per decode step) whenever the plan has a unified
+    step list and has been uploaded (plans served by the lazy-update
+    PlanCache always are); otherwise the legacy per-group eager path.
+    ``dispatch="jit"`` forces the fused path, ``dispatch="jit_groups"``
+    the jitted per-group oracle (A/B baseline), ``dispatch="eager"`` the
+    host-array per-group oracle.
     """
     B, Hq, dk = q.shape
     Hkv = wp.num_kv_heads
@@ -392,24 +450,51 @@ def pat_paged_attention(
         scale = 1.0 / (dk**0.5)
     dv = v_head_dim if v_pages is None else v_pages.shape[-1]
 
-    use_jit = dispatch == "jit" or (dispatch == "auto" and wp.device is not None)
-    if use_jit:
-        dwp = wp.to_device()
+    def run_jit(step_lists, split_table, sqh, cap):
+        # single jitted entry shared by the fused hot path and the
+        # per-group oracle — one call site, no parameter drift between the
+        # A/B'd paths
         _DISPATCH_STATS["jit_calls"] += 1
         return _forward_merge_jit(
             q,
             k_pages,
             v_pages,
-            tuple(dwp.groups),
-            dwp.split_part_rows,
-            dwp.split_qh,
+            step_lists,
+            split_table,
+            sqh,
             scale=float(scale),
             impl=impl,
             merge_impl=merge_impl,
             v_head_dim=dv,
             num_kv_heads=Hkv,
-            split_cap=dwp.split_cap,
+            split_cap=cap,
             interpret=interpret,
+        )
+
+    use_fused = dispatch == "jit" or (
+        dispatch == "auto" and wp.device is not None and wp.unified is not None
+    )
+    if use_fused:
+        dwp = wp.to_device()
+        assert dwp is not None, "fused dispatch needs a unified step list"
+        return run_jit(
+            (dwp.unified,), dwp.split_part_rows, dwp.split_qh, dwp.split_cap
+        )
+
+    if dispatch == "jit_groups":
+        # Jitted per-group oracle: one launch per tile group from
+        # on-demand device-resident group arrays (benchmark baseline).
+        dgs = wp.to_device_groups()
+        dwp = wp.to_device()
+        if dwp is not None:
+            return run_jit(
+                tuple(dgs), dwp.split_part_rows, dwp.split_qh, dwp.split_cap
+            )
+        return run_jit(
+            tuple(dgs),
+            jnp.asarray(wp.split_part_rows),
+            jnp.asarray(wp.split_qh),
+            wp.total_split_rows,
         )
 
     _DISPATCH_STATS["eager_calls"] += 1

@@ -1,30 +1,36 @@
 """PAT multi-tile prefix-aware decode attention — Pallas TPU kernel.
 
-One `pallas_call` executes one tile group (all work items that selected the
-same (m, n) configuration). The grid is the *flattened ragged work list*:
+One `pallas_call` executes the UNIFIED step list of a whole decode step
+(every tile group, fused — DESIGN.md §6); the same kernel also runs a
+single per-group plan for the oracle path. The grid is the *flattened
+ragged work list*:
 
     grid = (num_kv_heads, total_kv_steps)
 
 where ``total_kv_steps`` is the sum over items of their KV-step counts —
 the TPU-native equivalent of the paper's multi-stream forward: there are no
 inter-item padding steps, so the execution bubble the GPU design fights
-never materialises (DESIGN.md §2).
+never materialises (DESIGN.md §2), and since PR 3 there is no per-group
+launch either: one decode step = one forward launch.
 
 Memory movement (the part the paper optimises):
   * K/V pages live in HBM (`memory_space=ANY`); each ACTIVE grid step DMAs
-    the ``pages_per_block`` pages of its KV tile into a double-buffered
-    VMEM scratch via `pltpu.make_async_copy` — the `cp_async` +
-    double-buffering structure of the paper, driven by scalar-prefetched
-    page tables.
+    its LIVE pages (``step_npages[s]`` of the up-to-``pages_per_block``
+    page slots — variable-n tiling: steps from small-KV-tile groups carry
+    fewer pages) into a double-buffered VMEM scratch via
+    `pltpu.make_async_copy` — the `cp_async` + double-buffering structure
+    of the paper, driven by scalar-prefetched page tables. Tile-padding
+    page slots are never fetched (the seed kernel re-fetched page 0 for
+    every dead slot).
   * Steps with ``step_len == 0`` cover nothing but pre-allocated (not yet
     filled) pages — the lazy update keeps them in the plan so the
     fingerprint stays stable while the batch grows. They issue NO K/V DMA
     at all: the double-buffer pipeline is driven by the scalar-prefetched
     activity arrays (``step_ord`` ranks active steps, ``act_steps`` lists
     them, ``act_total`` counts them), so buffer parity follows the count
-    of DMAs actually issued and stays correct across skipped steps
-    (DESIGN.md §4). Before this, every pre-allocated page was fetched and
-    discarded on every decode step — pure wasted bandwidth.
+    of buffer handoffs actually performed and stays correct across skipped
+    steps (DESIGN.md §4). Within a step the page-granular copies all land
+    in the SAME buffer slot, so variable page counts never perturb parity.
   * The packed Q tile [m, dk] is a regular BlockSpec input; because
     consecutive steps of one item share the block index, Pallas keeps it
     resident in VMEM (loaded once per item, not once per step).
@@ -42,7 +48,11 @@ models — the TPU twist that makes packed decode MXU-friendly.
 
 MLA sharing: with ``share_kv=True`` the V tile is a prefix-slice of the K
 tile (DeepSeek-style compressed KV: V = c_kv = K[:, :dv]) and the kernel
-skips the V DMA entirely — halving HBM traffic for MLA decode.
+skips the V DMA entirely — halving HBM traffic for MLA decode. In this
+mode NO V scratch buffer and NO V DMA semaphores are allocated (the seed
+allocated both and silently ate ``2*ppb*page*dv`` bytes of the VMEM the
+tile solver thought was available; `tile_config.vmem_working_set` models
+the same distinction).
 """
 
 from __future__ import annotations
@@ -62,6 +72,7 @@ def _kernel(
     # --- scalar prefetch (SMEM) ---
     step_item_ref,  # [S]
     step_pages_ref,  # [S, ppb]
+    step_npages_ref,  # [S] live pages of the step (page-granular DMA)
     step_len_ref,  # [S]
     step_start_ref,  # [S]
     step_end_ref,  # [S]
@@ -76,14 +87,14 @@ def _kernel(
     # --- outputs ---
     o_ref,  # VMEM block (1, 1, m, dv) fp32
     stats_ref,  # VMEM block (1, 1, 2, m) fp32
-    # --- scratch ---
+    # --- scratch (V buffers/semaphores exist only when V is fetched) ---
     k_buf,  # VMEM (2, ppb, page, dk)
-    v_buf,  # VMEM (2, ppb, page, dv) (unused when share_kv)
     acc_ref,  # VMEM (m, dv) fp32
     m_scr,  # VMEM (m, 128) fp32
     l_scr,  # VMEM (m, 128) fp32
     k_sems,  # DMA sems (2, ppb)
-    v_sems,  # DMA sems (2, ppb)
+    v_buf=None,  # VMEM (2, ppb, page, dv) — absent when share_kv
+    v_sems=None,  # DMA sems (2, ppb) — absent when share_kv
     *,
     ppb: int,
     page: int,
@@ -100,47 +111,61 @@ def _kernel(
     s = pl.program_id(1)
     # The DMA pipeline advances over ACTIVE steps only (zero-token DMA
     # skip). Buffer parity therefore follows the *active* linear index
-    # h * A + a — one slot flip per DMA actually issued — so it stays
-    # consistent across skipped steps and across the (h, last-active) ->
-    # (h+1, first-active) wrap even for odd active counts.
+    # h * A + a — one slot flip per step that actually lands copies — so
+    # it stays consistent across skipped steps and across the
+    # (h, last-active) -> (h+1, first-active) wrap even for odd active
+    # counts. Within a step, all of its (variable-count) page copies land
+    # in the same slot, so page-granular DMA never perturbs parity.
     A = act_total_ref[0]
     a = step_ord_ref[s]
     active = step_len_ref[s] > 0
     slot = jax.lax.rem(h * A + a, 2)
 
     def start_copies(head_idx, step_idx, buf_slot):
+        # Issue only the step's LIVE pages; trailing page slots are tile
+        # padding (the per-group kernels used to fetch them redundantly).
+        npg = step_npages_ref[step_idx]
         for j in range(ppb):
-            pid = step_pages_ref[step_idx, j]
-            pltpu.make_async_copy(
-                k_hbm.at[head_idx, pid], k_buf.at[buf_slot, j], k_sems.at[buf_slot, j]
-            ).start()
-            if not share_kv:
+
+            @pl.when(j < npg)
+            def _():
+                pid = step_pages_ref[step_idx, j]
                 pltpu.make_async_copy(
-                    v_hbm.at[head_idx, pid],
-                    v_buf.at[buf_slot, j],
-                    v_sems.at[buf_slot, j],
+                    k_hbm.at[head_idx, pid],
+                    k_buf.at[buf_slot, j],
+                    k_sems.at[buf_slot, j],
                 ).start()
+                if not share_kv:
+                    pltpu.make_async_copy(
+                        v_hbm.at[head_idx, pid],
+                        v_buf.at[buf_slot, j],
+                        v_sems.at[buf_slot, j],
+                    ).start()
 
     def wait_copies(head_idx, step_idx, buf_slot):
         # Waits must be built from the same (head, page) descriptors whose
         # copies were started (warm-up or the previous active step's
-        # prefetch): a wait on a dummy ref like k_hbm.at[h, 0] happens to
-        # decrement the right semaphore today, but silently skews the
-        # bookkeeping the moment source shapes diverge from the started
-        # copy's.
+        # prefetch), gated by the same live-page bound: a wait on a page
+        # slot that was never started would deadlock, and a wait on a
+        # dummy ref silently skews the semaphore bookkeeping the moment
+        # source shapes diverge from the started copy's.
+        npg = step_npages_ref[step_idx]
         for j in range(ppb):
-            pid = step_pages_ref[step_idx, j]
-            pltpu.make_async_copy(
-                k_hbm.at[head_idx, pid],
-                k_buf.at[buf_slot, j],
-                k_sems.at[buf_slot, j],
-            ).wait()
-            if not share_kv:
+
+            @pl.when(j < npg)
+            def _():
+                pid = step_pages_ref[step_idx, j]
                 pltpu.make_async_copy(
-                    v_hbm.at[head_idx, pid],
-                    v_buf.at[buf_slot, j],
-                    v_sems.at[buf_slot, j],
+                    k_hbm.at[head_idx, pid],
+                    k_buf.at[buf_slot, j],
+                    k_sems.at[buf_slot, j],
                 ).wait()
+                if not share_kv:
+                    pltpu.make_async_copy(
+                        v_hbm.at[head_idx, pid],
+                        v_buf.at[buf_slot, j],
+                        v_sems.at[buf_slot, j],
+                    ).wait()
 
     # Warm-up: the very first ACTIVE step of the whole grid issues its own
     # copies (inactive steps before it touch no buffer).
@@ -211,6 +236,11 @@ def _kernel(
             v = k_buf[slot].reshape(n, dk)[:, :dv]
         else:
             v = v_buf[slot].reshape(n, dv)
+        # With page-granular DMA the tail of the buffer beyond the step's
+        # live pages holds stale bytes; p is 0 there, but 0 * Inf/NaN
+        # garbage would still poison the matmul — zero the dead V rows.
+        vrow = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+        v = jnp.where(vrow < valid, v, 0.0)
         pv = jax.lax.dot_general(
             p.astype(v.dtype),
             v,
@@ -241,6 +271,7 @@ def pat_decode_forward(
     v_pages: Optional[jax.Array],  # [Hkv, P, page, dv]; None => share_kv
     step_item: jax.Array,  # [S] int32
     step_pages: jax.Array,  # [S, ppb] int32
+    step_npages: jax.Array,  # [S] int32 live pages per step
     step_len: jax.Array,  # [S] int32
     step_start: jax.Array,  # [S] int32
     step_end: jax.Array,  # [S] int32
@@ -254,10 +285,11 @@ def pat_decode_forward(
     v_head_dim: Optional[int] = None,
     interpret: bool = True,
 ):
-    """Runs one tile group; returns (partial_o [T,Hkv,m,dv] fp32,
-    stats [T,Hkv,2,m] fp32). Rows flagged in ``row_sole`` come back
-    already normalised (final values); all other rows are unnormalised
-    partial numerators to be combined by the merge kernel."""
+    """Runs one step list (the fused unified plan, or one tile group on the
+    oracle path); returns (partial_o [T,Hkv,m,dv] fp32, stats [T,Hkv,2,m]
+    fp32). Rows flagged in ``row_sole`` come back already normalised
+    (final values); all other rows are unnormalised partial numerators to
+    be combined by the merge kernel."""
     T, Hkv, m, dk = q_packed.shape
     share_kv = v_pages is None
     if share_kv:
@@ -285,8 +317,24 @@ def pat_decode_forward(
         share_kv=share_kv,
     )
 
+    # MLA (share_kv) fetches no V: allocate neither the V double buffer nor
+    # its DMA semaphores, freeing 2*ppb*page*dv bytes of VMEM for the tile
+    # solver's budget (tile_config.vmem_working_set models this).
+    scratch_shapes = [
+        pltpu.VMEM((2, ppb, page, dk), k_pages.dtype),
+        pltpu.VMEM((m, dv), jnp.float32),
+        pltpu.VMEM((m, 128), jnp.float32),
+        pltpu.VMEM((m, 128), jnp.float32),
+        pltpu.SemaphoreType.DMA((2, ppb)),
+    ]
+    if not share_kv:
+        scratch_shapes += [
+            pltpu.VMEM((2, ppb, page, dv), k_pages.dtype),
+            pltpu.SemaphoreType.DMA((2, ppb)),
+        ]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=8,
+        num_scalar_prefetch=9,
         grid=(Hkv, S),
         in_specs=[
             pl.BlockSpec(
@@ -310,15 +358,7 @@ def pat_decode_forward(
                 lambda h, s, *refs: (refs[0][s], h, 0, 0),
             ),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((2, ppb, page, dk), k_pages.dtype),
-            pltpu.VMEM((2, ppb, page, dv), k_pages.dtype),
-            pltpu.VMEM((m, dv), jnp.float32),
-            pltpu.VMEM((m, 128), jnp.float32),
-            pltpu.VMEM((m, 128), jnp.float32),
-            pltpu.SemaphoreType.DMA((2, ppb)),
-            pltpu.SemaphoreType.DMA((2, ppb)),
-        ],
+        scratch_shapes=scratch_shapes,
     )
 
     out_shapes = [
@@ -335,6 +375,7 @@ def pat_decode_forward(
     )(
         step_item,
         step_pages,
+        step_npages,
         step_len,
         step_start,
         step_end,

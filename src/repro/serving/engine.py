@@ -108,7 +108,7 @@ class Engine:
             )
             self.backend = PatAttentionBackend(
                 cfg.num_heads, 1, dk, v_head_dim=cfg.mla.kv_lora_rank,
-                kv_dtype_bytes=4, config=self.pat_config,
+                kv_dtype_bytes=4, config=self.pat_config, share_kv=True,
             )
         else:
             kvcfg = KVCacheConfig(

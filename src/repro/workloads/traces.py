@@ -177,6 +177,35 @@ FIG10_CONFIGS = [
 ]
 
 
+def skewed_decode_batch(
+    num_short: int = 60,
+    short_pages: int = 3,
+    num_long: int = 4,
+    long_pages: int = 256,
+    page_size: int = 16,
+):
+    """No-share decode batch with a skewed KV-length distribution: many
+    short private contexts plus a few very long ones — the straggler-tail
+    stress case for the fused single-launch step list (a handful of long
+    items would otherwise dominate the unified grid; the KV-split
+    rebalancing pass must split them down to the step-count mean)."""
+    rows, lens, nxt = [], [], 0
+    for i in range(num_short):
+        k = 1 + i % short_pages
+        rows.append(list(range(nxt, nxt + k)))
+        nxt += k
+        lens.append(k * page_size - 3)
+    for _ in range(num_long):
+        rows.append(list(range(nxt, nxt + long_pages)))
+        nxt += long_pages
+        lens.append(long_pages * page_size - 3)
+    maxp = max(len(r) for r in rows)
+    bt = -np.ones((len(rows), maxp), np.int32)
+    for b, r in enumerate(rows):
+        bt[b, : len(r)] = r
+    return bt, np.asarray(lens, np.int64)
+
+
 def synthetic_decode_batch(B, L, page_size: int = 16, no_share_batch: int = 0,
                            no_share_len: int = 1024):
     """Builds (block_tables, kv_lens) for one Fig. 10 (B, L) config.

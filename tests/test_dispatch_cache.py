@@ -81,19 +81,21 @@ def test_fingerprint_hits_and_single_upload():
     assert st.hits == steps - 1
     # (b) the full plan was uploaded exactly once...
     assert st.full_uploads == 1
-    # ...and the static device arrays are the SAME buffers across steps
+    # ...and the static device arrays (of the UNIFIED fused step list) are
+    # the SAME buffers across steps
     d_first, d_last = wps[0].device, wps[-1].device
     assert d_first is not None and d_last is not None
     assert d_first.split_part_rows is d_last.split_part_rows
     assert d_first.split_qh is d_last.split_qh
-    for g0, g1 in zip(d_first.groups, d_last.groups):
-        assert g0.step_pages is g1.step_pages
-        assert g0.step_item is g1.step_item
-        assert g0.row_query is g1.row_query
-        assert g0.row_sole is g1.row_sole
-        assert g0.item_pages is g1.item_pages
-        assert g0.split_src is g1.split_src
-        assert g0.split_dst is g1.split_dst
+    g0, g1 = d_first.unified, d_last.unified
+    assert g0.step_pages is g1.step_pages
+    assert g0.step_npages is g1.step_npages
+    assert g0.step_item is g1.step_item
+    assert g0.row_query is g1.row_query
+    assert g0.row_sole is g1.row_sole
+    assert g0.item_pages is g1.item_pages
+    assert g0.split_src is g1.split_src
+    assert g0.split_dst is g1.split_dst
 
 
 def test_refresh_touches_only_length_arrays():
@@ -110,24 +112,20 @@ def test_refresh_touches_only_length_arrays():
     st = backend.cache.stats
     assert st.refreshes == steps - 1
     assert st.refresh_uploads >= 1  # length/activity-only uploads
-    # a refresh re-uploads at most ARRAYS_PER_REFRESH arrays per touched
-    # group (step_len, item_kv_len + the DMA-skip activity arrays), never
-    # the full ARRAYS_PER_GROUP set
-    n_groups = len(wps[0].groups)
-    full = wp_mod.ARRAYS_PER_GROUP * n_groups + 2
-    per_refresh = wp_mod.ARRAYS_PER_REFRESH * n_groups
-    assert st.arrays_uploaded <= full + per_refresh * st.refreshes
+    # a refresh re-uploads at most ARRAYS_PER_REFRESH arrays of the unified
+    # plan (step_len, item_kv_len + the DMA-skip activity arrays), never
+    # the full ARRAYS_PER_PLAN set
+    full = wp_mod.ARRAYS_PER_PLAN + 2
+    assert st.arrays_uploaded <= full + wp_mod.ARRAYS_PER_REFRESH * st.refreshes
     assert st.arrays_uploaded < 2 * full  # refreshes never re-upload the plan
-    d0, d1 = wps[0].device, wps[1].device
-    changed = [
-        g0.step_len is not g1.step_len for g0, g1 in zip(d0.groups, d1.groups)
-    ]
-    assert any(changed), "lazy refresh must re-upload step_len"
-    static_kept = [
+    g0, g1 = wps[0].device.unified, wps[1].device.unified
+    assert g0.step_len is not g1.step_len, "lazy refresh must re-upload step_len"
+    assert (
         g0.split_src is g1.split_src and g0.row_sole is g1.row_sole
-        for g0, g1 in zip(d0.groups, d1.groups)
-    ]
-    assert all(static_kept), "refresh must not re-upload split/sole arrays"
+    ), "refresh must not re-upload split/sole arrays"
+    assert (
+        g0.step_pages is g1.step_pages and g0.step_npages is g1.step_npages
+    ), "refresh must not re-upload the page tables"
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas"])

@@ -235,10 +235,10 @@ def test_zero_valid_steps_issue_no_dma():
     total_steps = sum(g.num_steps for g in wp.groups)
     active_steps = sum(int(np.count_nonzero(g.step_len > 0)) for g in wp.groups)
     assert active_steps < total_steps, "batch must contain zero-valid steps"
-    # plan-level DMA accounting: only active steps fetch pages
+    # plan-level DMA accounting: only active steps fetch, and only their
+    # LIVE pages (page-granular DMA — tile-padding slots are never issued)
     expect = sum(
-        int(np.count_nonzero(g.step_len > 0)) * g.pages_per_block
-        for g in wp.groups
+        int(g.step_npages[g.step_len > 0].sum()) for g in wp.groups
     ) * Hkv
     assert wp.dma_page_fetches() == expect
     naive = sum(g.num_steps * g.pages_per_block for g in wp.groups) * Hkv
