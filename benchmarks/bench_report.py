@@ -17,6 +17,12 @@ across PRs (ISSUE 2):
                        oracle (benchmarks/overhead.fused_vs_groups), and
                        the deep-tree straggler ratio before/after KV-split
                        rebalancing (memory_traffic.straggler_report).
+  * ``e2e_serving``  — ISSUE 4: trace-replay SLO surface — TTFT/TPOT
+                       p50/p95/p99 (deterministic virtual token units +
+                       measured wall ms) for chunked vs monolithic prefill
+                       on the mixed long-prompt trace, and per scheduling
+                       policy on a bursty multi-tenant trace
+                       (benchmarks/e2e_serving.serving_section).
 
 `benchmarks/check_regression.py` diffs the current artifact against the
 previously committed one and fails on >10% per-step wall-clock regression;
@@ -79,7 +85,7 @@ def kernel_section(rows) -> Dict:
 def collect(fast: bool = False, verbose: bool = True) -> Dict:
     """Regenerates every section. ``fast=True`` shrinks the measured and
     modeled workloads (used by the perf-smoke pytest)."""
-    from benchmarks import kernel_perf, memory_traffic, overhead
+    from benchmarks import e2e_serving, kernel_perf, memory_traffic, overhead
 
     # keep the batch size fixed so per-step wall-clock stays comparable
     # between fast (smoke) and full collections
@@ -116,6 +122,7 @@ def collect(fast: bool = False, verbose: bool = True) -> Dict:
         "modeled_hbm": hbm,
         "kernel_latency": kern,
         "fused_launch": fused,
+        "e2e_serving": e2e_serving.serving_section(fast=fast, verbose=verbose),
     }
 
 

@@ -7,6 +7,12 @@ FAILS (exit 1) when the jitted per-step wall-clock regresses by more than
 jitter. Modeled quantities (HBM bytes, analytic latency) are checked
 exactly: they are deterministic, so ANY increase is flagged.
 
+ISSUE 4 adds the serving-SLO gates: on the mixed long-prompt trace,
+chunked prefill's TPOT p95 and max inter-token gap (virtual token units,
+deterministic) must stay at or below the monolithic baseline measured in
+the SAME artifact, and the chunked numbers must not drift >10% vs the
+committed baseline.
+
 Usage:
     python benchmarks/check_regression.py [--current PATH] [--baseline PATH]
     python benchmarks/check_regression.py --fresh   # re-measure, then diff
@@ -118,6 +124,40 @@ def compare(baseline: Dict, current: Dict) -> List[str]:
                 f"oracle ({cur['fused_ms_per_step']:.3f} vs "
                 f"{cur['groups_ms_per_step']:.3f} ms/step)"
             )
+    # --- chunked-prefill SLO gates (ISSUE 4) -------------------------------
+    c_e = current.get("e2e_serving", {})
+    b_e = baseline.get("e2e_serving", {})
+    mixed = c_e.get("mixed_longprompt", {})
+    ch, mono = mixed.get("chunked", {}), mixed.get("monolithic", {})
+    if ch and mono:
+        # acceptance bound, within-artifact A/B (same trace, same run):
+        # chunked prefill must not make running decodes WORSE than the
+        # monolithic baseline on the deterministic virtual-unit surface
+        for metric in ("tpot_vt_p95", "max_gap_vt"):
+            if ch.get(metric, 0.0) > mono.get(metric, 0.0) + 1e-9:
+                failures.append(
+                    f"e2e_serving.mixed_longprompt: chunked {metric} "
+                    f"{ch[metric]:.1f} exceeds monolithic {mono[metric]:.1f}"
+                )
+        b_mixed = b_e.get("mixed_longprompt", {})
+        comparable = b_mixed.get("trace") == mixed.get("trace")
+        b_ch = b_mixed.get("chunked", {})
+        if comparable and "tpot_vt_p95" in b_ch:
+            # scheduling decisions are deterministic but may legitimately
+            # shift a little across PRs — flag only >10% growth
+            base_v, cur_v = b_ch["tpot_vt_p95"], ch["tpot_vt_p95"]
+            if cur_v > base_v * (1 + WALL_CLOCK_THRESHOLD):
+                failures.append(
+                    f"e2e_serving.mixed_longprompt.chunked.tpot_vt_p95: "
+                    f"{base_v:.1f} -> {cur_v:.1f} "
+                    f"(+{100 * (cur_v / max(base_v, 1e-12) - 1):.1f}%)"
+                )
+        if comparable and "tpot_ms_p95" in b_ch and "tpot_ms_p95" in ch:
+            wall(
+                "e2e_serving.mixed_longprompt.chunked.tpot_ms_p95",
+                b_ch["tpot_ms_p95"], ch["tpot_ms_p95"],
+            )
+
     for wl, bal in sorted(c_f.get("balance", {}).items()):
         # acceptance bound: rebalanced max-item step count within 2x mean
         if bal.get("ratio_after", 0.0) > 2.0 + 1e-9:

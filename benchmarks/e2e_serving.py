@@ -1,24 +1,25 @@
-"""Fig. 11 reproduction: end-to-end serving — TTFT / TPOT across backends.
+"""End-to-end serving: trace replay with SLO percentiles + Fig. 11 view.
 
-Runs the real continuous-batching engine (serving/engine.py) on the
-toolagent and conversation traces with a reduced llama-family model,
-comparing attention backends under identical traffic:
+Two harnesses over the real continuous-batching engine:
 
-  PAT            (strategy=pat)
-  FlashAttention (strategy=query_centric)
-  Relay          (strategy=relay)
-
-Two views are reported per backend:
-  * measured-on-CPU mean TTFT / mean+P99 TPOT (trend sanity: same engine,
-    same requests; CPU magnitudes are not GPU latencies), and
-  * the modeled attention time per decode step (A100 constants) summed
-    over the run — the paper's actual claim surface.
+  * ``replay_trace`` — replays a trace honoring arrival times against the
+    engine's virtual clock (token units: prefill tokens + decode batch
+    size per step, DESIGN.md §7), so queueing/overlap effects are
+    deterministic and machine-independent. ``serving_section`` builds the
+    ``e2e_serving`` section of BENCH_decode_attention.json from it:
+    chunked-vs-monolithic prefill on the mixed long-prompt trace
+    (TTFT/TPOT p50/p95/p99 + max inter-token gap, the paper's bubble
+    claim) and per-policy percentiles on a bursty multi-tenant trace.
+    ``check_regression.py`` gates chunked TPOT p95 <= monolithic.
+  * ``run`` — the Fig. 11 reproduction: TTFT/TPOT across attention
+    backends (PAT / FlashAttention / Relay) under identical traffic, with
+    the modeled A100 attention time as the paper's claim surface.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -27,10 +28,129 @@ from repro.configs import get_config
 from repro.core.attention import PatConfig
 from repro.models import transformer as T
 from repro.serving.engine import Engine
-from repro.workloads.traces import conversation_trace, toolagent_trace
+from repro.serving.replay import replay_trace as _replay
+from repro.serving.scheduler import POLICIES, SchedulerConfig
+from repro.serving.stream import summarize
+from repro.workloads.traces import (
+    TraceRequest,
+    conversation_trace,
+    mixed_longprompt_trace,
+    toolagent_trace,
+)
 from benchmarks.latmodel import HwModel, plan_latency
 
 PAGE = 16
+
+
+def replay_trace(
+    eng: Engine,
+    reqs: List[TraceRequest],
+    tokens_per_sec: float = 1000.0,
+    max_new_cap: Optional[int] = None,
+    max_steps: int = 100_000,
+) -> Dict[str, float]:
+    """Replays a trace honoring arrivals (repro.serving.replay, the
+    canonical loop) and returns the fleet SLO summary
+    (serving.stream.summarize) over finished requests."""
+    return summarize(
+        _replay(eng, reqs, tokens_per_sec=tokens_per_sec,
+                max_new_cap=max_new_cap, max_steps=max_steps)
+    )
+
+
+def mixed_longprompt_report(
+    chunk_tokens: int = 32,
+    step_token_budget: int = 48,
+    verbose: bool = True,
+) -> Dict[str, Dict]:
+    """Chunked vs monolithic prefill on the mixed long-prompt trace — the
+    acceptance comparison: with a long prompt arriving mid-decode, chunked
+    prefill must keep running requests' TPOT p95 and max inter-token gap
+    (virtual units) at or below the monolithic baseline's."""
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    reqs = mixed_longprompt_trace(vocab=cfg.vocab_size, seed=5)
+    out: Dict[str, Dict] = {
+        "trace": {
+            "num_requests": len(reqs),
+            "long_prompt": max(len(r.tokens) for r in reqs),
+            "chunk_tokens": chunk_tokens,
+            "step_token_budget": step_token_budget,
+        }
+    }
+    modes = {
+        "monolithic": None,
+        "chunked": SchedulerConfig(
+            chunk_tokens=chunk_tokens, step_token_budget=step_token_budget
+        ),
+    }
+    for name, sched in modes.items():
+        eng = Engine(
+            params, cfg, num_pages=256,
+            pat_config=PatConfig(impl="xla", merge_impl="xla", page_size=PAGE),
+            eos_id=-1, scheduler=sched,
+        )
+        t0 = time.perf_counter()
+        summary = replay_trace(eng, reqs)
+        summary["wall_s"] = time.perf_counter() - t0
+        summary["steps"] = eng.metrics.steps
+        summary["idle_steps"] = eng.metrics.idle_steps
+        summary["prefill_chunks"] = eng.metrics.prefill_chunks
+        out[name] = summary
+        if verbose:
+            print(
+                f"mixed_longprompt {name:10s}: tpot_p95={summary['tpot_vt_p95']:.0f}vt "
+                f"max_gap={summary['max_gap_vt']:.0f}vt "
+                f"ttft_p95={summary['ttft_vt_p95']:.0f}vt "
+                f"steps={summary['steps']}",
+                flush=True,
+            )
+    return out
+
+
+def policy_report(
+    num_requests: int = 10, verbose: bool = True
+) -> Dict[str, Dict]:
+    """TTFT/TPOT percentiles per scheduling policy on a bursty multi-tenant
+    conversation trace (same traffic, same chunk budget, policy varies)."""
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    reqs = conversation_trace(
+        num_requests=num_requests, vocab=cfg.vocab_size, seed=7,
+        num_languages=2, num_countries=2, prefix_lens=(16, 48, 128),
+        prompt_mean=24, output_mean=8, arrival="bursty", rate=40.0,
+    )
+    out: Dict[str, Dict] = {}
+    for policy in sorted(POLICIES):
+        eng = Engine(
+            params, cfg, num_pages=256,
+            pat_config=PatConfig(impl="xla", merge_impl="xla", page_size=PAGE),
+            eos_id=-1,
+            scheduler=SchedulerConfig(
+                policy=policy, chunk_tokens=32, step_token_budget=48
+            ),
+        )
+        summary = replay_trace(eng, reqs, max_new_cap=8)
+        summary["plan_hit_rate"] = eng.backend.cache.stats.hit_rate
+        out[policy] = summary
+        if verbose:
+            print(
+                f"policy {policy:16s}: ttft_p95={summary['ttft_vt_p95']:.0f}vt "
+                f"tpot_p95={summary['tpot_vt_p95']:.0f}vt "
+                f"finished={summary['requests']:.0f}",
+                flush=True,
+            )
+    return out
+
+
+def serving_section(fast: bool = False, verbose: bool = True) -> Dict:
+    """The ``e2e_serving`` section of BENCH_decode_attention.json. The
+    workload is identical in fast and full collections so the virtual-unit
+    numbers stay comparable across runs (they are deterministic)."""
+    return {
+        "mixed_longprompt": mixed_longprompt_report(verbose=verbose),
+        "policies": policy_report(verbose=verbose),
+    }
 
 
 def run(
@@ -75,8 +195,9 @@ def run(
             for r in reqs:
                 eng.submit(r.tokens, max_new_tokens=min(r.max_new_tokens, 16))
             # drain, accumulating the modeled per-step attention latency
-            while eng.waiting or eng.running:
-                eng.step()
+            while eng.has_work:
+                if not eng.step():
+                    break
                 if eng.running:
                     wp = eng.backend.cache._plan
                     if wp is not None and wp.groups:
@@ -130,4 +251,13 @@ def run(
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    if "--fig11" in sys.argv:
+        run()
+    else:
+        from benchmarks import bench_report
+
+        section = serving_section(fast="--fast" in sys.argv)
+        bench_report.update_section("e2e_serving", section)
+        print("updated e2e_serving section of BENCH_decode_attention.json")

@@ -13,12 +13,13 @@ import argparse
 import os
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.attention import PatConfig
 from repro.models import transformer as T
 from repro.serving.engine import Engine
+from repro.serving.scheduler import POLICIES, SchedulerConfig
+from repro.serving.stream import summarize
 from repro.workloads.traces import conversation_trace
 
 BACKENDS = {"PAT": "pat", "FLASH": "query_centric", "RELAY": "relay"}
@@ -30,6 +31,8 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES))
+    ap.add_argument("--chunk-tokens", type=int, default=32)
     args = ap.parse_args()
     backend = args.backend or BACKENDS.get(
         os.environ.get("PAT_ATTENTION_BACKEND", "PAT").upper(), "pat"
@@ -45,22 +48,23 @@ def main():
         params, cfg, num_pages=4096,
         pat_config=PatConfig(impl="xla", merge_impl="xla", strategy=backend),
         eos_id=-1,
+        scheduler=SchedulerConfig(policy=args.policy,
+                                  chunk_tokens=args.chunk_tokens),
     )
-    for r in reqs:
-        eng.submit(r.tokens, max_new_tokens=args.max_new)
-    m = eng.run()
-    ttft = [r.t_first_token - r.arrival for r in m.finished]
-    tpot = [
-        (r.t_finished - r.t_first_token) / max(len(r.generated) - 1, 1)
-        for r in m.finished
-    ]
+    rids = [eng.submit(r.tokens, max_new_tokens=args.max_new) for r in reqs]
+    # stream the first request's tokens as they are produced (the iterator
+    # pumps the engine; the other requests decode in the same steps)
+    first = [ev.token for ev in eng.stream(rids[0])]
+    m = eng.run()  # drain the rest
+    s = summarize(m.finished)
     st = eng.backend.cache.stats
-    print(f"backend={backend}  finished={len(m.finished)}")
-    print(f"mean TTFT {np.mean(ttft):.3f}s   mean TPOT {1e3*np.mean(tpot):.1f}ms "
-          f"  P99 TPOT {1e3*np.percentile(tpot, 99):.1f}ms")
+    print(f"backend={backend} policy={args.policy} finished={len(m.finished)}")
+    print(f"TTFT p50/p95 {s['ttft_ms_p50']:.0f}/{s['ttft_ms_p95']:.0f} ms   "
+          f"TPOT p50/p95 {s['tpot_ms_p50']:.1f}/{s['tpot_ms_p95']:.1f} ms   "
+          f"(virtual: TPOT p95 {s['tpot_vt_p95']:.0f}vt)")
     print(f"pack plans: {st.misses} scheduled, {st.hits} lazy hits "
           f"({st.hit_rate:.0%}), {st.refreshes} length refreshes")
-    print("sample output:", m.finished[0].generated[:8])
+    print("streamed output:", first[:8])
 
 
 if __name__ == "__main__":

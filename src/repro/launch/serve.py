@@ -5,21 +5,29 @@ Backend selection mirrors the paper's vLLM integration
 --backend. On real TPU hardware `--impl pallas` runs the Mosaic kernels;
 the CPU container uses interpret/XLA paths with identical numerics.
 
+The request scheduler (DESIGN.md §7) is fully exposed: --policy picks the
+admission order (fcfs / sjf / prefix_affinity), --chunk-tokens and
+--token-budget enable chunked prefill with a per-step token budget, and
+--stream prints the first request's tokens as they are produced through
+the streaming iterator API.
+
 Run:
   PYTHONPATH=src python -m repro.launch.serve --trace conversation \
-      --requests 8 --backend pat
+      --requests 8 --backend pat --policy sjf --chunk-tokens 32
 """
 
 import argparse
 import os
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.attention import PatConfig
 from repro.models import transformer as T
 from repro.serving.engine import Engine
+from repro.serving.replay import replay_trace
+from repro.serving.scheduler import POLICIES, SchedulerConfig
+from repro.serving.stream import summarize
 from repro.workloads.traces import conversation_trace, toolagent_trace
 
 BACKENDS = {"PAT": "pat", "FLASH": "query_centric", "RELAY": "relay"}
@@ -36,6 +44,21 @@ def main():
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--num-pages", type=int, default=4096)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES))
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="prefill chunk size (default: monolithic)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-step token budget across prefill + decode")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty"],
+                    help="arrival process, replayed against the virtual "
+                         "clock at --tokens-per-sec")
+    ap.add_argument("--tokens-per-sec", type=float, default=1000.0,
+                    help="virtual-clock rate mapping trace seconds to "
+                         "engine token units during replay")
+    ap.add_argument("--stream", action="store_true",
+                    help="submit everything up front and stream the first "
+                         "request's tokens as produced (no arrival replay)")
     args = ap.parse_args()
     backend = args.backend or BACKENDS.get(
         os.environ.get("PAT_ATTENTION_BACKEND", "PAT").upper(), "pat"
@@ -50,7 +73,8 @@ def main():
         else dict(tool_prompt_range=(96, 256), session_template=32,
                   prompt_mean=24, output_mean=12)
     )
-    reqs = fn(num_requests=args.requests, vocab=cfg.vocab_size, seed=1, **kw)
+    reqs = fn(num_requests=args.requests, vocab=cfg.vocab_size, seed=1,
+              arrival=args.arrival, **kw)
 
     eng = Engine(
         params, cfg, num_pages=args.num_pages,
@@ -58,20 +82,37 @@ def main():
                              merge_impl=args.impl,
                              strategy=backend),
         eos_id=-1, temperature=args.temperature,
+        scheduler=SchedulerConfig(
+            policy=args.policy,
+            chunk_tokens=args.chunk_tokens,
+            step_token_budget=args.token_budget,
+        ),
     )
-    for r in reqs:
-        eng.submit(r.tokens, max_new_tokens=args.max_new)
-    m = eng.run()
-    ttft = [r.t_first_token - r.arrival for r in m.finished]
-    tpot = [
-        (r.t_finished - r.t_first_token) / max(len(r.generated) - 1, 1)
-        for r in m.finished
-    ]
+    if args.stream:
+        rids = [eng.submit(r.tokens, max_new_tokens=args.max_new) for r in reqs]
+        # the stream pumps the engine; remaining requests drain via run()
+        for ev in eng.stream(rids[0]):
+            print(f"  rid {rids[0]} token[{ev.index}] = {ev.token} "
+                  f"(vt={ev.t_virtual:.0f})", flush=True)
+        eng.run()
+    else:
+        for r in reqs:
+            r.max_new_tokens = args.max_new
+        replay_trace(eng, reqs, tokens_per_sec=args.tokens_per_sec)
+    m = eng.metrics
+    s = summarize(m.finished)
     st = eng.backend.cache.stats
     print(f"backend={backend} impl={args.impl} trace={args.trace} "
+          f"policy={args.policy} chunk={args.chunk_tokens} "
           f"finished={len(m.finished)}/{len(reqs)}")
-    print(f"mean TTFT {np.mean(ttft):.3f}s  mean TPOT {1e3*np.mean(tpot):.1f}ms  "
-          f"P99 TPOT {1e3*np.percentile(tpot, 99):.1f}ms")
+    print(f"TTFT p50/p95/p99 {s['ttft_ms_p50']:.0f}/{s['ttft_ms_p95']:.0f}/"
+          f"{s['ttft_ms_p99']:.0f} ms   TPOT p50/p95/p99 "
+          f"{s['tpot_ms_p50']:.1f}/{s['tpot_ms_p95']:.1f}/"
+          f"{s['tpot_ms_p99']:.1f} ms")
+    print(f"virtual (deterministic): TTFT p95 {s['ttft_vt_p95']:.0f}vt  "
+          f"TPOT p95 {s['tpot_vt_p95']:.0f}vt  max gap {s['max_gap_vt']:.0f}vt")
+    print(f"steps={m.steps} idle={m.idle_steps} chunks={m.prefill_chunks} "
+          f"prefill_tokens={m.prefill_tokens}")
     print(f"pack: {st.misses} schedules, {st.hits} lazy hits, "
           f"{st.refreshes} refreshes, sched {1e3*st.schedule_time_s:.1f}ms total")
 

@@ -1,13 +1,26 @@
 """Continuous-batching serving engine with PAT decode attention.
 
+The step loop is scheduler-driven (serving/scheduler.py, DESIGN.md §7).
 Pipeline per engine step (vLLM-style, single host):
-  1. admit waiting requests while KV pages are available; each admitted
-     request reuses radix-cached prefix pages (one physical copy) and
-     prefills only its uncached suffix;
-  2. batch-decode all running requests: ONE pack plan per step (lazy-update
+  1. the scheduler returns a StepPlan: requests admitted under KV/token
+     budgets (policy-pluggable order) plus this step's prefill chunks;
+  2. run each prefill chunk — the chunk attends over the prompt's
+     pool-resident prefix pages (radix-cached prefix AND earlier chunks)
+     via the suffix-prefill path and writes its own K/V pages, so a long
+     prompt's prefill interleaves with decode instead of stalling it (the
+     JAX analog of the paper's multi-stream forwarding); requests whose
+     prompt completed join the decode batch in the same step;
+  3. batch-decode all running requests: ONE pack plan per step (lazy-update
      cached across steps AND shared by all layers), PAT forward + merge per
      layer, sample, advance;
-  3. retire finished requests (EOS/max_new_tokens), releasing page refs.
+  4. retire finished requests (EOS/max_new_tokens), releasing page refs.
+
+Steps that do no work (nothing admissible, nothing running) don't count
+toward ``metrics.steps`` — they land in ``metrics.idle_steps`` so per-step
+timing averages stay honest. A virtual clock (``Engine.vclock``, token
+units = prefill tokens + decode batch size per step) timestamps every
+generated token for the deterministic TTFT/TPOT surface in
+serving/stream.py.
 
 Decode attention runs through core.attention.PatAttentionBackend — the
 paper's plugin surface: `backend_strategy` switches PAT / query-centric /
@@ -16,7 +29,9 @@ VLLM_ATTENTION_BACKEND=PAT.
 
 Supports decoder-only GQA archs and MLA (DeepSeek) via combined-KV pages
 (share_kv); hybrid/SSM archs decode through models.transformer.decode_step
-(dense state) since they hold no paged KV — see DESIGN.md §5.
+(dense state) since they hold no paged KV — see DESIGN.md §5. Those archs
+(and enc-dec) have no paged suffix-prefill path, so the scheduler prefills
+their prompts whole (chunkable=False).
 """
 
 from __future__ import annotations
@@ -41,21 +56,10 @@ from repro.serving.kv_cache import (
     token_to_page_slots,
 )
 from repro.serving.radix_cache import RadixCache
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+from repro.serving.stream import RequestStream
 
-
-@dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new_tokens: int
-    arrival: float = 0.0
-    # filled by the engine
-    pages: List[int] = field(default_factory=list)
-    cached_tokens: int = 0
-    generated: List[int] = field(default_factory=list)
-    t_first_token: Optional[float] = None
-    t_finished: Optional[float] = None
-    position: int = 0  # next position to decode
+__all__ = ["Engine", "EngineMetrics", "Request"]
 
 
 @dataclass
@@ -63,7 +67,10 @@ class EngineMetrics:
     prefill_time: float = 0.0
     decode_time: float = 0.0
     plan_time: float = 0.0
-    steps: int = 0
+    steps: int = 0  # productive steps only (prefilled or decoded something)
+    idle_steps: int = 0  # no-op steps: nothing admissible, nothing running
+    prefill_chunks: int = 0
+    prefill_tokens: int = 0
     # Split-aware datapath observability (DESIGN.md §3): per decode step,
     # how many queries took the in-kernel-normalised fast path vs the
     # compact partial+merge slow path. The fast-path fraction is the
@@ -89,6 +96,7 @@ class Engine:
         eos_id: int = 2,
         seed: int = 0,
         temperature: float = 0.0,
+        scheduler: Optional[SchedulerConfig] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -122,55 +130,97 @@ class Engine:
         self.kv = PagedKVCache(kvcfg)
         self.radix = RadixCache(self.kv.allocator, page_size)
         self.page = page_size
-        self.waiting: List[Request] = []
+        # chunked (suffix) prefill needs every layer to hold paged KV
+        self._chunkable = cfg.encdec is None and all(
+            cfg.layer_is_attention(i % cfg.scan_block)
+            for i in range(cfg.num_layers)
+        )
+        self.scheduler = Scheduler(
+            self.kv.allocator, self.radix, page_size,
+            config=scheduler, chunkable=self._chunkable,
+        )
         self.running: List[Request] = []
         self.metrics = EngineMetrics()
+        self.vclock = 0.0  # virtual token-unit clock (see module docstring)
         self._rid = 0
+        self._requests: Dict[int, Request] = {}
+        # vectorised decode-batch state (rebuilt only on membership change)
+        self._batch_dirty = True
+        self._bt = np.zeros((0, 0), np.int32)
+        self._pos = np.zeros(0, np.int64)
+        self._last_tok = np.zeros(0, np.int32)
+        self._ntok = np.zeros(0, np.int64)
+        self._mnt = np.zeros(0, np.int64)
 
     # --- public API ---------------------------------------------------------
 
-    def submit(self, prompt: List[int], max_new_tokens: int = 32) -> int:
+    def submit(
+        self,
+        prompt: List[int],
+        max_new_tokens: int = 32,
+        arrival_v: Optional[float] = None,
+    ) -> int:
+        """`arrival_v` backdates the request's virtual arrival (token
+        units) for trace replay — virtual TTFT then includes queueing
+        delay before submission; default: the current vclock."""
         self._rid += 1
-        self.waiting.append(
-            Request(self._rid, list(prompt), max_new_tokens, arrival=time.perf_counter())
+        req = Request(
+            self._rid, list(prompt), max_new_tokens,
+            arrival=time.perf_counter(),
+            arrival_v=self.vclock if arrival_v is None else arrival_v,
         )
+        self.scheduler.add(req)
+        self._requests[self._rid] = req
         return self._rid
 
+    def stream(self, rid: int) -> RequestStream:
+        """Token iterator for a submitted request; iterating pumps the
+        engine (serving/stream.py, DESIGN.md §7)."""
+        return RequestStream(self, self._requests[rid])
+
+    @property
+    def waiting(self) -> List[Request]:
+        return self.scheduler.waiting
+
+    @property
+    def prefilling(self) -> List[Request]:
+        return self.scheduler.prefilling
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.scheduler.has_work or self.running)
+
     def run(self, max_steps: int = 10_000) -> EngineMetrics:
-        while (self.waiting or self.running) and self.metrics.steps < max_steps:
-            self.step()
+        while self.has_work and self.metrics.steps < max_steps:
+            if not self.step():
+                break  # nothing schedulable (KV admission blocked)
         return self.metrics
 
     # --- engine internals -----------------------------------------------------
 
-    def step(self) -> None:
-        self._admit()
+    def step(self) -> bool:
+        """One scheduler-driven step. Returns True iff work was done."""
+        plan = self.scheduler.schedule(len(self.running))
+        if not plan.chunks and not self.running:
+            self.metrics.idle_steps += 1
+            return False
+        # step cost in token units: prefill chunk tokens + one per decode
+        # query (requests finishing prefill this step decode this step too)
+        finishing = sum(
+            1 for req, n in plan.chunks if req.prefilled + n >= len(req.prompt)
+        )
+        self.vclock += plan.prefill_tokens + len(self.running) + finishing
+        for req, n in plan.chunks:
+            self._prefill_chunk(req, n)
         if self.running:
             self._decode_batch()
         self.metrics.steps += 1
-
-    def _admit(self) -> None:
-        admitted = []
-        for req in list(self.waiting):
-            need_total = len(req.prompt) + req.max_new_tokens
-            n_pages = -(-need_total // self.page)
-            cached_pages, cached = self.radix.match_prefix(req.prompt)
-            new_needed = n_pages - len(cached_pages)
-            if self.kv.allocator.num_free < new_needed:
-                if self.radix.evict(new_needed - self.kv.allocator.num_free) == 0:
-                    if cached_pages:
-                        self.kv.allocator.decref(cached_pages)
-                    break  # FCFS: wait for capacity
-            req.pages = cached_pages + self.kv.allocator.alloc(new_needed)
-            req.cached_tokens = cached
-            self._prefill(req)
-            admitted.append(req)
-            self.waiting.remove(req)
-            self.running.append(req)
+        return True
 
     def _gather_prefix_caches(self, pages: List[int], cached: int):
-        """Per-layer K/V of the cached prefix, gathered from the page pool
-        (one gather across all layers)."""
+        """Per-layer K/V of the pool-resident prefix (radix-cached pages
+        plus earlier chunks' writes), gathered from the page pool (one
+        gather across all layers)."""
         cfg = self.cfg
         pids = jnp.asarray(np.asarray(pages, np.int32))
         # [L, Hkv, n, page, dk] -> [L, n*page, Hkv, dk] -> first `cached`
@@ -192,88 +242,129 @@ class Engine:
         vg = vg[:, :cached]
         return [{"k": kg[l][None], "v": vg[l][None]} for l in range(Lyr)]
 
-    def _prefill(self, req: Request) -> None:
+    def _prefill_chunk(self, req: Request, n: int) -> None:
+        """Prefill `n` prompt tokens starting at req.prefilled, attending
+        over the pool-resident prefix and writing this chunk's K/V pages —
+        the unit of prefill/decode overlap (DESIGN.md §7). The final chunk
+        emits the first generation logits and promotes the request to the
+        decode batch."""
         t0 = time.perf_counter()
         prompt = np.asarray(req.prompt, np.int32)
         S = len(prompt)
+        start = req.prefilled
+        end = min(S, start + n)
         cfg = self.cfg
-        # Run dense prefill over the *uncached* suffix only, attending over
-        # the full prefix (cached tokens' K/V already live in shared pages).
-        # At least one token is always recomputed so the prefill emits the
-        # first generation logits even for a fully-cached prompt.
-        cached = min(req.cached_tokens, S - 1)
-        attn_only = all(
-            cfg.layer_is_attention(i % cfg.scan_block)
-            for i in range(cfg.num_layers)
-        )
-        if cached > 0 and attn_only and cfg.encdec is None:
-            n_prefix_pages = -(-cached // self.page)
+        if start > 0:
+            # suffix path: attend over ALL pool-resident tokens [0, start)
+            # — the radix-cached prefix and every earlier chunk's writes
+            n_prefix_pages = -(-start // self.page)
             prefix_caches = self._gather_prefix_caches(
-                req.pages[:n_prefix_pages], cached
+                req.pages[:n_prefix_pages], start
             )
             logits_last, caches = T.lm_prefill_suffix(
-                self.params, cfg, jnp.asarray(prompt[None, cached:]),
-                prefix_caches, cached,
+                self.params, cfg, jnp.asarray(prompt[None, start:end]),
+                prefix_caches, start,
             )
-            # Never write below req.cached_tokens: those slots live in
-            # radix-SHARED pages other requests may be attending to, and
-            # the recomputed values can differ in low-order bits. (cached <
-            # req.cached_tokens only for a fully-cached prompt, where the
-            # last token is recomputed purely to produce logits.)
-            write_start = min(req.cached_tokens, S)
         else:
             logits_last, caches = T.lm_prefill(
-                self.params, cfg, jnp.asarray(prompt[None])
+                self.params, cfg, jnp.asarray(prompt[None, :end])
             )
-            # full recompute, but still write only the uncached tokens —
-            # the cached prefix already lives in (possibly shared) pages
-            write_start = req.cached_tokens
-        # write K/V of the uncached tokens into this request's pages
-        n_new = S - write_start
-        pids, slots = token_to_page_slots(
-            req.pages, write_start, n_new, self.page
-        )
-        if self.mla:
-            k_all = jnp.stack(
-                [
-                    jnp.concatenate([c["ckv"][0], c["krope"][0]], axis=-1)[:, None, :]
-                    for c in caches
-                ]
-            )  # [L, S_new, 1, dk]
-        else:
-            k_all = jnp.stack([c["k"][0] for c in caches])  # [L, S_new, Hkv, hd]
-            v_all = jnp.stack([c["v"][0] for c in caches])
-        lo = k_all.shape[1] - n_new  # 0 on the suffix path (caches = suffix)
-        if n_new > 0 and self.mla:
-            self.kv.write_tokens(k_all[:, lo:], None, pids, slots)
-        elif n_new > 0:
-            self.kv.write_tokens(k_all[:, lo:], v_all[:, lo:], pids, slots)
-        self.radix.insert(req.prompt, req.pages)
-        req.position = S
-        # first generated token comes from the prefill logits
-        tok = int(sampling.sample(logits_last, self.key, self.temperature)[0])
-        req.generated.append(tok)
-        req.t_first_token = time.perf_counter()
+        # Never write below req.cached_tokens: those slots live in
+        # radix-SHARED pages other requests may be attending to, and the
+        # recomputed values can differ in low-order bits. (start <
+        # cached_tokens only for a fully-cached prompt, where the last
+        # token is recomputed purely to produce logits.)
+        write_start = max(start, min(req.cached_tokens, S))
+        n_new = end - write_start
+        if n_new > 0:
+            pids, slots = token_to_page_slots(
+                req.pages, write_start, n_new, self.page
+            )
+            if self.mla:
+                k_all = jnp.stack(
+                    [
+                        jnp.concatenate(
+                            [c["ckv"][0], c["krope"][0]], axis=-1
+                        )[:, None, :]
+                        for c in caches
+                    ]
+                )  # [L, chunk, 1, dk]
+            else:
+                k_all = jnp.stack([c["k"][0] for c in caches])  # [L,chunk,Hkv,hd]
+                v_all = jnp.stack([c["v"][0] for c in caches])
+            lo = write_start - start  # skip cached tokens inside the chunk
+            if self.mla:
+                self.kv.write_tokens(k_all[:, lo:], None, pids, slots)
+            else:
+                self.kv.write_tokens(k_all[:, lo:], v_all[:, lo:], pids, slots)
+        req.prefilled = end
+        self.metrics.prefill_chunks += 1
+        self.metrics.prefill_tokens += end - start
+        if end == S:
+            self._finish_prefill(req, logits_last)
         self.metrics.prefill_time += time.perf_counter() - t0
+
+    def _finish_prefill(self, req: Request, logits_last) -> None:
+        self.radix.insert(req.prompt, req.pages)
+        req.position = len(req.prompt)
+        # first generated token comes from the final chunk's logits
+        tok = int(sampling.sample(logits_last, self.key, self.temperature)[0])
+        now = time.perf_counter()
+        req.generated.append(tok)
+        req.token_times.append(now)
+        req.token_vt.append(self.vclock)
+        req.t_first_token = now
+        self.scheduler.finish_prefill(req)
+        self.running.append(req)  # decodes this same step
+        self._batch_dirty = True
+
+    # --- decode batch ---------------------------------------------------------
+
+    def _refresh_batch(self) -> None:
+        """Rebuilds the vectorised decode-batch state. Runs only when the
+        running set changes (admission epoch / retirement), NOT per step."""
+        B = len(self.running)
+        maxp = max(len(r.pages) for r in self.running) if B else 0
+        self._bt = -np.ones((B, maxp), np.int32)
+        for i, r in enumerate(self.running):
+            self._bt[i, : len(r.pages)] = r.pages
+        self._pos = np.fromiter((r.position for r in self.running), np.int64, B)
+        self._last_tok = np.fromiter(
+            (r.generated[-1] for r in self.running), np.int32, B
+        )
+        self._ntok = np.fromiter(
+            (len(r.generated) for r in self.running), np.int64, B
+        )
+        self._mnt = np.fromiter(
+            (r.max_new_tokens for r in self.running), np.int64, B
+        )
+        self._batch_dirty = False
 
     def _block_tables(self) -> (np.ndarray, np.ndarray):
         """Block tables include ALL pre-allocated pages (vLLM-style): the
         table — and therefore the pack plan — is stable for the whole
-        decode of a batch; kv_lens masking handles the growth."""
-        B = len(self.running)
-        maxp = max(len(r.pages) for r in self.running)
-        bt = -np.ones((B, maxp), np.int32)
-        kv_lens = np.zeros(B, np.int64)
-        for i, r in enumerate(self.running):
-            bt[i, : len(r.pages)] = r.pages
-            kv_lens[i] = r.position + 1  # includes the token decoded now
-        return bt, kv_lens
+        decode of a batch; kv_lens masking handles the growth. Fully
+        vectorised: served from the cached batch state, kv_lens includes
+        the token decoded now."""
+        if self._batch_dirty:
+            self._refresh_batch()
+        return self._bt, self._pos + 1
+
+    def _decode_write_slots(self) -> (jax.Array, jax.Array):
+        """(page id, slot) of the token being decoded, per running request —
+        computed once per step, shared by every layer, and vectorised
+        (gather into the cached block table; no per-request python loop)."""
+        pids = self._bt[np.arange(len(self.running)), self._pos // self.page]
+        slots = self._pos % self.page
+        return jnp.asarray(pids.astype(np.int32)), jnp.asarray(slots.astype(np.int32))
 
     def _decode_batch(self) -> None:
         t0 = time.perf_counter()
+        if self._batch_dirty:
+            self._refresh_batch()
         B = len(self.running)
-        tokens = jnp.asarray([r.generated[-1] for r in self.running], jnp.int32)
-        positions = jnp.asarray([r.position for r in self.running], jnp.int32)
+        tokens = jnp.asarray(self._last_tok)
+        positions = jnp.asarray(self._pos.astype(np.int32))
         bt, kv_lens = self._block_tables()
         tp = time.perf_counter()
         wp = self.backend.plan(bt, kv_lens)
@@ -286,35 +377,28 @@ class Engine:
         self.key, sub = jax.random.split(self.key)
         next_tokens = np.asarray(sampling.sample(logits, sub, self.temperature))
 
-        for i, r in enumerate(self.running):
+        self._pos += 1
+        self._ntok += 1
+        self._last_tok = next_tokens.astype(np.int32)
+        now = time.perf_counter()
+        for i, r in enumerate(self.running):  # output bookkeeping only
             r.position += 1
             r.generated.append(int(next_tokens[i]))
-        still = []
-        for r in self.running:
-            done = (
-                len(r.generated) >= r.max_new_tokens
-                or r.generated[-1] == self.eos_id
-            )
-            if done:
-                r.t_finished = time.perf_counter()
-                self.kv.allocator.decref(r.pages)
-                self.metrics.finished.append(r)
-            else:
-                still.append(r)
-        self.running = still
+            r.token_times.append(now)
+            r.token_vt.append(self.vclock)
+        done = (self._ntok >= self._mnt) | (self._last_tok == self.eos_id)
+        if done.any():
+            still = []
+            for i, r in enumerate(self.running):
+                if done[i]:
+                    r.t_finished = now
+                    self.kv.allocator.decref(r.pages)
+                    self.metrics.finished.append(r)
+                else:
+                    still.append(r)
+            self.running = still
+            self._batch_dirty = True
         self.metrics.decode_time += time.perf_counter() - t0
-
-    def _decode_write_slots(self) -> (jax.Array, jax.Array):
-        """(page id, slot) of the token being decoded, per running request —
-        computed once per step and shared by every layer (the per-layer
-        python loop was measurable host overhead at production batch)."""
-        B = len(self.running)
-        pids = np.zeros(B, np.int32)
-        slots = np.zeros(B, np.int32)
-        for i, r in enumerate(self.running):
-            pids[i] = r.pages[r.position // self.page]
-            slots[i] = r.position % self.page
-        return jnp.asarray(pids), jnp.asarray(slots)
 
     def _paged_decode_step(self, tokens, positions, wp) -> jax.Array:
         cfg = self.cfg

@@ -12,6 +12,7 @@ the prefix forest relies on). LRU eviction recycles unreferenced subtrees.
 
 from __future__ import annotations
 
+import heapq
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -88,31 +89,53 @@ class RadixCache:
                 i += self.page
             return
 
+    def match_len(self, tokens: List[int]) -> int:
+        """Length of the longest page-aligned cached prefix, WITHOUT taking
+        a reference or touching LRU timestamps — a pure probe, used by the
+        prefix-affinity scheduling policy (DESIGN.md §7) to rank waiting
+        requests by how deep their radix match runs."""
+        node = self.root
+        i = 0
+        while True:
+            nxt = node.children.get(tokens[i]) if i < len(tokens) else None
+            if nxt is None:
+                return i
+            run = nxt.tokens
+            if len(tokens) - i < len(run) or tuple(tokens[i : i + len(run)]) != run:
+                return i
+            i += len(run)
+            node = nxt
+
     def evict(self, num_pages: int) -> int:
         """LRU-evicts unreferenced leaves until `num_pages` freed (refcount
-        1 = only the tree holds it). Returns pages actually freed."""
+        1 = only the tree holds it). Returns pages actually freed.
+
+        One tree traversal per call: all currently-evictable leaves go into
+        a min-heap keyed by last_used, and evicting a leaf pushes its parent
+        when that parent just became an evictable leaf itself — no re-walk
+        per freed page (the old per-victim full walk was
+        O(leaves x freed-pages)). No external incref can interleave within a
+        call, so heap-entry evictability is decided once at push time.
+        """
         freed = 0
-        while freed < num_pages:
-            victim: Optional[RadixNode] = None
 
-            def walk(n: RadixNode):
-                nonlocal victim
-                for c in n.children.values():
-                    walk(c)
-                if (
-                    n is not self.root
-                    and n.is_leaf
-                    and all(self.alloc.refs[p] == 1 for p in n.pages)
-                ):
-                    if victim is None or n.last_used < victim.last_used:
-                        victim = n
+        def evictable(n: RadixNode) -> bool:
+            return all(self.alloc.refs[p] == 1 for p in n.pages)
 
-            walk(self.root)
-            if victim is None:
-                break
+        heap = []
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root and n.is_leaf and evictable(n):
+                heapq.heappush(heap, (n.last_used, id(n), n))
+        while freed < num_pages and heap:
+            _, _, victim = heapq.heappop(heap)
             self.alloc.decref(victim.pages)
             freed += len(victim.pages)
             parent = victim.parent
             if parent:
                 parent.children.pop(victim.tokens[0], None)
+                if parent is not self.root and parent.is_leaf and evictable(parent):
+                    heapq.heappush(heap, (parent.last_used, id(parent), parent))
         return freed

@@ -1,0 +1,352 @@
+"""Request-level serving scheduler: admission control + chunked prefill.
+
+The paper's third pillar — multi-stream forwarding that fills resource
+bubbles — lands in a JAX serving engine as *scheduling*, not streams: one
+engine step carries a bounded number of prefill tokens (chunked prefill)
+interleaved with the whole running decode batch, so a long prompt never
+stalls in-flight decodes for its full prefill latency (DESIGN.md §7).
+
+Three pieces, all policy-pluggable:
+
+  * ``SchedulingPolicy`` — orders the waiting queue each step. Built-ins:
+    ``fcfs`` (arrival order), ``sjf`` (shortest prompt first), and
+    ``prefix_affinity`` (deepest radix match first, so requests sharing a
+    deep prefix are admitted together and the pack scheduler sees bigger
+    forests). Register custom policies with ``@register_policy``.
+  * admission control — a request is admitted only when its full KV page
+    demand (prompt + generation budget) fits the pool minus a configured
+    headroom, evicting unreferenced radix subtrees if allowed; admission
+    is head-of-line in *policy* order (the first infeasible request blocks
+    the rest, preserving the policy's intent under memory pressure).
+  * chunk budgeting — every step the scheduler hands out prefill chunks:
+    in-flight (admitted, partially prefilled) requests first in admission
+    order, then newly admitted ones, each chunk capped by
+    ``chunk_tokens`` and by the per-step token budget with the decode
+    batch's tokens already reserved off the top.
+
+The scheduler owns the waiting/prefilling queues and the page
+reservation; the engine executes the returned ``StepPlan`` (runs the
+chunks, then decodes) — see ``serving.engine``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Type
+
+from repro.serving.kv_cache import PageAllocator
+from repro.serving.radix_cache import RadixCache
+
+
+@dataclass
+class Request:
+    """One serving request, threaded through waiting -> prefilling ->
+    running -> finished. The scheduler owns the first two states (and the
+    page reservation that gates them); the engine owns the rest."""
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float = 0.0  # wall clock (time.perf_counter) at submit
+    arrival_v: float = 0.0  # engine virtual clock (token units) at submit
+    # filled by the scheduler at admission
+    pages: List[int] = field(default_factory=list)
+    cached_tokens: int = 0
+    prefilled: int = 0  # prompt tokens whose K/V are pool-resident
+    # filled by the engine
+    generated: List[int] = field(default_factory=list)
+    token_times: List[float] = field(default_factory=list)  # wall, per token
+    token_vt: List[float] = field(default_factory=list)  # virtual, per token
+    t_first_token: Optional[float] = None
+    t_finished: Optional[float] = None
+    position: int = 0  # next position to decode
+    # in-flight prefix sharing (DESIGN.md §7): (provider request, tokens)
+    # when this request's leading pages are borrowed from a co-admitted
+    # request still mid-prefill — chunks are gated until the provider has
+    # written that many tokens
+    share_from: Optional[tuple] = None
+
+
+@dataclass
+class SchedulerConfig:
+    policy: str = "fcfs"  # fcfs | sjf | prefix_affinity (or registered)
+    # Max prompt tokens prefilled per chunk; None = monolithic (whole
+    # remaining prompt in one chunk — the pre-scheduler engine behavior).
+    chunk_tokens: Optional[int] = None
+    # Per-step token budget across decode + prefill: each running request
+    # costs 1 token, the remainder is handed out as prefill chunks. None =
+    # unbounded. Non-chunkable archs (hybrid/SSM, enc-dec) gate admission
+    # on the budget but always prefill whole prompts (DESIGN.md §7).
+    step_token_budget: Optional[int] = None
+    max_running: Optional[int] = None  # cap on running + prefilling
+    kv_headroom_pages: int = 0  # pages kept free past admission demand
+    allow_evict: bool = True  # evict unreferenced radix subtrees on demand
+
+    def __post_init__(self):
+        if self.chunk_tokens is not None and self.chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1")
+        if self.step_token_budget is not None and self.step_token_budget < 1:
+            raise ValueError("step_token_budget must be >= 1")
+
+
+@dataclass
+class SchedContext:
+    """Read-only view of engine state handed to policies."""
+
+    free_pages: int
+    num_running: int
+    num_prefilling: int
+    page_size: int
+    radix: RadixCache
+
+
+POLICIES: Dict[str, Type["SchedulingPolicy"]] = {}
+
+
+def register_policy(cls: Type["SchedulingPolicy"]) -> Type["SchedulingPolicy"]:
+    POLICIES[cls.name] = cls
+    return cls
+
+
+def get_policy(name: str) -> "SchedulingPolicy":
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {name!r}; registered: {sorted(POLICIES)}"
+        ) from None
+
+
+class SchedulingPolicy:
+    """Orders the waiting queue; admission walks the result head-of-line."""
+
+    name = "base"
+
+    def order(self, waiting: List[Request], ctx: SchedContext) -> List[Request]:
+        raise NotImplementedError
+
+
+@register_policy
+class FcfsPolicy(SchedulingPolicy):
+    name = "fcfs"
+
+    def order(self, waiting, ctx):
+        return list(waiting)  # the queue is already arrival-ordered
+
+
+@register_policy
+class ShortestPromptFirst(SchedulingPolicy):
+    """Classic SJF on prompt length: cheap prefills jump the queue, cutting
+    TTFT for short requests stuck behind long prompts (rid tie-break keeps
+    it deterministic and arrival-stable)."""
+
+    name = "sjf"
+
+    def order(self, waiting, ctx):
+        return sorted(waiting, key=lambda r: (len(r.prompt), r.rid))
+
+
+@register_policy
+class PrefixAffinity(SchedulingPolicy):
+    """Deepest radix match first: requests whose prompts already share a
+    long cached prefix are admitted together, so the pack scheduler's
+    prefix forest grows taller (more KV loaded once per group — the
+    sharing structure PAT's kernel monetises). Ties fall back to FCFS."""
+
+    name = "prefix_affinity"
+
+    def order(self, waiting, ctx):
+        return sorted(
+            waiting, key=lambda r: (-ctx.radix.match_len(r.prompt), r.rid)
+        )
+
+
+@dataclass
+class StepPlan:
+    """One step's worth of scheduler decisions, executed by the engine."""
+
+    admitted: List[Request] = field(default_factory=list)
+    chunks: List[Tuple[Request, int]] = field(default_factory=list)
+    prefill_tokens: int = 0
+
+
+class Scheduler:
+    """Owns waiting/prefilling queues and KV page reservation.
+
+    ``schedule(num_running)`` is called once per engine step and returns a
+    StepPlan; the engine runs each chunk (writing its K/V pages so the next
+    chunk can attend over them), promotes requests whose prompt completed
+    to the decode batch, and calls ``finish_prefill`` for them.
+    """
+
+    def __init__(
+        self,
+        allocator: PageAllocator,
+        radix: RadixCache,
+        page_size: int,
+        config: Optional[SchedulerConfig] = None,
+        chunkable: bool = True,
+    ):
+        self.cfg = config or SchedulerConfig()
+        self.alloc = allocator
+        self.radix = radix
+        self.page = page_size
+        # Hybrid/SSM and enc-dec archs have no paged suffix-prefill path, so
+        # their prompts are always prefilled whole (budget still gates
+        # admission, chunks never split).
+        self.chunkable = chunkable
+        self.policy = get_policy(self.cfg.policy)
+        self.waiting: List[Request] = []
+        self.prefilling: List[Request] = []
+
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.prefilling)
+
+    def finish_prefill(self, req: Request) -> None:
+        self.prefilling.remove(req)
+
+    # --- per-step planning --------------------------------------------------
+
+    def schedule(self, num_running: int) -> StepPlan:
+        budget = (
+            math.inf
+            if self.cfg.step_token_budget is None
+            else self.cfg.step_token_budget
+        )
+        # decode tokens come off the top: chunked prefill may never starve
+        # the running batch (the overlap invariant, DESIGN.md §7)
+        prefill_budget = max(budget - num_running, 0)
+        chunk_cap = self.cfg.chunk_tokens or math.inf
+        plan = StepPlan()
+        # prefill positions as they will stand after this plan executes
+        # (the engine runs plan.chunks in list order, which is admission
+        # order — a sharer's chunk always runs after its provider's)
+        projected: Dict[int, int] = {}
+
+        def dep_met(req: Request) -> bool:
+            """A request borrowing in-flight prefix pages may only chunk
+            once its provider has written (or will have written, earlier
+            in this very plan) the shared tokens."""
+            if req.share_from is None:
+                return True
+            prov, k = req.share_from
+            if projected.get(id(prov), prov.prefilled) >= k:
+                req.share_from = None  # provider progress is monotone
+                return True
+            return False
+
+        def assign_chunk(req: Request) -> None:
+            remaining = len(req.prompt) - req.prefilled
+            n = (
+                remaining
+                if not self.chunkable
+                else int(min(remaining, chunk_cap, prefill_budget - plan.prefill_tokens))
+            )
+            if n > 0:
+                plan.chunks.append((req, n))
+                plan.prefill_tokens += n
+                projected[id(req)] = req.prefilled + n
+
+        # 1. keep in-flight prefills moving, admission order. Liveness
+        # holds by construction: with num_running == 0 the budget (>= 1,
+        # validated) is all prefill budget, and the head in-flight request
+        # has remaining >= 1 and no (unmet) dependency — providers always
+        # precede their sharers in admission order — so it advances.
+        for req in self.prefilling:
+            if prefill_budget - plan.prefill_tokens <= 0:
+                break
+            if dep_met(req):
+                assign_chunk(req)
+
+        # 2. admissions, in policy order, head-of-line blocking
+        ctx = SchedContext(
+            free_pages=self.alloc.num_free,
+            num_running=num_running,
+            num_prefilling=len(self.prefilling),
+            page_size=self.page,
+            radix=self.radix,
+        )
+        for req in self.policy.order(self.waiting, ctx):
+            if prefill_budget - plan.prefill_tokens <= 0:
+                break
+            if (
+                self.cfg.max_running is not None
+                and num_running + len(self.prefilling) >= self.cfg.max_running
+            ):
+                break
+            if not self._try_reserve(req):
+                break
+            self.waiting.remove(req)
+            self.prefilling.append(req)
+            plan.admitted.append(req)
+            if dep_met(req):
+                assign_chunk(req)
+        return plan
+
+    # --- admission ----------------------------------------------------------
+
+    def _page_aligned_common(self, a: List[int], b: List[int]) -> int:
+        n = min(len(a), len(b))
+        i = 0
+        while i < n and a[i] == b[i]:
+            i += 1
+        return (i // self.page) * self.page
+
+    def _try_reserve(self, req: Request) -> bool:
+        """All-or-nothing KV reservation for prompt + generation budget.
+        Cached prefix pages are incref'd by match_prefix, which pins them
+        against eviction for the request's whole lifetime.
+
+        Co-arrival sharing: a prompt prefix only reaches the radix tree
+        when its prefill COMPLETES, so requests admitted while a matching
+        prompt is still mid-prefill additionally scan the prefilling set
+        and borrow the provider's pages for the longest page-aligned
+        common prefix (content is deterministic, so borrowed pages are
+        bit-identical to a recompute). The borrower records a
+        `share_from` dependency; `schedule` gates its chunks until the
+        provider has written that many tokens."""
+        S = len(req.prompt)
+        n_pages = -(-(S + req.max_new_tokens) // self.page)
+        cached_pages, cached = self.radix.match_prefix(req.prompt)
+        provider, shared = None, cached
+        for other in self.prefilling:
+            k = self._page_aligned_common(req.prompt, other.prompt)
+            if k > shared:
+                provider, shared = other, k
+        base_pages = (
+            provider.pages[: shared // self.page]
+            if provider is not None
+            else cached_pages
+        )
+        new_needed = n_pages - len(base_pages)
+        avail = self.alloc.num_free - self.cfg.kv_headroom_pages
+        if avail < new_needed:
+            if self.cfg.allow_evict:
+                self.radix.evict(new_needed - avail)
+                avail = self.alloc.num_free - self.cfg.kv_headroom_pages
+            if avail < new_needed:
+                if cached_pages:
+                    self.alloc.decref(cached_pages)
+                return False
+        if provider is not None:
+            # borrow the whole shared run from the provider (its leading
+            # pages may themselves be radix-cached — an extra ref is fine)
+            if cached_pages:
+                self.alloc.decref(cached_pages)
+            base_pages = list(base_pages)
+            self.alloc.incref(base_pages)
+            req.share_from = (provider, shared)
+        else:
+            req.share_from = None
+        req.pages = base_pages + self.alloc.alloc(new_needed)
+        req.cached_tokens = shared
+        # chunked prefill resumes after the shared prefix; at least one
+        # prompt token is always recomputed so the final chunk emits the
+        # first generation logits even for a fully-cached prompt
+        req.prefilled = min(shared, S - 1) if self.chunkable else 0
+        return True

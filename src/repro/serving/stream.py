@@ -1,0 +1,131 @@
+"""Streaming outputs: per-request token iterators + TTFT/TPOT timing.
+
+Pull-based streaming for a single-threaded engine (DESIGN.md §7):
+iterating a ``RequestStream`` *pumps* the engine — each ``__next__`` runs
+engine steps until the request's next token exists, then yields it with
+its wall-clock and virtual-clock timestamps. Tokens are read from the same
+``Request.generated`` list the non-streaming API returns, so streamed
+output is identical to batch output by construction; interleaving several
+streams just shares the pumping.
+
+Timing helpers (``request_timing``, ``summarize``) turn per-token
+timestamps into the SLO surface the trace-replay harness reports: TTFT and
+TPOT p50/p95/p99 plus the max inter-token gap, in both wall seconds and
+deterministic virtual token-units (the engine's per-step compute proxy —
+prefill tokens + decode batch size — which is what makes the
+chunked-vs-monolithic bubble comparison reproducible on shared CPU
+runners).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.scheduler import Request
+
+
+@dataclass(frozen=True)
+class StreamEvent:
+    token: int
+    index: int  # 0-based position in the request's output
+    t_wall: float  # time.perf_counter at the producing step
+    t_virtual: float  # engine virtual clock (token units)
+
+
+class RequestStream:
+    """Iterator over one request's output tokens, pumping the engine.
+
+    Raises RuntimeError if the engine goes idle (no schedulable work) while
+    the request is still unfinished — e.g. admission is permanently blocked
+    on KV capacity — instead of spinning forever.
+    """
+
+    def __init__(self, engine, req: Request):
+        self._eng = engine
+        self.req = req
+        self._i = 0
+
+    def __iter__(self) -> "RequestStream":
+        return self
+
+    def __next__(self) -> StreamEvent:
+        r = self.req
+        while self._i >= len(r.generated):
+            if r.t_finished is not None:
+                raise StopIteration
+            if not self._eng.step():
+                raise RuntimeError(
+                    f"engine stalled with request {r.rid} unfinished "
+                    f"(KV admission blocked?)"
+                )
+        ev = StreamEvent(
+            r.generated[self._i], self._i,
+            r.token_times[self._i], r.token_vt[self._i],
+        )
+        self._i += 1
+        return ev
+
+    @property
+    def finished(self) -> bool:
+        return self.req.t_finished is not None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (
+            self.req.token_times[0] - self.req.arrival
+            if self.req.token_times
+            else None
+        )
+
+    @property
+    def ttft_virtual(self) -> Optional[float]:
+        return (
+            self.req.token_vt[0] - self.req.arrival_v
+            if self.req.token_vt
+            else None
+        )
+
+
+def request_timing(req: Request) -> Dict[str, object]:
+    """Per-request SLO numbers from the engine's token timestamps."""
+    gaps_w = np.diff(req.token_times) if len(req.token_times) > 1 else np.zeros(0)
+    gaps_v = np.diff(req.token_vt) if len(req.token_vt) > 1 else np.zeros(0)
+    return {
+        "rid": req.rid,
+        "ttft_s": (req.token_times[0] - req.arrival) if req.token_times else None,
+        "ttft_vt": (req.token_vt[0] - req.arrival_v) if req.token_vt else None,
+        "tpot_gaps_s": gaps_w.tolist(),
+        "tpot_gaps_vt": gaps_v.tolist(),
+        "max_gap_s": float(gaps_w.max()) if gaps_w.size else 0.0,
+        "max_gap_vt": float(gaps_v.max()) if gaps_v.size else 0.0,
+        "tokens": len(req.generated),
+    }
+
+
+def _pct(xs: Sequence[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), p)) if len(xs) else 0.0
+
+
+def summarize(reqs: List[Request]) -> Dict[str, float]:
+    """Fleet-level TTFT/TPOT percentiles over finished requests. Wall
+    quantities are reported in ms; virtual quantities in token units."""
+    timings = [request_timing(r) for r in reqs]
+    ttft_s = [t["ttft_s"] for t in timings if t["ttft_s"] is not None]
+    ttft_v = [t["ttft_vt"] for t in timings if t["ttft_vt"] is not None]
+    gaps_s = [g for t in timings for g in t["tpot_gaps_s"]]
+    gaps_v = [g for t in timings for g in t["tpot_gaps_vt"]]
+    out = {"requests": float(len(reqs))}
+    for name, xs, scale in (
+        ("ttft_ms", ttft_s, 1e3),
+        ("ttft_vt", ttft_v, 1.0),
+        ("tpot_ms", gaps_s, 1e3),
+        ("tpot_vt", gaps_v, 1.0),
+    ):
+        for p in (50, 95, 99):
+            out[f"{name}_p{p}"] = scale * _pct(xs, p)
+    out["max_gap_ms"] = 1e3 * (max(gaps_s) if gaps_s else 0.0)
+    out["max_gap_vt"] = max(gaps_v) if gaps_v else 0.0
+    return out

@@ -1,4 +1,12 @@
-"""Synthetic real-world-like traces (paper §8.2).
+"""Synthetic real-world-like traces (paper §8.2) + arrival processes.
+
+Arrival processes for the trace-replay SLO harness (DESIGN.md §7):
+``poisson_arrivals`` (exponential inter-arrivals) and ``bursty_arrivals``
+(batched arrivals separated by exponential gaps — the multi-tenant "a
+whole agent fleet wakes up at once" shape). Both trace builders take
+``arrival="poisson"|"bursty"``; ``mixed_longprompt_trace`` is the
+acceptance workload for chunked prefill: short requests decoding steadily
+when a very long prompt arrives mid-stream.
 
 Two workloads with the paper's structure, deterministic under a seed:
 
@@ -37,6 +45,38 @@ def _toks(rng: np.random.Generator, n: int, vocab: int) -> List[int]:
     return (rng.integers(3, vocab - 1, n)).tolist()
 
 
+def poisson_arrivals(
+    num: int, rate: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Cumulative arrival times of a Poisson process at `rate` req/s."""
+    return np.cumsum(rng.exponential(1.0 / rate, num))
+
+
+def bursty_arrivals(
+    num: int,
+    rate: float,
+    rng: np.random.Generator,
+    burst_size: int = 4,
+) -> np.ndarray:
+    """Bursty multi-tenant arrivals: requests land in bursts of
+    `burst_size` (same instant), bursts separated by exponential gaps
+    sized so the LONG-RUN rate still averages `rate` req/s."""
+    n_bursts = -(-num // burst_size)
+    gaps = rng.exponential(burst_size / rate, n_bursts)
+    starts = np.cumsum(gaps)
+    return np.repeat(starts, burst_size)[:num]
+
+
+def _arrivals(
+    kind: str, num: int, rate: float, rng: np.random.Generator
+) -> np.ndarray:
+    if kind == "poisson":
+        return poisson_arrivals(num, rate, rng)
+    if kind == "bursty":
+        return bursty_arrivals(num, rate, rng)
+    raise ValueError(f"unknown arrival process {kind!r}")
+
+
 def conversation_trace(
     num_requests: int = 64,
     rate: float = 5.0,
@@ -47,6 +87,7 @@ def conversation_trace(
     prompt_mean: int = 128,
     output_mean: int = 64,
     seed: int = 0,
+    arrival: str = "poisson",
 ) -> List[TraceRequest]:
     rng = np.random.default_rng(seed)
     base = _toks(np.random.default_rng(seed + 1), prefix_lens[0], vocab)
@@ -61,15 +102,15 @@ def conversation_trace(
         ]
         for i in range(num_languages)
     ]
-    out, t = [], 0.0
-    for _ in range(num_requests):
-        t += rng.exponential(1.0 / rate)
+    out = []
+    times = _arrivals(arrival, num_requests, rate, rng)
+    for t in times:
         li = int(rng.integers(num_languages))
         ci = int(rng.integers(num_countries))
         prompt = max(8, int(rng.lognormal(np.log(prompt_mean), 0.6)))
         new = max(4, int(rng.exponential(output_mean)))
         toks = base + langs[li] + countries[li][ci] + _toks(rng, prompt, vocab)
-        out.append(TraceRequest(t, toks, new, prefix_levels=(0, li, ci)))
+        out.append(TraceRequest(float(t), toks, new, prefix_levels=(0, li, ci)))
     return out
 
 
@@ -84,6 +125,7 @@ def toolagent_trace(
     output_mean: int = 48,
     sessions_per_tool: int = 4,
     seed: int = 0,
+    arrival: str = "poisson",
 ) -> List[TraceRequest]:
     rng = np.random.default_rng(seed)
     tools = []
@@ -98,18 +140,56 @@ def toolagent_trace(
         ]
         for i in range(num_tools)
     ]
-    out, t = [], 0.0
+    out = []
     # zipf-ish tool popularity (a few hot tools, like real agent traffic)
     pop = 1.0 / (np.arange(num_tools) + 1.0)
     pop /= pop.sum()
-    for _ in range(num_requests):
-        t += rng.exponential(1.0 / rate)
+    times = _arrivals(arrival, num_requests, rate, rng)
+    for t in times:
         ti = int(rng.choice(num_tools, p=pop))
         si = int(rng.integers(sessions_per_tool))
         prompt = max(8, int(rng.lognormal(np.log(prompt_mean), 0.7)))
         new = max(4, int(rng.exponential(output_mean)))
         toks = tools[ti] + templates[ti][si] + _toks(rng, prompt, vocab)
-        out.append(TraceRequest(t, toks, new, prefix_levels=(ti, si)))
+        out.append(TraceRequest(float(t), toks, new, prefix_levels=(ti, si)))
+    return out
+
+
+def mixed_longprompt_trace(
+    num_short: int = 6,
+    short_prompt: int = 24,
+    short_new: int = 12,
+    num_long: int = 2,
+    long_prompt: int = 256,
+    long_new: int = 8,
+    long_arrival: float = 0.05,
+    num_tail: int = 2,
+    vocab: int = 32000,
+    seed: int = 0,
+) -> List[TraceRequest]:
+    """Chunked-prefill acceptance workload (DESIGN.md §7): `num_short`
+    short requests arrive at t=0 and decode steadily; `num_long` very long
+    prompts arrive mid-decode (staggered from `long_arrival`); `num_tail`
+    more shorts follow. Under monolithic prefill each long admission
+    stalls every running decode for the whole prompt; chunked prefill
+    bounds the stall at one chunk budget per step. Outputs are short
+    enough that the stalls land well inside the pooled inter-token-gap
+    p95. No shared prefixes — the bubble is the point here."""
+    rng = np.random.default_rng(seed)
+    out = [
+        TraceRequest(0.0, _toks(rng, short_prompt + i, vocab), short_new)
+        for i in range(num_short)
+    ]
+    out += [
+        TraceRequest(long_arrival * (1 + 3 * i), _toks(rng, long_prompt, vocab),
+                     long_new)
+        for i in range(num_long)
+    ]
+    out += [
+        TraceRequest(long_arrival * (2 + i), _toks(rng, short_prompt, vocab),
+                     short_new)
+        for i in range(num_tail)
+    ]
     return out
 
 
