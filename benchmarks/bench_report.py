@@ -17,6 +17,11 @@ across PRs (ISSUE 2):
                        oracle (benchmarks/overhead.fused_vs_groups), and
                        the deep-tree straggler ratio before/after KV-split
                        rebalancing (memory_traffic.straggler_report).
+                       Each scenario records the LaunchConfig that applied
+                       and its provenance (``config_source``: explicit /
+                       tuned / heuristic — DESIGN.md §8); the tuned
+                       configs come from the committed hillclimb artifact
+                       TUNING_decode_attention.json when present.
   * ``e2e_serving``  — ISSUE 4: trace-replay SLO surface — TTFT/TPOT
                        p50/p95/p99 (deterministic virtual token units +
                        measured wall ms) for chunked vs monolithic prefill
@@ -41,6 +46,12 @@ import platform
 from typing import Dict, Optional
 
 DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_decode_attention.json")
+# Persisted LaunchConfig sweep output (benchmarks/hillclimb.py); when the
+# committed artifact exists, the fused-launch sections measure with its
+# tuned configs and record the provenance per section.
+DEFAULT_TUNING_PATH = os.path.join(
+    os.path.dirname(__file__), "TUNING_decode_attention.json"
+)
 SCHEMA = 1
 
 
@@ -82,19 +93,30 @@ def kernel_section(rows) -> Dict:
     }
 
 
-def collect(fast: bool = False, verbose: bool = True) -> Dict:
+def collect(
+    fast: bool = False, verbose: bool = True,
+    tuning_cache: Optional[str] = None,
+) -> Dict:
     """Regenerates every section. ``fast=True`` shrinks the measured and
-    modeled workloads (used by the perf-smoke pytest)."""
+    modeled workloads (used by the perf-smoke pytest). ``tuning_cache``
+    points the fused-launch A/B at a persisted LaunchConfig sweep; the
+    default is the committed hillclimb artifact when present (each section
+    records the config provenance that actually applied)."""
     from benchmarks import e2e_serving, kernel_perf, memory_traffic, overhead
+
+    if tuning_cache is None and os.path.exists(DEFAULT_TUNING_PATH):
+        tuning_cache = DEFAULT_TUNING_PATH
 
     # keep the batch size fixed so per-step wall-clock stays comparable
     # between fast (smoke) and full collections
     disp = overhead.dispatch_overhead(
         batch=64, steps=8 if fast else 20, verbose=verbose
     )
+    disp["config_source"] = "heuristic"  # dispatch A/B runs stock configs
     disp_light = overhead.dispatch_overhead(
         batch=64, steps=8 if fast else 20, verbose=verbose, shared_pages=0
     )
+    disp_light["config_source"] = "heuristic"
     hbm = {
         "no_share_64x1024": memory_traffic.split_aware_report(verbose=verbose),
         "tree_fig10_cfg10": memory_traffic.split_aware_report(
@@ -109,12 +131,17 @@ def collect(fast: bool = False, verbose: bool = True) -> Dict:
     kern = kernel_section(rows)
     fused = {
         "shared": overhead.fused_vs_groups(
-            batch=64, steps=8 if fast else 20, shared_pages=4, verbose=verbose
+            batch=64, steps=8 if fast else 20, shared_pages=4,
+            verbose=verbose, tuning_cache=tuning_cache,
         ),
         "split_light": overhead.fused_vs_groups(
-            batch=64, steps=8 if fast else 20, shared_pages=0, verbose=verbose
+            batch=64, steps=8 if fast else 20, shared_pages=0,
+            verbose=verbose, tuning_cache=tuning_cache,
         ),
         "balance": memory_traffic.straggler_report(verbose=verbose),
+        # provenance pointer only — relative so the committed artifact is
+        # machine-independent
+        "tuning_cache": os.path.basename(tuning_cache) if tuning_cache else None,
     }
     return {
         "dispatch": disp,

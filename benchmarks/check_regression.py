@@ -13,6 +13,13 @@ deterministic) must stay at or below the monolithic baseline measured in
 the SAME artifact, and the chunked numbers must not drift >10% vs the
 committed baseline.
 
+ISSUE 6 tightens the fused-launch gate: the within-artifact fused vs
+per-group A/B is strict — 10% relative tolerance, NO absolute noise floor
+(both paths are measured interleaved in the same run). With the tuned
+LaunchConfigs from TUNING_decode_attention.json the fused single launch
+must win on every scenario; tests/test_perf_smoke.py additionally pins
+speedup >= 1.0 on the committed artifact.
+
 Usage:
     python benchmarks/check_regression.py [--current PATH] [--baseline PATH]
     python benchmarks/check_regression.py --fresh   # re-measure, then diff
@@ -112,17 +119,18 @@ def compare(baseline: Dict, current: Dict) -> List[str]:
                 f"{cur.get('launches_fused')} (must be 1)"
             )
         # within-artifact A/B: fusing must not be slower than the
-        # per-group oracle it replaced (same run, same machine)
+        # per-group oracle it replaced (same run, same machine, both paths
+        # interleaved min-of-repeats — so NO absolute noise floor here:
+        # the floor once let a 0.87x fused path pass as "jitter")
         if "groups_ms_per_step" in cur and (
             cur["fused_ms_per_step"]
             > cur["groups_ms_per_step"] * (1 + WALL_CLOCK_THRESHOLD)
-            and cur["fused_ms_per_step"] - cur["groups_ms_per_step"]
-            > WALL_CLOCK_FLOOR_MS
         ):
             failures.append(
                 f"fused_launch.{scen}: fused path slower than per-group "
                 f"oracle ({cur['fused_ms_per_step']:.3f} vs "
-                f"{cur['groups_ms_per_step']:.3f} ms/step)"
+                f"{cur['groups_ms_per_step']:.3f} ms/step, speedup "
+                f"{cur.get('speedup', 0.0):.2f}x < 1.0)"
             )
     # --- chunked-prefill SLO gates (ISSUE 4) -------------------------------
     c_e = current.get("e2e_serving", {})

@@ -1,54 +1,227 @@
-"""§Perf hillclimb driver: re-lowers the three chosen cells at successive
-optimization levels and records the roofline-term deltas.
+"""Seeded deterministic LaunchConfig hillclimb -> persisted TuningCache.
 
-Cells (chosen from the baseline table):
-  A qwen3-32b  decode_32k  — most PAT-representative + collective-bound
-  B qwen3-32b  prefill_32k — worst memory-roofline fraction
-  C deepseek-v2-236b train_4k — MoE: dispatch waste + collective-bound
+Sweeps the launch-parameter space (DESIGN.md §8: m-bucket count, Q-tile
+cap, KV-tile policy, rebalance threshold) for each decode-attention bench
+scenario and records the winner per shape bucket in a TuningCache JSON —
+the artifact `PlanCache` consults at serving time (PatConfig.tuning_cache,
+serve.py --tuning-cache) and the fused-launch A/B measures with
+(bench_report.collect).
 
-Levels (launch/dryrun.py):
-  0 baseline; 1 +scatter cache update; 2 +chunked seq attention
-  +split-KV-over-model decode sharding.  MoE dispatch: cumsum vs sort.
+Search is greedy axis descent from the heuristic default, the same
+best-config-by-measured-latency loop as tilelang's @autotune decorator —
+enumerate candidates, measure each, keep the fastest — except candidates
+are visited greedily per axis instead of as a full cross product. The
+measurement is `overhead.fused_vs_groups` (interleaved min-of-repeats, so
+the per-group oracle re-measures under the same load as each candidate).
 
-Usage: PYTHONPATH=src:. python -m benchmarks.hillclimb --out hillclimb.json
+Determinism: ``--seed`` drives the axis visit order through a PRNG and the
+workload data seed; nothing depends on wall-clock, host name, or dict
+iteration order, so two runs with the same seed measure the same
+candidates in the same order (scores still jitter with machine load — the
+acceptance knob is the candidate SET, which is exactly reproducible).
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.hillclimb \
+      --cache benchmarks/TUNING_decode_attention.json --seed 0
+
+The pre-ISSUE-6 dryrun-cell driver (qwen3/deepseek roofline cells) is
+retired; ``--out`` survives as a deprecation shim that dumps the sweep
+results list as JSON for old automation.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+from typing import Callable, Dict, List, Optional, Tuple
 
-CELLS = [
-    # (arch, shape, [(tag, opt_level, dispatch)])
-    ("qwen3-32b", "decode_32k", [("opt1_scatter", 1, None), ("opt2_splitkv", 2, None)]),
-    ("qwen3-32b", "prefill_32k", [("opt2_chunked_attn", 2, None)]),
-    ("deepseek-v2-236b", "train_4k",
-     [("dispatch_cumsum", 0, "cumsum"), ("dispatch_sort", 0, "sort")]),
+import numpy as np
+
+from benchmarks import overhead
+from repro.core.tile_config import LaunchConfig
+from repro.core.tuning_cache import TuningCache, shape_key
+
+PAGE = 16
+HQ, HKV, DK = 8, 4, 64  # fused_vs_groups bench heads
+
+DEFAULT_CACHE = os.path.join(
+    os.path.dirname(__file__), "TUNING_decode_attention.json"
+)
+
+# the bench scenarios the committed BENCH artifact gates on
+WORKLOADS = [
+    ("shared", dict(shared_pages=4)),
+    ("split_light", dict(shared_pages=0)),
+]
+
+# (axis, candidates). "n_fixed" folds the policy switch: None restores the
+# heuristic KV-tile rule, an int pins n (snapped down to a feasible tile).
+AXES: List[Tuple[str, tuple]] = [
+    ("num_m_buckets", (1, 2, 3)),
+    ("m_max", (None, 8, 16, 32)),
+    ("n_fixed", (None, 128, 256, 512)),
+    ("rebalance_ratio", (1.5, 2.0, 3.0)),
 ]
 
 
-def main():
+def _apply(lc: LaunchConfig, axis: str, val) -> LaunchConfig:
+    d = lc.to_dict()
+    if axis == "n_fixed":
+        d["n_policy"] = "heuristic" if val is None else "fixed"
+        d["n_fixed"] = val
+    else:
+        d[axis] = val
+    return LaunchConfig.from_dict(d)
+
+
+def hillclimb(
+    measure: Callable[[LaunchConfig], Tuple[float, Dict]],
+    rng: np.random.Generator,
+    rounds: int = 2,
+    rel_eps: float = 0.02,
+    verbose: bool = True,
+) -> Dict:
+    """Greedy axis descent. A candidate replaces the incumbent only when it
+    is >``rel_eps`` faster — min-of-repeats still jitters on a shared
+    container, and a sticky incumbent keeps the sweep deterministic-ish in
+    outcome, not just in visit order."""
+    best = LaunchConfig()
+    best_ms, best_res = measure(best)
+    base_ms = best_ms
+    trials = 1
+    if verbose:
+        print(f"  heuristic baseline: {base_ms:.3f} ms/step", flush=True)
+    for r in range(rounds):
+        improved = False
+        for ai in rng.permutation(len(AXES)):
+            axis, choices = AXES[int(ai)]
+            for val in choices:
+                cand = _apply(best, axis, val)
+                if cand == best:
+                    continue
+                ms, res = measure(cand)
+                trials += 1
+                if verbose:
+                    print(
+                        f"  {axis}={val!r}: {ms:.3f} ms/step"
+                        f"{'  <- new best' if ms < best_ms * (1 - rel_eps) else ''}",
+                        flush=True,
+                    )
+                if ms < best_ms * (1 - rel_eps):
+                    best, best_ms, best_res = cand, ms, res
+                    improved = True
+        if not improved:
+            break
+    return {
+        "launch": best,
+        "score_ms": best_ms,
+        "heuristic_ms": base_ms,
+        "trials": trials,
+        "result": best_res,
+    }
+
+
+def sweep(
+    cache_path: Optional[str] = DEFAULT_CACHE,
+    seed: int = 0,
+    batch: int = 64,
+    steps: int = 8,
+    repeats: int = 3,
+    rounds: int = 2,
+    only: Optional[str] = None,
+    verbose: bool = True,
+) -> List[Dict]:
+    """Runs the hillclimb for every bench workload, records winners into
+    the TuningCache at ``cache_path`` (None = in-memory only), and returns
+    the per-workload summaries."""
+    rng = np.random.default_rng(seed)
+    tc = TuningCache(cache_path)
+    results: List[Dict] = []
+    for name, kw in WORKLOADS:
+        if only and only not in name:
+            continue
+        _, kv, _ = overhead._prealloc_shared_batch(batch, kw["shared_pages"])
+        key = shape_key("pat", PAGE, HQ, HKV, DK, batch, int(kv.max()))
+        if verbose:
+            print(f"workload {name} -> {key}", flush=True)
+
+        memo: Dict[LaunchConfig, Tuple[float, Dict]] = {}
+
+        def measure(lc: LaunchConfig, kw=kw) -> Tuple[float, Dict]:
+            if lc in memo:
+                return memo[lc]
+            res = overhead.fused_vs_groups(
+                batch=batch, steps=steps, repeats=repeats, verbose=False,
+                launch=lc, seed=11 + seed, **kw,
+            )
+            memo[lc] = (res["fused_ms_per_step"], res)
+            return memo[lc]
+
+        win = hillclimb(measure, rng, rounds=rounds, verbose=verbose)
+        tc.record(
+            key, win["launch"], score_ms=win["score_ms"],
+            meta={
+                "workload": name, "seed": seed, "trials": win["trials"],
+                "heuristic_ms": win["heuristic_ms"],
+                "speedup_vs_groups": win["result"]["speedup"],
+            },
+        )
+        results.append({
+            "workload": name, "key": key,
+            "launch": win["launch"].to_dict(),
+            "score_ms": win["score_ms"],
+            "heuristic_ms": win["heuristic_ms"],
+            "trials": win["trials"],
+        })
+        if verbose:
+            print(
+                f"  winner: {win['score_ms']:.3f} ms/step "
+                f"(heuristic {win['heuristic_ms']:.3f}, "
+                f"{win['trials']} trials) {win['launch'].to_dict()}",
+                flush=True,
+            )
+    if cache_path is not None:
+        tc.save()
+        if verbose:
+            print(f"wrote {cache_path} ({len(tc)} entries)", flush=True)
+    return results
+
+
+def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="hillclimb.json")
-    ap.add_argument("--only", default=None, help="arch:shape:tag filter")
-    args = ap.parse_args()
-
-    from repro.launch import dryrun
-
-    results = []
-    for arch, shape, variants in CELLS:
-        for tag, level, dispatch in variants:
-            if args.only and args.only not in f"{arch}:{shape}:{tag}":
-                continue
-            dryrun.apply_opt_level(level, dispatch)
-            r = dryrun.run_cell(arch, shape, multi_pod=False)
-            r["variant"] = tag
-            r["opt_level"] = level
-            results.append(r)
-            with open(args.out, "w") as f:
-                json.dump(results, f, indent=1, default=str)
-    print(f"wrote {args.out}")
+    ap.add_argument("--cache", default=DEFAULT_CACHE,
+                    help="TuningCache JSON to update (PlanCache input)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="drives the axis visit order and the workload "
+                         "data seed; same seed = same candidate sequence")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--only", default=None, help="workload name filter")
+    ap.add_argument("--out", default=None,
+                    help="DEPRECATED (pre-ISSUE-6 dryrun-cell driver): "
+                         "writes the sweep summaries as a JSON list")
+    args = ap.parse_args(argv)
+    if args.out:
+        print(
+            "hillclimb: --out is deprecated — the dryrun-cell driver was "
+            "retired by the LaunchConfig sweep (use --cache; --out now "
+            "receives the sweep summary list)."
+        )
+    results = sweep(
+        cache_path=args.cache, seed=args.seed, batch=args.batch,
+        steps=args.steps, repeats=args.repeats, rounds=args.rounds,
+        only=args.only,
+    )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

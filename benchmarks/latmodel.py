@@ -8,7 +8,7 @@ from a work plan. This model turns plans into normalised latencies
   fused        = max(live_bytes/BW, flops_u/peak) + t_launch
                  (the executed datapath: ONE launch over the unified step
                  list, page-granular DMA — only live pages cross HBM; MMA
-                 padded to the plan-wide (m_max, n_max))
+                 padded per step to its m-class, n to the plan-wide n_max)
   t_group      = max(kv_bytes_g / BW, flops_g / peak) + t_launch
   multi-stream = max_g(stream serialisation) ~ max(total_bytes/BW,
                  max_g flops_g/peak) + t_launch   (streams overlap)
@@ -64,8 +64,9 @@ def plan_latency(
     ``mode="fused"`` (the default whenever the plan has a unified step
     list — the executed datapath, DESIGN.md §6) charges ONE launch over
     the unified list: bytes are the LIVE pages of active steps
-    (page-granular DMA), flops pad every active step to the plan-wide
-    (m_max, n_max). ``"streams"`` is the pre-fused per-group overlap
+    (page-granular DMA), flops pad each active step to its bucketed
+    m-class and the plan-wide n_max. ``"streams"`` is the pre-fused
+    per-group overlap
     model, ``"serial"`` the PAT-serial ablation (``serial=True`` is kept
     as an alias).
 
@@ -93,7 +94,14 @@ def plan_latency(
         act = u.step_len > 0
         live_pages = int(u.step_npages[act].sum())
         total_bytes = live_pages * page * (head_dim + dv) * Hkv * kv_bytes_per_el
-        flops = 2.0 * int(act.sum()) * u.tile.m * u.tile.n * (head_dim + dv) * Hkv
+        if u.m_classes is not None and u.step_mclass is not None:
+            # bucketed m classes (DESIGN.md §8): each active step pays MMA
+            # padded only to ITS class m, not the plan-wide m_max
+            m_per_step = np.asarray(u.m_classes)[u.step_mclass[act]]
+            m_rows = float(m_per_step.sum())
+        else:
+            m_rows = float(int(act.sum()) * u.tile.m)
+        flops = 2.0 * m_rows * u.tile.n * (head_dim + dv) * Hkv
         t_fwd = max(total_bytes / bw, flops / hw.peak_flops) + hw.launch_s
         launches = 1
     else:

@@ -31,6 +31,7 @@ from repro.core.pack_scheduler import (
     schedule,
     theoretical_min_kv_bytes,
 )
+from repro.core.tile_config import LaunchConfig
 from repro.core.tile_selector import TileSelector
 from repro.core.work_plan import build_work_plan
 from repro.workloads.traces import (
@@ -120,7 +121,7 @@ def split_aware_report(
     sel = TileSelector(head_dim=HEAD_DIM, page_size=PAGE)
     plan = schedule(
         bt, kv, PAGE, strategy="pat", rows_per_query=HQ // HKV,
-        max_query_rows=sel.max_query_rows, select_n=sel.rules.select_n,
+        max_query_rows=sel.max_query_rows, selector=sel,
     )
     counts = plan_query_part_counts(plan)
     dense = plan_intermediate_bytes(plan, HEAD_DIM, HQ)
@@ -182,8 +183,8 @@ def straggler_report(verbose: bool = True) -> Dict:
         for label, reb in (("before", False), ("after", True)):
             plan = schedule(
                 bt, kv, PAGE, strategy="pat", rows_per_query=HQ // HKV,
-                max_query_rows=sel.max_query_rows, rebalance=reb,
-                select_n=sel.rules.select_n,
+                max_query_rows=sel.max_query_rows, selector=sel,
+                launch=LaunchConfig(rebalance_kv=reb),
             )
             wp = build_work_plan(plan, sel, HQ, HKV, kv_lens=kv)
             entry[label] = wp.step_balance()

@@ -247,17 +247,26 @@ def _prealloc_shared_batch(batch: int, shared_pages: int, priv: int = 2,
 def fused_vs_groups(
     batch: int = 64, steps: int = 20, repeats: int = 3,
     shared_pages: int = 4, verbose: bool = True,
+    launch=None, tuning_cache: "str | None" = None, seed: int = 11,
 ) -> Dict:
     """ISSUE 3 A/B: jitted per-step wall-clock of the FUSED single-launch
     forward (dispatch="jit", the hot path) vs the jitted PER-GROUP oracle
     (dispatch="jit_groups", one launch per tile group from device-resident
     group arrays — the PR 2 datapath). Identical math, identical
-    device-resident plan service; min-of-repeats timing."""
+    device-resident plan service.
+
+    ``launch`` (an explicit LaunchConfig) or ``tuning_cache`` (a persisted
+    TuningCache path) set the launch parameters the fused plan is built
+    with; the result records which source actually applied
+    (``config_source``: explicit > tuned > heuristic). Timing interleaves
+    the two paths across repeats (groups, fused, groups, fused, ...) and
+    takes each path's MINIMUM, so a load spike on the shared container
+    penalises both paths alike instead of whichever ran last."""
     import jax.numpy as jnp
 
     from repro.kernels import ops
 
-    rng = np.random.default_rng(11)
+    rng = np.random.default_rng(seed)
     Hq, Hkv, dk = 8, 4, 64
     bt, kv, nxt = _prealloc_shared_batch(batch, shared_pages)
     k_pages = jnp.asarray(rng.normal(size=(Hkv, nxt + 1, PAGE, dk)), jnp.float32)
@@ -265,33 +274,46 @@ def fused_vs_groups(
     q = jnp.asarray(rng.normal(size=(batch, Hq, dk)), jnp.float32)
     backend = PatAttentionBackend(
         Hq, Hkv, dk, kv_dtype_bytes=4,
-        config=PatConfig(impl="xla", merge_impl="xla"),
+        config=PatConfig(impl="xla", merge_impl="xla", launch=launch,
+                         tuning_cache=tuning_cache),
     )
+    # provenance: the LaunchConfig the plan cache actually resolves for
+    # this shape (explicit config wins; else a tuned cache entry; else the
+    # heuristic selector defaults)
+    used_launch = backend.cache._selector_for(
+        batch, int(kv.max()), PAGE
+    ).launch
+    if launch is not None:
+        config_source = "explicit"
+    else:
+        config_source = used_launch.source  # "tuned" | "heuristic"
 
-    def run_path(dispatch: str) -> float:
+    def one_pass(dispatch: str) -> float:
+        t0 = time.perf_counter()
+        for s in range(steps):
+            wp = backend.plan(bt, kv + 1 + s)
+            out = ops.pat_paged_attention(
+                q, k_pages, v_pages, wp, impl="xla", merge_impl="xla",
+                dispatch=dispatch,
+            )
+        dt = (time.perf_counter() - t0) / steps
+        out.block_until_ready()
+        return dt
+
+    # warm-up: compile both paths before any timed pass
+    for dispatch in ("jit_groups", "jit"):
         wp = backend.plan(bt, kv)
-        out = ops.pat_paged_attention(
+        ops.pat_paged_attention(
             q, k_pages, v_pages, wp, impl="xla", merge_impl="xla",
             dispatch=dispatch,
-        )
-        out.block_until_ready()  # warm-up: compile the path
-        t_best = float("inf")
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            for s in range(steps):
-                wp = backend.plan(bt, kv + 1 + s)
-                out = ops.pat_paged_attention(
-                    q, k_pages, v_pages, wp, impl="xla", merge_impl="xla",
-                    dispatch=dispatch,
-                )
-            t_best = min(t_best, (time.perf_counter() - t0) / steps)
-            out.block_until_ready()
-        return t_best
+        ).block_until_ready()
+    t_groups = t_fused = float("inf")
+    for _ in range(repeats):
+        t_groups = min(t_groups, one_pass("jit_groups"))
+        t_fused = min(t_fused, one_pass("jit"))
 
     wp = backend.plan(bt, kv)
     n_groups = len(wp.groups)
-    t_groups = run_path("jit_groups")
-    t_fused = run_path("jit")
     # launch counts derived from the dispatch rule actually applied to this
     # plan: dispatch="jit"/"auto" runs the unified list iff it exists, else
     # falls back to one launch per group. (The structural per-jaxpr proof
@@ -307,10 +329,15 @@ def fused_vs_groups(
         "fused_ms_per_step": t_fused * 1e3,
         "groups_ms_per_step": t_groups * 1e3,
         "speedup": t_groups / max(t_fused, 1e-12),
+        "config_source": config_source,
+        "launch": used_launch.to_dict(),
+        "m_classes": list(wp.unified.m_classes) if wp.unified is not None
+        and wp.unified.m_classes is not None else None,
     }
     if verbose:
         print(
-            f"fused-vs-groups B={batch:4d} groups={n_groups}: "
+            f"fused-vs-groups B={batch:4d} groups={n_groups} "
+            f"[{config_source}]: "
             f"fused={res['fused_ms_per_step']:.3f}ms/step "
             f"per-group={res['groups_ms_per_step']:.3f}ms/step "
             f"speedup={res['speedup']:.2f}x",

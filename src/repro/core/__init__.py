@@ -7,18 +7,21 @@ Public API:
   TileSelector / feasible_tiles    — multi-tile kernel configuration
   build_work_plan / WorkPlan       — device-ready ragged work lists
   PlanCache                        — lazy update across decode steps
+  LaunchConfig / TuningCache       — tuned, persisted launch parameters
 """
 
 from repro.core.attention import PatAttentionBackend, PatConfig
 from repro.core.lazy_update import PlanCache
 from repro.core.pack_scheduler import PackPlan, WorkItem, schedule
 from repro.core.prefix_tree import PrefixNode, build_forest
-from repro.core.tile_config import TileConfig, TpuSpec, feasible_tiles
+from repro.core.tile_config import LaunchConfig, TileConfig, TpuSpec, feasible_tiles
 from repro.core.tile_selector import TileSelector
+from repro.core.tuning_cache import TuningCache, shape_key
 from repro.core.work_plan import WorkPlan, build_work_plan
 
 __all__ = [
     "PatAttentionBackend", "PatConfig", "PlanCache", "PackPlan", "WorkItem",
     "schedule", "PrefixNode", "build_forest", "TileConfig", "TpuSpec",
     "feasible_tiles", "TileSelector", "WorkPlan", "build_work_plan",
+    "LaunchConfig", "TuningCache", "shape_key",
 ]

@@ -18,8 +18,9 @@ import jax
 import numpy as np
 
 from repro.core.lazy_update import PlanCache
-from repro.core.tile_config import TpuSpec
+from repro.core.tile_config import LaunchConfig, TpuSpec
 from repro.core.tile_selector import TileSelector
+from repro.core.tuning_cache import TuningCache
 from repro.core.work_plan import WorkPlan
 from repro.kernels import ops
 
@@ -33,6 +34,7 @@ class PatConfig:
     split_long_kv: bool = True
     # KV-split rebalancing for the fused single-launch step list (§6):
     # splits straggler items so no item's step count dwarfs the mean.
+    # Folded into the selector's LaunchConfig (DESIGN.md §8).
     rebalance_kv: bool = True
     alpha: float = 4.0
     interpret: bool = True  # CPU container: Pallas runs in interpret mode
@@ -41,6 +43,12 @@ class PatConfig:
     # path), "jit"/"eager" force either (see kernels.ops).
     dispatch: str = "auto"
     bucket: bool = True  # pad plan shapes to power-of-two jit buckets
+    # Explicit launch parameters (None = heuristic defaults); rebalance_kv
+    # above is folded in when no explicit LaunchConfig is given.
+    launch: Optional[LaunchConfig] = None
+    # Path to a persisted TuningCache (benchmarks/hillclimb.py output);
+    # missing/corrupted files fall back to the heuristic selector.
+    tuning_cache: Optional[str] = None
 
 
 class PatAttentionBackend:
@@ -70,6 +78,9 @@ class PatAttentionBackend:
         # share_kv (MLA): V is a slice of the K tile, so the kernel
         # allocates no V buffers — the tile solver must see the same
         # working set or it forfeits VMEM that larger KV tiles could use.
+        launch = self.config.launch or LaunchConfig(
+            rebalance_kv=self.config.rebalance_kv
+        )
         selector = TileSelector(
             head_dim=head_dim,
             page_size=self.config.page_size,
@@ -78,8 +89,15 @@ class PatAttentionBackend:
             spec=spec,
             v_head_dim=self.v_head_dim,
             share_kv=share_kv,
+            launch=launch,
         )
         self.selector = selector
+        tuning = (
+            TuningCache(self.config.tuning_cache)
+            if self.config.tuning_cache is not None
+            else None
+        )
+        self.tuning = tuning
         self.cache = PlanCache(
             selector,
             num_q_heads,
@@ -89,7 +107,7 @@ class PatAttentionBackend:
             split_long_kv=self.config.split_long_kv,
             to_device=self.config.dispatch != "eager",
             bucket=self.config.bucket,
-            rebalance=self.config.rebalance_kv,
+            tuning=tuning,
         )
 
     def plan(self, block_tables: np.ndarray, kv_lens: np.ndarray) -> WorkPlan:

@@ -26,12 +26,12 @@ serves the single-process engine and the overhead benchmark.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core import pack_scheduler, work_plan
+from repro.core import pack_scheduler, tuning_cache, work_plan
 from repro.core.tile_selector import TileSelector
 
 
@@ -74,7 +74,7 @@ class PlanCache:
         split_long_kv: bool = True,
         to_device: bool = True,
         bucket: bool = True,
-        rebalance: bool = True,
+        tuning: Optional[tuning_cache.TuningCache] = None,
     ):
         self.selector = selector
         self.num_q_heads = num_q_heads
@@ -84,11 +84,35 @@ class PlanCache:
         self.split_long_kv = split_long_kv
         self.to_device = to_device
         self.bucket = bucket
-        self.rebalance = rebalance
+        # Persistent tuned launch parameters (DESIGN.md §8), consulted per
+        # fingerprint miss; None or a key miss -> the selector's heuristic
+        # LaunchConfig. Rebound selectors are cached per shape key so the
+        # feasible-tile solve runs once per bucket, not per schedule.
+        self.tuning = tuning
+        self._tuned_selectors: Dict[str, TileSelector] = {}
         self.stats = CacheStats()
         self._key: Optional[int] = None
         self._plan: Optional[work_plan.WorkPlan] = None
         self._kv_lens: Optional[np.ndarray] = None
+
+    def _selector_for(
+        self, batch_size: int, max_kv_len: int, page_size: int
+    ) -> TileSelector:
+        """The selector for this schedule: heuristic by default, rebound to
+        a tuned LaunchConfig when the tuning cache has this shape bucket."""
+        if self.tuning is None:
+            return self.selector
+        key = tuning_cache.shape_key(
+            self.strategy, page_size, self.num_q_heads, self.num_kv_heads,
+            self.selector.head_dim, batch_size, max_kv_len,
+        )
+        cached = self._tuned_selectors.get(key)
+        if cached is not None:
+            return cached
+        launch = self.tuning.lookup(key)
+        sel = self.selector if launch is None else self.selector.with_launch(launch)
+        self._tuned_selectors[key] = sel
+        return sel
 
     def _track_uploads(self, before: dict) -> None:
         after = work_plan.device_stats()
@@ -122,24 +146,29 @@ class PlanCache:
         self.stats.misses += 1
         t0 = time.perf_counter()
         rows_per_query = self.num_q_heads // self.num_kv_heads
+        max_kv = int(kv_lens.max()) if kv_lens.size else 1
+        selector = self._selector_for(
+            int(block_tables.shape[0]), max_kv, page_size
+        )
+        # All launch parameters (Q-tile bound, KV-tile rule for the
+        # rebalancing pass's step-count estimate, rebalance threshold)
+        # reach the scheduler through the selector's LaunchConfig; the
+        # plan-wide joint-feasibility n-cap applied later by
+        # build_work_plan can still add steps to capped items in exotic
+        # configs.
         pack = pack_scheduler.schedule(
             block_tables,
             kv_lens,
             page_size,
             strategy=self.strategy,
             rows_per_query=rows_per_query,
-            max_query_rows=self.selector.max_query_rows,
+            max_query_rows=selector.max_query_rows,
             alpha=self.alpha,
             split_long_kv=self.split_long_kv,
-            rebalance=self.rebalance,
-            # the selector's KV-tile rule drives the rebalancing pass's
-            # step-count estimate (fused-launch load balance); the plan-
-            # wide joint-feasibility n-cap applied later by build_work_plan
-            # can still add steps to capped items in exotic configs
-            select_n=self.selector.rules.select_n,
+            selector=selector,
         )
         plan = work_plan.build_work_plan(
-            pack, self.selector, self.num_q_heads, self.num_kv_heads,
+            pack, selector, self.num_q_heads, self.num_kv_heads,
             kv_lens=kv_lens, block_tables=block_tables,
         )
         self.stats.schedule_time_s += time.perf_counter() - t0

@@ -27,13 +27,13 @@ Everything here is host-side numpy/python (async-friendly, no jax).
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.prefix_tree import PrefixNode, build_forest
+from repro.core.tile_config import LaunchConfig
 
 # Per-query intermediate-result overhead in "token equivalents" (paper Alg. 1
 # uses 4; the §5.1 text derivation uses 8 — both are exposed, Alg. 1 wins by
@@ -306,24 +306,22 @@ def _split_item_pages(it: WorkItem, per: int, page: int) -> List[WorkItem]:
     return out
 
 
-def item_step_count(
-    it: WorkItem, page: int, select_n: Optional[Callable[[int], int]] = None
-) -> int:
+def item_step_count(it: WorkItem, page: int, selector=None) -> int:
     """KV steps this item contributes to the fused step list: its page count
     divided by the pages-per-block of the KV tile the selector would pick
-    (page granularity when no selector rule is given). An estimate: the
+    (page granularity when no selector is given). An estimate: the
     plan-wide joint-feasibility n-cap in build_work_plan can still shrink
     a capped item's tile — and so add steps — in exotic hardware configs."""
     npages = max(1, len(it.pages))
-    if select_n is None:
+    if selector is None:
         return npages
-    n = max(page, select_n(max(1, it.num_tokens)))
+    n = max(page, selector.select_n(max(1, it.num_tokens)))
     return -(-npages // max(1, n // page))
 
 
 def rebalance_kv_split(
     plan: PackPlan,
-    select_n: Optional[Callable[[int], int]] = None,
+    selector=None,
     ratio: float = REBALANCE_RATIO_DEFAULT,
     max_rounds: int = 6,
 ) -> PackPlan:
@@ -342,7 +340,7 @@ def rebalance_kv_split(
     items = list(plan.items)
     for _ in range(max_rounds):
         steps = np.array(
-            [item_step_count(it, page, select_n) for it in items], np.float64
+            [item_step_count(it, page, selector) for it in items], np.float64
         )
         cap = max(1.0, ratio * float(steps.mean()))
         over = steps > cap
@@ -405,18 +403,29 @@ def schedule(
     *,
     strategy: str = "pat",
     rows_per_query: int = 1,
-    max_query_rows: int = 128,
+    max_query_rows: Optional[int] = 128,
     alpha: float = MERGE_ALPHA_DEFAULT,
     split_long_kv: bool = True,
-    rebalance: bool = True,
-    select_n: Optional[Callable[[int], int]] = None,
+    selector=None,
+    launch: Optional["LaunchConfig"] = None,
 ) -> PackPlan:
     """Packs one decode batch. ``rows_per_query`` is the GQA group size (a
     query contributes that many MMA rows per KV head); ``max_query_rows``
-    bounds the Q-tile. ``rebalance`` runs the KV-split load-balancing pass
-    for the fused single-launch step list; ``select_n`` (the tile
-    selector's KV-tile rule, when the caller has one) makes its step-count
-    estimate exact instead of page-granular."""
+    bounds the Q-tile (None derives it from ``selector.max_query_rows``).
+
+    All launch parameters arrive through the `LaunchConfig` layer
+    (DESIGN.md §8): ``selector`` (a TileSelector, which carries its own
+    LaunchConfig) makes the KV-split step-count estimate exact and supplies
+    the Q-tile bound; ``launch`` overrides the selector's config (or stands
+    alone when no selector is given) for the load-balancing pass."""
+    lc = launch if launch is not None else (
+        selector.launch if selector is not None else LaunchConfig()
+    )
+    if max_query_rows is None:
+        max_query_rows = (
+            selector.max_query_rows if selector is not None
+            else (lc.m_max or 128)
+        )
     batch = int(block_tables.shape[0])
     forest = build_forest(block_tables, kv_lens, page_size)
     if strategy == "pat":
@@ -438,8 +447,8 @@ def schedule(
     plan = chunk_queries(plan, max_q)
     if split_long_kv and strategy != "query_centric":
         plan = long_kv_split(plan)
-    if rebalance and strategy != "query_centric":
-        plan = rebalance_kv_split(plan, select_n=select_n)
+    if lc.rebalance_kv and strategy != "query_centric":
+        plan = rebalance_kv_split(plan, selector=selector, ratio=lc.rebalance_ratio)
     return plan
 
 

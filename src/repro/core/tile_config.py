@@ -24,8 +24,8 @@ the Fig. 7b-style table for the target chip, and the tile selector
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Tuple
+from dataclasses import dataclass, fields
+from typing import List, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -57,6 +57,59 @@ class TileConfig:
 
     def __repr__(self):
         return f"({self.m},{self.n})"
+
+
+@dataclass(frozen=True)
+class LaunchConfig:
+    """First-class launch parameters for the whole decode-attention stack.
+
+    Every knob that used to be threaded as a loose kwarg (``select_n=``,
+    ``rebalance=``) or hard-coded in the selector heuristics lives here,
+    so one object can be tuned offline (benchmarks/hillclimb.py), persisted
+    (``TuningCache``), and handed to `TileSelector` / `pack_scheduler` /
+    `build_work_plan` end-to-end.
+
+      * ``m_max``        — cap on the Q-tile (bounds query chunking and the
+                           fused plan's widest m class); None = hardware max.
+      * ``n_policy``     — "heuristic" uses the selector's piecewise KV rule;
+                           "fixed" forces ``n_fixed`` (capped to feasibility).
+      * ``n_fixed``      — the KV tile when ``n_policy == "fixed"``.
+      * ``num_m_buckets``— m classes carried by the fused unified step list
+                           (2-3 buckets kill the plan-wide m_max padding).
+      * ``ppb_cap``      — cap on pages-per-block (bounds per-step DMA).
+      * ``rebalance_kv`` / ``rebalance_ratio`` — the KV-split load-balancing
+                           pass and its straggler threshold (paper §5.3).
+      * ``prefill_chunk``— serving-layer prefill chunk size (tokens); None
+                           leaves the scheduler default in place.
+      * ``source``       — provenance: "heuristic" default or "tuned" when
+                           loaded from a TuningCache entry.
+    """
+
+    m_max: Optional[int] = None
+    n_policy: str = "heuristic"
+    n_fixed: Optional[int] = None
+    num_m_buckets: int = 3
+    ppb_cap: Optional[int] = None
+    rebalance_kv: bool = True
+    rebalance_ratio: float = 2.0
+    prefill_chunk: Optional[int] = None
+    source: str = "heuristic"
+
+    def __post_init__(self):
+        if self.n_policy not in ("heuristic", "fixed"):
+            raise ValueError(f"unknown n_policy: {self.n_policy!r}")
+        if self.n_policy == "fixed" and self.n_fixed is None:
+            raise ValueError("n_policy='fixed' requires n_fixed")
+        if self.num_m_buckets < 1:
+            raise ValueError("num_m_buckets must be >= 1")
+
+    def to_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LaunchConfig":
+        known = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
 
 
 def vmem_working_set(

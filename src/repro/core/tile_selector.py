@@ -20,7 +20,7 @@ import bisect
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
-from repro.core.tile_config import TileConfig, TpuSpec, feasible_tiles
+from repro.core.tile_config import LaunchConfig, TileConfig, TpuSpec, feasible_tiles
 
 
 @dataclass(frozen=True)
@@ -71,7 +71,12 @@ def derive_rules(
 
 
 class TileSelector:
-    """Runtime selector bound to one hardware spec + dtype + head_dim."""
+    """Runtime selector bound to one hardware spec + dtype + head_dim.
+
+    A `LaunchConfig` (DESIGN.md §8) narrows the feasible tile set (``m_max``
+    cap, ``ppb_cap`` on n) and can override the KV-tile rule with a fixed n
+    — the knobs the offline tuner (benchmarks/hillclimb.py) searches.
+    """
 
     def __init__(
         self,
@@ -82,10 +87,17 @@ class TileSelector:
         spec: TpuSpec | None = None,
         v_head_dim: int | None = None,
         share_kv: bool = False,
+        launch: LaunchConfig | None = None,
     ):
         self.spec = spec or TpuSpec()
         self.page_size = page_size
-        self.tiles = feasible_tiles(
+        self.head_dim = head_dim
+        self.q_bytes = q_bytes
+        self.kv_bytes = kv_bytes
+        self.v_head_dim = v_head_dim
+        self.share_kv = share_kv
+        self.launch = launch or LaunchConfig()
+        tiles = feasible_tiles(
             self.spec,
             head_dim=head_dim,
             page_size=page_size,
@@ -94,6 +106,14 @@ class TileSelector:
             v_head_dim=v_head_dim,
             share_kv=share_kv,
         )
+        if self.launch.m_max is not None:
+            capped = [t for t in tiles if t.m <= self.launch.m_max]
+            tiles = capped or tiles  # never empty the set over a bad cap
+        if self.launch.ppb_cap is not None:
+            n_cap = max(page_size, self.launch.ppb_cap * page_size)
+            capped = [t for t in tiles if t.n <= n_cap]
+            tiles = capped or tiles
+        self.tiles = tiles
         if not self.tiles:
             raise ValueError(
                 f"no feasible tiles for head_dim={head_dim} page={page_size}"
@@ -101,9 +121,38 @@ class TileSelector:
         self.rules = derive_rules(self.tiles, page_size, self.spec)
         self._feasible = {(t.m, t.n) for t in self.tiles}
 
+    def with_launch(self, launch: LaunchConfig | None) -> "TileSelector":
+        """Same hardware binding, different launch parameters (used when the
+        TuningCache supplies a tuned config for the live workload shape)."""
+        if launch is None or launch == self.launch:
+            return self
+        return TileSelector(
+            head_dim=self.head_dim,
+            page_size=self.page_size,
+            q_bytes=self.q_bytes,
+            kv_bytes=self.kv_bytes,
+            spec=self.spec,
+            v_head_dim=self.v_head_dim,
+            share_kv=self.share_kv,
+            launch=launch,
+        )
+
     @property
     def max_query_rows(self) -> int:
         return max(t.m for t in self.tiles)
+
+    def select_m(self, rows: int) -> int:
+        """Round-up Q-tile rule under the launch config's m cap."""
+        return self.rules.select_m(rows)
+
+    def select_n(self, kv_len: int) -> int:
+        """KV-tile rule: the launch config's fixed n when set (capped to the
+        feasible set), otherwise the piecewise heuristic."""
+        if self.launch.n_policy == "fixed":
+            ns = self.rules.n_choices
+            i = bisect.bisect_right(ns, int(self.launch.n_fixed)) - 1
+            return ns[max(0, i)]
+        return self.rules.select_n(kv_len)
 
     def is_feasible(self, m: int, n: int) -> bool:
         return (m, n) in self._feasible
@@ -121,8 +170,8 @@ class TileSelector:
         return 0
 
     def select(self, query_rows: int, kv_len: int) -> TileConfig:
-        m = self.rules.select_m(query_rows)
-        n = self.rules.select_n(kv_len)
+        m = self.select_m(query_rows)
+        n = self.select_n(kv_len)
         # Joint feasibility: a huge m can evict the largest n from VMEM.
         while (m, n) not in self._feasible and n > self.page_size:
             n //= 2

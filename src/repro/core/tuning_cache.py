@@ -1,0 +1,125 @@
+"""Persistent launch-parameter tuning cache (DESIGN.md §8).
+
+Stores tuned `LaunchConfig`s on disk (JSON), keyed by a *shape bucket* of
+the plan fingerprint: the structural quantities tiling actually depends on
+(strategy, page size, head counts, head dim) plus power-of-two buckets of
+the batch size and the longest KV length. Buckets — not exact shapes — so
+one offline sweep (benchmarks/hillclimb.py) covers every decode step of a
+workload family, exactly like the pow2 shape buckets the jit dispatch
+compiles against.
+
+The cache is strictly advisory: a missing file, a corrupted file, an
+unknown schema, or a key miss all fall back to the heuristic
+`TileSelector` rules. `PlanCache` consults it at plan-build time (a
+fingerprint miss), so a tuned entry costs one dict lookup per schedule,
+never per decode step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from repro.core.tile_config import LaunchConfig
+
+SCHEMA = 1
+
+
+def _pow2_bucket(x: int) -> int:
+    x = max(1, int(x))
+    return 1 << (x - 1).bit_length()
+
+
+def shape_key(
+    strategy: str,
+    page_size: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    batch_size: int,
+    max_kv_len: int,
+) -> str:
+    """Shape-bucket key: structural config exact, batch/KV pow2-bucketed."""
+    return (
+        f"{strategy}|p{page_size}|hq{num_q_heads}|hkv{num_kv_heads}"
+        f"|d{head_dim}|b{_pow2_bucket(batch_size)}"
+        f"|kv{_pow2_bucket(max_kv_len)}"
+    )
+
+
+class TuningCache:
+    """JSON-backed map shape_key -> tuned LaunchConfig.
+
+    ``path=None`` gives an in-memory cache (tests, ad-hoc sweeps). Load
+    errors never propagate: the cache starts empty and the caller's
+    heuristic path remains authoritative."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: Dict[str, dict] = {}
+        self.load_error: Optional[str] = None
+        self.stats = {"hits": 0, "misses": 0}
+        if path is not None:
+            self._load()
+
+    def _load(self) -> None:
+        if not os.path.exists(self.path):
+            self.load_error = "missing"
+            return
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
+                raise ValueError(f"unknown schema: {doc.get('schema')!r}")
+            entries = doc.get("entries", {})
+            # validate eagerly: a corrupted entry must not surface later
+            # as a crash mid-serving
+            for key, ent in entries.items():
+                LaunchConfig.from_dict(ent["launch"])
+            self.entries = entries
+        except Exception as e:  # corrupted file -> heuristic fallback
+            self.load_error = f"{type(e).__name__}: {e}"
+            self.entries = {}
+
+    def lookup(self, key: str) -> Optional[LaunchConfig]:
+        """Tuned LaunchConfig for the shape bucket, or None (heuristic)."""
+        ent = self.entries.get(key)
+        if ent is None:
+            self.stats["misses"] += 1
+            return None
+        self.stats["hits"] += 1
+        lc = LaunchConfig.from_dict(ent["launch"])
+        if lc.source != "tuned":
+            lc = LaunchConfig.from_dict({**lc.to_dict(), "source": "tuned"})
+        return lc
+
+    def record(
+        self,
+        key: str,
+        launch: LaunchConfig,
+        score_ms: Optional[float] = None,
+        meta: Optional[dict] = None,
+    ) -> None:
+        ent = {"launch": {**launch.to_dict(), "source": "tuned"}}
+        if score_ms is not None:
+            ent["score_ms"] = float(score_ms)
+        if meta:
+            ent["meta"] = dict(meta)
+        self.entries[key] = ent
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if path is None:
+            raise ValueError("no path bound to this TuningCache")
+        doc = {"schema": SCHEMA, "entries": self.entries}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+        self.path = self.path or path
+        return path
+
+    def __len__(self) -> int:
+        return len(self.entries)

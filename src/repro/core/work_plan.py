@@ -116,6 +116,18 @@ class TileGroupPlan:
     step_ord: np.ndarray = None  # [S] rank among active steps
     act_steps: np.ndarray = None  # [S] indices of active steps (0-padded)
     act_total: np.ndarray = None  # [1] number of active steps
+    # Bucketed m classes (DESIGN.md §8): the unified step list partitions
+    # its items into 2-3 contiguous classes of ascending Q-tile width so
+    # the kernel stops paying padded MMA at the plan-wide m_max for small
+    # groups. Row arrays stay m_max wide (split tables unchanged); only
+    # the COMPUTE narrows per class. None on per-group plans (one class).
+    m_classes: Optional[Tuple[int, ...]] = None  # static class widths
+    class_ends: Optional[Tuple[int, ...]] = None  # item-axis class bounds
+    step_mclass: np.ndarray = None  # [S] class index of each step's item
+    # Map from unified item position to its index in the PLAIN group
+    # concatenation (-1 = per-class pow2 padding item). Lets the lazy
+    # refresh and the balance metric see through the interleaved padding.
+    item_src: np.ndarray = None  # [T]
 
     @property
     def num_split_rows(self) -> int:
@@ -151,7 +163,7 @@ _DEVICE_STATS = {
 # stay in sync). A common within-page refresh uploads only 2 (step_len,
 # item_kv_len); the activity arrays ride along only when growth crosses a
 # page boundary and changes the active-step pattern.
-ARRAYS_PER_PLAN = 16
+ARRAYS_PER_PLAN = 17
 ARRAYS_PER_REFRESH = 5
 
 
@@ -194,6 +206,11 @@ class DeviceGroupArrays:
 
     kv_tile: int  # n
     pages_per_block: int
+    # Static m-class partition (jit-key metadata): class widths and the
+    # item-axis class boundaries in the BUCKETED layout. Single-class for
+    # per-group plans; 2-3 classes for the fused unified step list.
+    m_classes: Tuple[int, ...]
+    class_ends: Tuple[int, ...]
     step_item: jax.Array  # [S_bucket]
     step_pages: jax.Array  # [S_bucket, ppb]
     step_npages: jax.Array  # [S_bucket] live pages (page-granular DMA)
@@ -203,6 +220,7 @@ class DeviceGroupArrays:
     step_ord: jax.Array  # [S_bucket] (refreshed by lazy update)
     act_steps: jax.Array  # [S_bucket] (refreshed by lazy update)
     act_total: jax.Array  # [1] (refreshed by lazy update)
+    step_mclass: jax.Array  # [S_bucket] m class of each step's item
     row_query: jax.Array  # [T_bucket, m]
     row_group: jax.Array  # [T_bucket, m]
     row_sole: jax.Array  # [T_bucket, m]
@@ -224,6 +242,7 @@ jax.tree_util.register_dataclass(
         "step_ord",
         "act_steps",
         "act_total",
+        "step_mclass",
         "row_query",
         "row_group",
         "row_sole",
@@ -232,7 +251,7 @@ jax.tree_util.register_dataclass(
         "split_src",
         "split_dst",
     ],
-    meta_fields=["kv_tile", "pages_per_block"],
+    meta_fields=["kv_tile", "pages_per_block", "m_classes", "class_ends"],
 )
 
 
@@ -286,6 +305,13 @@ class WorkPlan:
     device_groups: Optional[List[DeviceGroupArrays]] = field(
         default=None, repr=False, compare=False
     )
+    # Pending per-group (touched, act_changed) refresh dirt: the lazy
+    # update never refreshes the oracle arrays eagerly (the fused hot path
+    # must not pay host work for a baseline it does not run);
+    # `to_device_groups` applies the dirt on demand.
+    dg_dirty: Optional[List[Tuple[bool, bool]]] = field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def num_items(self) -> int:
@@ -321,6 +347,10 @@ class WorkPlan:
             counts = np.bincount(
                 self.unified.step_item, minlength=self.unified.num_items
             )
+            # per-class pow2 padding items carry zero steps by construction
+            # — they are layout, not load, and must not deflate the mean
+            if self.unified.item_src is not None:
+                counts = counts[self.unified.item_src >= 0]
         elif self.groups:
             counts = np.concatenate(
                 [np.bincount(g.step_item, minlength=g.num_items) for g in self.groups]
@@ -361,9 +391,26 @@ class WorkPlan:
         # Revisiting the final block only re-emits values that are either
         # just-flushed (Tp-1 == T-1) or never referenced by any merge
         # table / fast-path scatter (padded item).
+        #
+        # m classes: per-group plans are single-class; the unified plan
+        # carries its build-time partition with the LAST class absorbing
+        # the bucket-padding tail (padded steps/items compute nothing, so
+        # class membership only has to keep the static slices covering).
+        if g.m_classes is None:
+            m_classes = (g.row_query.shape[1],)
+            class_ends = (Tp,)
+            step_mclass = np.zeros(S, np.int32)
+        else:
+            m_classes = tuple(g.m_classes)
+            class_ends = tuple(g.class_ends[:-1]) + (Tp,)
+            step_mclass = g.step_mclass
+        last_c = len(m_classes) - 1
         return DeviceGroupArrays(
             kv_tile=g.tile.n,
             pages_per_block=g.pages_per_block,
+            m_classes=m_classes,
+            class_ends=class_ends,
+            step_mclass=jnp.asarray(_pad_rows(step_mclass, Sp, fill=last_c)),
             step_item=jnp.asarray(_pad_rows(g.step_item, Sp, fill=Tp - 1)),
             step_pages=jnp.asarray(_pad_rows(g.step_pages, Sp)),
             step_npages=jnp.asarray(_pad_rows(g.step_npages, Sp)),
@@ -427,8 +474,18 @@ class WorkPlan:
     def to_device_groups(self, bucket: bool = True) -> List[DeviceGroupArrays]:
         """On-demand upload of the PER-GROUP arrays — the jitted per-group
         oracle the fused launch is A/B-tested and benchmarked against.
-        Not part of the hot path and not counted by the transfer stats."""
+        Not part of the hot path and not counted by the transfer stats.
+        Refresh dirt left by `refresh_lengths` is applied here, lazily, so
+        the fused path never pays for oracle-array refreshes."""
         if self.device_groups is not None:
+            if self.dg_dirty is not None:
+                self.device_groups = [
+                    _refresh_device_group(dg, g_new, act)[0] if touched else dg
+                    for dg, g_new, (touched, act) in zip(
+                        self.device_groups, self.groups, self.dg_dirty
+                    )
+                ]
+                self.dg_dirty = None
             return self.device_groups
         cap = self.total_split_rows
         cap_bucket = (_next_pow2(cap) if bucket else cap) if cap else 0
@@ -439,6 +496,23 @@ class WorkPlan:
             base += g.num_split_rows
         self.device_groups = dgs
         return dgs
+
+
+def _refresh_device_group(dg: DeviceGroupArrays, g_new: TileGroupPlan, act_changed: bool):
+    """Re-uploads only the lazily-refreshed arrays of one device group."""
+    Sp = dg.step_len.shape[0]
+    Tp = dg.item_kv_len.shape[0]
+    upd = dict(
+        step_len=jnp.asarray(_pad_rows(g_new.step_len, Sp)),
+        item_kv_len=jnp.asarray(_pad_rows(g_new.item_kv_len, Tp)),
+    )
+    if act_changed:
+        upd.update(
+            step_ord=jnp.asarray(_pad_rows(g_new.step_ord, Sp)),
+            act_steps=jnp.asarray(_pad_rows(g_new.act_steps, Sp)),
+            act_total=jnp.asarray(g_new.act_total),
+        )
+    return replace(dg, **upd), len(upd)
 
 
 def _csr_expand(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -453,8 +527,48 @@ def _csr_expand(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     return rows, within
 
 
+def _choose_m_classes(
+    groups: List[TileGroupPlan], num_buckets: int
+) -> List[int]:
+    """Partitions the (m-sorted) groups into <= ``num_buckets`` contiguous
+    m classes, minimising the step-weighted padded MMA rows
+    ``sum_g(num_steps_g * class_m)`` — the compute the fused kernel pays
+    when every step in a class runs at the class width. Brute force over
+    boundary placements: the group count is tiny (one per (m, n) bucket).
+
+    Returns the class index of each group."""
+    ms = [g.row_query.shape[1] for g in groups]
+    steps = [max(1, g.num_steps) for g in groups]
+    # boundaries may only sit where m strictly increases (splitting equal-m
+    # groups across classes buys nothing and churns the jit key)
+    cut_pts = [i for i in range(1, len(groups)) if ms[i] > ms[i - 1]]
+    from itertools import combinations
+
+    best_cuts: Tuple[int, ...] = ()
+    best_cost = None
+    max_cuts = min(num_buckets - 1, len(cut_pts))
+    for k in range(max_cuts + 1):
+        for cuts in combinations(cut_pts, k):
+            bounds = list(cuts) + [len(groups)]
+            cost = 0
+            lo = 0
+            for hi in bounds:
+                class_m = ms[hi - 1]  # groups sorted by m ascending
+                cost += class_m * sum(steps[lo:hi])
+                lo = hi
+            if best_cost is None or cost < best_cost:
+                best_cost, best_cuts = cost, cuts
+    cls = []
+    c = 0
+    for i in range(len(groups)):
+        if c < len(best_cuts) and i >= best_cuts[c]:
+            c += 1
+        cls.append(c)
+    return cls
+
+
 def _build_unified(
-    groups: List[TileGroupPlan], Hkv: int, page: int
+    groups: List[TileGroupPlan], Hkv: int, page: int, num_m_buckets: int = 3
 ) -> TileGroupPlan:
     """Fuses the per-group plans into ONE step list (DESIGN.md §6).
 
@@ -464,26 +578,74 @@ def _build_unified(
     with variable-n tiling instead of one launch per (m, n). Split-row ids
     are remapped into the unified (t, h, col) layout; because groups are
     concatenated in the same order the compact buffer slots were assigned,
-    the split tables themselves need no change."""
+    the split tables themselves need no change.
+
+    m classes (DESIGN.md §8): the item axis is partitioned into up to
+    ``num_m_buckets`` contiguous classes of ascending Q-tile width, and
+    each class's item count is padded to a power of two (padding items
+    carry row_query = -1 and ZERO steps) so the class boundaries — jit-key
+    metadata — stay bucket-stable. Step arrays remain the PLAIN group
+    concatenation (padding items contribute no steps); only item-indexed
+    arrays see the interleaved padding, and ``item_src`` maps every padded
+    position back to its plain-concat index for the lazy refresh."""
     m_max = max(g.row_query.shape[1] for g in groups)
     ppb_max = max(g.pages_per_block for g in groups)
     maxp = max(g.item_pages.shape[1] for g in groups)
-    t_off = np.cumsum([0] + [g.num_items for g in groups])[:-1]
     s_off = np.cumsum([0] + [g.num_steps for g in groups])[:-1]
+
+    # --- m-class partition + per-class pow2-padded item layout -------------
+    g_class = _choose_m_classes(groups, max(1, num_m_buckets))
+    n_cls = g_class[-1] + 1 if g_class else 1
+    cls_groups = [[i for i, c in enumerate(g_class) if c == ci]
+                  for ci in range(n_cls)]
+    m_classes = tuple(
+        max(groups[i].row_query.shape[1] for i in gids) for gids in cls_groups
+    )
+    cls_size = [sum(groups[i].num_items for i in gids) for gids in cls_groups]
+    cls_padded = [_next_pow2(sz) if sz else 1 for sz in cls_size]
+    class_ends = tuple(np.cumsum(cls_padded).tolist())
+    T_u = int(class_ends[-1])
+    # item position of every group in the padded layout + plain-concat map
+    t_plain = np.cumsum([0] + [g.num_items for g in groups])[:-1]
+    item_off = np.zeros(len(groups), np.int64)
+    base = 0
+    for gids, padded in zip(cls_groups, cls_padded):
+        o = base
+        for i in gids:
+            item_off[i] = o
+            o += groups[i].num_items
+        base += padded
+    item_src = np.full(T_u, -1, np.int64)
+    for i, g in enumerate(groups):
+        item_src[item_off[i] : item_off[i] + g.num_items] = t_plain[i] + np.arange(
+            g.num_items
+        )
 
     def cat(field_vals):
         return np.concatenate(list(field_vals), axis=0)
 
+    def scatter_items(field_vals, fill=0, cols=None, dtype=None):
+        """Places per-group item arrays at their padded positions."""
+        vals = list(field_vals)
+        shape = (T_u,) if cols is None else (T_u, cols)
+        out = np.full(shape, fill, dtype or vals[0].dtype)
+        for i, v in enumerate(vals):
+            out[item_off[i] : item_off[i] + v.shape[0]] = v
+        return out
+
     step_item = cat(
-        g.step_item.astype(np.int64) + o for g, o in zip(groups, t_off)
+        g.step_item.astype(np.int64) + o for g, o in zip(groups, item_off)
     ).astype(np.int32)
     step_len = cat(g.step_len for g in groups)
     step_ord, act_steps, act_total = _activity_arrays(step_len)
+    step_mclass = cat(
+        np.full(g.num_steps, c, np.int32) for g, c in zip(groups, g_class)
+    )
 
     # split rows remapped to the unified row layout, in group order (the
     # compact-slot assignment order)
     srcs = []
-    for g, o in zip(groups, t_off):
+    for g, o in zip(groups, item_off):
         m_g = g.row_query.shape[1]
         src = g.split_src.astype(np.int64)
         t, r = src // (Hkv * m_g), src % (Hkv * m_g)
@@ -493,7 +655,7 @@ def _build_unified(
     return TileGroupPlan(
         tile=TileConfig(m_max, ppb_max * page),
         pages_per_block=ppb_max,
-        num_items=int(sum(g.num_items for g in groups)),
+        num_items=T_u,
         num_steps=int(sum(g.num_steps for g in groups)),
         step_item=step_item,
         step_pages=cat(_pad_cols(g.step_pages, ppb_max) for g in groups),
@@ -501,21 +663,49 @@ def _build_unified(
         step_len=step_len,
         step_start=cat(g.step_start for g in groups),
         step_end=cat(g.step_end for g in groups),
-        row_query=cat(_pad_cols(g.row_query, m_max, fill=-1) for g in groups),
-        row_group=cat(_pad_cols(g.row_group, m_max) for g in groups),
-        item_kv_len=cat(g.item_kv_len for g in groups),
-        item_pages=cat(_pad_cols(g.item_pages, maxp) for g in groups),
-        item_num_pages=cat(g.item_num_pages for g in groups),
-        item_tail_query=cat(g.item_tail_query for g in groups),
-        item_tok_offset=cat(g.item_tok_offset for g in groups),
-        item_step_begin=cat(
-            g.item_step_begin + o for g, o in zip(groups, s_off)
-        ).astype(np.int32),
-        row_sole=cat(_pad_cols(g.row_sole, m_max) for g in groups),
+        row_query=scatter_items(
+            (_pad_cols(g.row_query, m_max, fill=-1) for g in groups),
+            fill=-1, cols=m_max, dtype=np.int32,
+        ),
+        row_group=scatter_items(
+            (_pad_cols(g.row_group, m_max) for g in groups),
+            cols=m_max, dtype=np.int32,
+        ),
+        item_kv_len=scatter_items(
+            (g.item_kv_len for g in groups), dtype=np.int32
+        ),
+        item_pages=scatter_items(
+            (_pad_cols(g.item_pages, maxp) for g in groups),
+            cols=maxp, dtype=np.int32,
+        ),
+        item_num_pages=scatter_items(
+            (g.item_num_pages for g in groups), dtype=np.int32
+        ),
+        item_tail_query=scatter_items(
+            (g.item_tail_query for g in groups), fill=-1, dtype=np.int32
+        ),
+        item_tok_offset=scatter_items(
+            (g.item_tok_offset for g in groups), dtype=np.int32
+        ),
+        item_step_begin=scatter_items(
+            (
+                (g.item_step_begin + o).astype(np.int32)
+                for g, o in zip(groups, s_off)
+            ),
+            dtype=np.int32,
+        ),
+        row_sole=scatter_items(
+            (_pad_cols(g.row_sole, m_max) for g in groups),
+            cols=m_max, dtype=np.int32,
+        ),
         split_src=cat(srcs) if srcs else np.zeros(0, np.int32),
         step_ord=step_ord,
         act_steps=act_steps,
         act_total=act_total,
+        m_classes=m_classes,
+        class_ends=class_ends,
+        step_mclass=step_mclass,
+        item_src=item_src,
     )
 
 
@@ -784,7 +974,11 @@ def build_work_plan(
         page_size=page,
         strategy=plan.strategy,
         total_partial_rows=row_base,
-        unified=_build_unified(groups, Hkv, page) if fusable and groups else None,
+        unified=_build_unified(
+            groups, Hkv, page,
+            num_m_buckets=getattr(selector, "launch", None).num_m_buckets
+            if getattr(selector, "launch", None) is not None else 3,
+        ) if fusable and groups else None,
         split_queries=split_ids,
         split_part_rows=split_part_rows,
         split_qh=split_qh,
@@ -857,13 +1051,22 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
 
     any_touched = any(t for t, _ in touched)
     act_any = any(a for _, a in touched)
-    # Rebuild the unified step list's refreshed arrays by concatenation —
-    # its structure (items, steps, rows, split tables) is untouched by a
-    # lazy refresh, only lengths and (rarely) the activity pattern move.
+    # Rebuild the unified step list's refreshed arrays — its structure
+    # (items, steps, rows, split tables, m classes) is untouched by a lazy
+    # refresh, only lengths and (rarely) the activity pattern move. Step
+    # arrays are the plain group concatenation (class-padding items carry
+    # no steps); item_kv_len sees the padded layout through `item_src`.
     unified = wp.unified
     if unified is not None and any_touched:
         u_step_len = np.concatenate([g.step_len for g in new_groups])
-        u_item_kv = np.concatenate([g.item_kv_len for g in new_groups])
+        cat_kv = np.concatenate([g.item_kv_len for g in new_groups])
+        if unified.item_src is not None:
+            src = unified.item_src
+            u_item_kv = np.where(
+                src >= 0, cat_kv[np.maximum(src, 0)], 0
+            ).astype(cat_kv.dtype)
+        else:
+            u_item_kv = cat_kv
         upd_u = dict(step_len=u_step_len, item_kv_len=u_item_kv)
         if act_any:
             u_ord, u_act, u_tot = _activity_arrays(u_step_len)
@@ -887,21 +1090,6 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
         meta=wp.meta,
     )
 
-    def _refresh_device_group(dg, g_new, act_changed):
-        Sp = dg.step_len.shape[0]
-        Tp = dg.item_kv_len.shape[0]
-        upd = dict(
-            step_len=jnp.asarray(_pad_rows(g_new.step_len, Sp)),
-            item_kv_len=jnp.asarray(_pad_rows(g_new.item_kv_len, Tp)),
-        )
-        if act_changed:
-            upd.update(
-                step_ord=jnp.asarray(_pad_rows(g_new.step_ord, Sp)),
-                act_steps=jnp.asarray(_pad_rows(g_new.act_steps, Sp)),
-                act_total=jnp.asarray(g_new.act_total),
-            )
-        return replace(dg, **upd), len(upd)
-
     if wp.device is not None:
         d_unified = wp.device.unified
         if any_touched and unified is not None:
@@ -917,17 +1105,16 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
             split_cap=wp.device.split_cap,
             bucketed=wp.device.bucketed,
         )
-    # per-group oracle arrays (benchmark/test path): refresh without stats
+    # Per-group oracle arrays (benchmark/test path): carried over as-is
+    # with the refresh dirt RECORDED, not applied — the fused hot path
+    # must not pay host work for the baseline. `to_device_groups` applies
+    # the accumulated dirt on demand.
     if wp.device_groups is not None:
-        dgs = []
-        for g_new, dg, (was_touched, act_changed) in zip(
-            new_groups, wp.device_groups, touched
-        ):
-            if not was_touched:
-                dgs.append(dg)
-            else:
-                dgs.append(_refresh_device_group(dg, g_new, act_changed)[0])
-        new_wp.device_groups = dgs
+        new_wp.device_groups = wp.device_groups
+        prev = wp.dg_dirty or [(False, False)] * len(touched)
+        new_wp.dg_dirty = [
+            (pt or t, pa or a) for (pt, pa), (t, a) in zip(prev, touched)
+        ]
     return new_wp
 
 

@@ -264,9 +264,20 @@ def _host_group_arrays(
     if n_split == 0:
         split_dst = np.full(1, max(split_cap, 1), np.int32)
     split_src = g.split_src if n_split else np.zeros(1, np.int32)
+    if g.m_classes is None:
+        m_classes = (g.row_query.shape[1],)
+        class_ends = (g.num_items,)
+        step_mclass = np.zeros(g.num_steps, np.int32)
+    else:
+        m_classes = tuple(g.m_classes)
+        class_ends = tuple(g.class_ends)
+        step_mclass = g.step_mclass
     return DeviceGroupArrays(
         kv_tile=g.tile.n,
         pages_per_block=g.pages_per_block,
+        m_classes=m_classes,
+        class_ends=class_ends,
+        step_mclass=jnp.asarray(step_mclass),
         step_item=jnp.asarray(g.step_item),
         step_pages=jnp.asarray(g.step_pages),
         step_npages=jnp.asarray(g.step_npages),
@@ -328,6 +339,9 @@ def _forward_merge(
         qp = gather_q_rows(qr, rq, rg, G)
         _DISPATCH_STATS["forward_launches"] += 1
         if impl == "pallas":
+            # ONE pallas_call regardless of the class count: the kernel
+            # branches per step on the scalar-prefetched step_mclass and
+            # computes at the (static) class width (DESIGN.md §8).
             o, st = pat_decode.pat_decode_forward(
                 qp,
                 k_pages,
@@ -342,16 +356,49 @@ def _forward_merge(
                 ga.act_steps,
                 ga.act_total,
                 ga.row_sole,
+                step_mclass=ga.step_mclass,
+                m_classes=ga.m_classes,
                 kv_tile=ga.kv_tile,
                 scale=scale,
                 v_head_dim=dv,
                 interpret=interpret,
             )
         elif impl == "xla":
-            o, st = xla_group_forward(
-                qp, k_pages, v_pages, ga.item_pages, ga.item_kv_len,
-                scale=scale, v_head_dim=dv, row_sole=ga.row_sole,
-            )
+            if len(ga.m_classes) == 1:
+                o, st = xla_group_forward(
+                    qp, k_pages, v_pages, ga.item_pages, ga.item_kv_len,
+                    scale=scale, v_head_dim=dv, row_sole=ga.row_sole,
+                )
+            else:
+                # Per-m-class compute: each class's items run at the class
+                # width mc instead of the plan-wide m_max — the padded-MMA
+                # saving the m buckets exist for. Class bounds are static
+                # (jit-key metadata), so these are static slices; outputs
+                # pad back to m_max rows (never read: rows >= mc are
+                # row_query = -1 padding) and concatenate in class order.
+                m_w = rq.shape[1]
+                o_parts, st_parts = [], []
+                e0 = 0
+                for ci, mc in enumerate(ga.m_classes):
+                    e1 = ga.class_ends[ci]
+                    o_c, st_c = xla_group_forward(
+                        qp[e0:e1, :, :mc, :], k_pages, v_pages,
+                        ga.item_pages[e0:e1], ga.item_kv_len[e0:e1],
+                        scale=scale, v_head_dim=dv,
+                        row_sole=ga.row_sole[e0:e1, :mc],
+                    )
+                    if mc < m_w:
+                        o_c = jnp.pad(
+                            o_c, ((0, 0), (0, 0), (0, m_w - mc), (0, 0))
+                        )
+                        st_c = jnp.pad(
+                            st_c, ((0, 0), (0, 0), (0, 0), (0, m_w - mc))
+                        )
+                    o_parts.append(o_c)
+                    st_parts.append(st_c)
+                    e0 = e1
+                o = jnp.concatenate(o_parts, axis=0)
+                st = jnp.concatenate(st_parts, axis=0)
         else:
             raise ValueError(impl)
         T, _, m, _ = qp.shape

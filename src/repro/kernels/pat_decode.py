@@ -58,7 +58,7 @@ the same distinction).
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +79,7 @@ def _kernel(
     step_ord_ref,  # [S] rank among active steps
     act_steps_ref,  # [S] indices of active steps (0-padded tail)
     act_total_ref,  # [1] number of active steps
+    step_mclass_ref,  # [S] m class of the step's item (bucketed m widths)
     # --- inputs ---
     q_ref,  # VMEM block (1, 1, m, dk)
     row_sole_ref,  # VMEM block (1, m) int32: 1 = single-partial query row
@@ -106,6 +107,7 @@ def _kernel(
     total_steps: int,
     num_kv_heads: int,
     share_kv: bool,
+    m_classes: tuple,
 ):
     h = pl.program_id(0)
     s = pl.program_id(1)
@@ -201,12 +203,15 @@ def _kernel(
 
     valid = step_len_ref[s]
 
-    # Inactive steps (0 valid tokens: pre-allocated pages only) skip both
-    # the DMA above and the compute below; the accumulator state simply
-    # carries across them.
-    @pl.when(valid > 0)
-    def _():
-        q = q_ref[0, 0]  # (m, dk)
+    # Flash-attention update at one STATIC class width mc <= m: the fused
+    # step list buckets its items into 2-3 m classes (DESIGN.md §8), and
+    # each step computes only its class's rows instead of the plan-wide
+    # m_max — the padded-MMA saving that makes the single launch win.
+    # Rows >= mc stay at their step_start reset state (l = 0, acc = 0), so
+    # the full-width epilogue emits exact zeros for them; they are
+    # row_query = -1 padding and are never read back.
+    def attend(mc: int):
+        q = q_ref[0, 0][:mc]  # (mc, dk)
         k = k_buf[slot].reshape(n, dk)  # (n, dk)
         scores = (
             jax.lax.dot_general(
@@ -216,13 +221,13 @@ def _kernel(
                 preferred_element_type=jnp.float32,
             )
             * scale
-        )  # (m, n) fp32
+        )  # (mc, n) fp32
 
-        col = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+        col = jax.lax.broadcasted_iota(jnp.int32, (mc, n), 1)
         scores = jnp.where(col < valid, scores, NEG_INF)
 
-        m_prev = m_scr[:, 0:1]  # (m, 1)
-        l_prev = l_scr[:, 0:1]
+        m_prev = m_scr[0:mc, 0:1]  # (mc, 1)
+        l_prev = l_scr[0:mc, 0:1]
         m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
         # A valid step has >= 1 unmasked column, so m_cur is finite; on the
         # item's first valid tile m_prev = -inf and alpha = 0.
@@ -246,10 +251,28 @@ def _kernel(
             v,
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
-        )  # (m, dv)
-        acc_ref[...] = acc_ref[...] * alpha + pv
-        m_scr[...] = jnp.broadcast_to(m_cur, m_scr.shape)
-        l_scr[...] = jnp.broadcast_to(l_cur, l_scr.shape)
+        )  # (mc, dv)
+        acc_ref[0:mc] = acc_ref[0:mc] * alpha + pv
+        m_scr[0:mc] = jnp.broadcast_to(m_cur, (mc, 128))
+        l_scr[0:mc] = jnp.broadcast_to(l_cur, (mc, 128))
+
+    # Inactive steps (0 valid tokens: pre-allocated pages only) skip both
+    # the DMA above and the compute below; the accumulator state simply
+    # carries across them.
+    if len(m_classes) == 1:
+
+        @pl.when(valid > 0)
+        def _():
+            attend(m_classes[0])
+
+    else:
+        # One branch per class, selected by the scalar-prefetched per-step
+        # class index — still ONE pallas_call for the whole step list.
+        for ci in range(len(m_classes)):
+
+            @pl.when(jnp.logical_and(valid > 0, step_mclass_ref[s] == ci))
+            def _(mc=m_classes[ci]):
+                attend(mc)
 
     # --- epilogue on the item's final step ---------------------------------
     # Single-partial (sole) rows are normalised here and become FINAL
@@ -284,13 +307,23 @@ def pat_decode_forward(
     scale: float,
     v_head_dim: Optional[int] = None,
     interpret: bool = True,
+    step_mclass: Optional[jax.Array] = None,  # [S] per-step m class
+    m_classes: Optional[Tuple[int, ...]] = None,  # static class widths
 ):
     """Runs one step list (the fused unified plan, or one tile group on the
     oracle path); returns (partial_o [T,Hkv,m,dv] fp32, stats [T,Hkv,2,m]
     fp32). Rows flagged in ``row_sole`` come back already normalised
     (final values); all other rows are unnormalised partial numerators to
-    be combined by the merge kernel."""
+    be combined by the merge kernel.
+
+    ``m_classes``/``step_mclass`` carry the bucketed m classes of the
+    unified step list (DESIGN.md §8); omitted, the whole list computes at
+    the packed width m (single class)."""
     T, Hkv, m, dk = q_packed.shape
+    if m_classes is None:
+        m_classes = (m,)
+    if step_mclass is None:
+        step_mclass = jnp.zeros(step_item.shape[0], jnp.int32)
     share_kv = v_pages is None
     if share_kv:
         assert v_head_dim is not None, "share_kv needs explicit v_head_dim"
@@ -315,6 +348,7 @@ def pat_decode_forward(
         total_steps=S,
         num_kv_heads=Hkv,
         share_kv=share_kv,
+        m_classes=tuple(m_classes),
     )
 
     # MLA (share_kv) fetches no V: allocate neither the V double buffer nor
@@ -334,7 +368,7 @@ def pat_decode_forward(
         ]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=9,
+        num_scalar_prefetch=10,
         grid=(Hkv, S),
         in_specs=[
             pl.BlockSpec(
@@ -371,7 +405,7 @@ def pat_decode_forward(
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
-        name=f"pat_decode_m{m}_n{n}",
+        name=f"pat_decode_m{'x'.join(str(c) for c in m_classes)}_n{n}",
     )(
         step_item,
         step_pages,
@@ -382,6 +416,7 @@ def pat_decode_forward(
         step_ord,
         act_steps,
         act_total,
+        step_mclass,
         q_packed,
         row_sole,
         k_pages,

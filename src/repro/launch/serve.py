@@ -45,6 +45,10 @@ def main():
     ap.add_argument("--num-pages", type=int, default=4096)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES))
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="persisted LaunchConfig tuning cache "
+                         "(benchmarks/hillclimb.py output); missing or "
+                         "corrupted files fall back to heuristics")
     ap.add_argument("--chunk-tokens", type=int, default=None,
                     help="prefill chunk size (default: monolithic)")
     ap.add_argument("--token-budget", type=int, default=None,
@@ -80,7 +84,8 @@ def main():
         params, cfg, num_pages=args.num_pages,
         pat_config=PatConfig(impl=args.impl,
                              merge_impl=args.impl,
-                             strategy=backend),
+                             strategy=backend,
+                             tuning_cache=args.tuning_cache),
         eos_id=-1, temperature=args.temperature,
         scheduler=SchedulerConfig(
             policy=args.policy,
@@ -115,6 +120,12 @@ def main():
           f"prefill_tokens={m.prefill_tokens}")
     print(f"pack: {st.misses} schedules, {st.hits} lazy hits, "
           f"{st.refreshes} refreshes, sched {1e3*st.schedule_time_s:.1f}ms total")
+    tc = eng.backend.tuning
+    if tc is not None:
+        status = f"load_error={tc.load_error}" if tc.load_error else \
+            f"{len(tc)} entries"
+        print(f"tuning: {args.tuning_cache} ({status}), "
+              f"{tc.stats['hits']} hits / {tc.stats['misses']} misses")
 
 
 if __name__ == "__main__":

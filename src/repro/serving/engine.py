@@ -37,7 +37,7 @@ their prompts whole (chunkable=False).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional
 
 import jax
@@ -135,9 +135,16 @@ class Engine:
             cfg.layer_is_attention(i % cfg.scan_block)
             for i in range(cfg.num_layers)
         )
+        # A tuned LaunchConfig may carry a prefill chunk size; it fills in
+        # only when the caller left chunk_tokens unset (explicit CLI/config
+        # choices always win over the tuning cache).
+        sched_cfg = scheduler or SchedulerConfig()
+        launch = self.backend.selector.launch
+        if sched_cfg.chunk_tokens is None and launch.prefill_chunk is not None:
+            sched_cfg = replace(sched_cfg, chunk_tokens=launch.prefill_chunk)
         self.scheduler = Scheduler(
             self.kv.allocator, self.radix, page_size,
-            config=scheduler, chunkable=self._chunkable,
+            config=sched_cfg, chunkable=self._chunkable,
         )
         self.running: List[Request] = []
         self.metrics = EngineMetrics()

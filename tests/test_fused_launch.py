@@ -16,7 +16,9 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core.pack_scheduler import rebalance_kv_split, schedule
-from repro.core.tile_config import TpuSpec, feasible_tiles, vmem_working_set
+from repro.core.tile_config import (
+    LaunchConfig, TpuSpec, feasible_tiles, vmem_working_set,
+)
 from repro.core.tile_selector import TileSelector
 from repro.core.work_plan import build_work_plan, refresh_lengths
 from repro.kernels import ops
@@ -59,7 +61,7 @@ def _build(bt, kv, Hq, Hkv, dk, v_head_dim=None, share_kv=False):
                        v_head_dim=v_head_dim, share_kv=share_kv)
     plan = schedule(
         bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
-        max_query_rows=sel.max_query_rows, select_n=sel.rules.select_n,
+        max_query_rows=sel.max_query_rows, selector=sel,
     )
     return build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv, block_tables=bt)
 
@@ -226,19 +228,39 @@ def test_one_forward_launch_per_decode_step():
 
 
 def test_unified_layout_invariants():
-    """Unified plan structure: step/item counts are the group sums, the
-    remapped split rows address the same (query, head) values as the
-    per-group layout, and the live-page DMA accounting matches
+    """Unified plan structure: steps are the plain group concatenation;
+    items are laid out per m-class (pow2-padded, `item_src` mapping each
+    padded slot to its plain-concat source, -1 = padding with zero steps);
+    the remapped split rows address the same (query, head) values as the
+    per-group layout; and the live-page DMA accounting matches
     step_npages."""
     rng = np.random.default_rng(11)
     Hq, Hkv, dk = 8, 2, 64
     bt, kv, P = multi_group_batch(rng)
     wp = _build(bt, kv, Hq, Hkv, dk)
     u = wp.unified
-    assert u.num_items == sum(g.num_items for g in wp.groups)
+    n_real = sum(g.num_items for g in wp.groups)
+    assert u.num_items >= n_real
+    assert int((u.item_src >= 0).sum()) == n_real
+    # every real plain-concat index appears exactly once in the padded map
+    real = u.item_src[u.item_src >= 0]
+    assert sorted(real.tolist()) == list(range(n_real))
+    # padding items carry no work: no steps reference them
+    pad_items = set(np.flatnonzero(u.item_src < 0).tolist())
+    assert not pad_items & set(u.step_item.tolist())
     assert u.num_steps == sum(g.num_steps for g in wp.groups)
     m_max = max(g.row_query.shape[1] for g in wp.groups)
     assert u.row_query.shape == (u.num_items, m_max)
+    # m-class layout: classes are sorted ascending, ends increase, every
+    # step's class m covers its item's real row count
+    assert u.m_classes == tuple(sorted(u.m_classes))
+    assert list(u.class_ends) == sorted(u.class_ends)
+    assert u.class_ends[-1] == u.num_items
+    cls_of = np.searchsorted(np.asarray(u.class_ends), u.step_item, "right")
+    assert np.array_equal(cls_of.astype(np.int32), u.step_mclass)
+    rows_used = (u.row_query >= 0).sum(axis=1)
+    for s, t in enumerate(u.step_item):
+        assert rows_used[t] <= u.m_classes[u.step_mclass[s]]
     # the unified split rows, decoded back to (item, head, col), index the
     # SAME queries (in the same compact-slot order) as the group layout
     got_q = []
@@ -272,8 +294,8 @@ def test_rebalance_bounds_straggler_ratio():
     def ratio(bt, kv, rebalance):
         plan = schedule(
             bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
-            max_query_rows=sel.max_query_rows, rebalance=rebalance,
-            select_n=sel.rules.select_n,
+            max_query_rows=sel.max_query_rows, selector=sel,
+            launch=LaunchConfig(rebalance_kv=rebalance),
         )
         wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv)
         return wp.step_balance()["straggler_ratio"]
@@ -284,20 +306,19 @@ def test_rebalance_bounds_straggler_ratio():
     assert ratio(bt, kv, False) > 2.0, "skewed batch must exhibit a straggler"
     assert ratio(bt, kv, True) <= 2.0
     # the pass is a plan-level no-op when already balanced
-    plan = schedule(bt, kv, PAGE, strategy="pat", rebalance=True,
-                    select_n=sel.rules.select_n)
-    assert rebalance_kv_split(plan, select_n=sel.rules.select_n) is plan
+    plan = schedule(bt, kv, PAGE, strategy="pat", selector=sel)
+    assert rebalance_kv_split(plan, selector=sel) is plan
 
 
 def test_rebalance_preserves_coverage():
     """Splitting for balance never changes what each query attends to."""
     sel = TileSelector(head_dim=128, page_size=PAGE)
     bt, kv = skewed_decode_batch(page_size=PAGE)
-    base = schedule(bt, kv, PAGE, strategy="pat", rebalance=False,
-                    max_query_rows=sel.max_query_rows)
-    reb = schedule(bt, kv, PAGE, strategy="pat", rebalance=True,
-                   max_query_rows=sel.max_query_rows,
-                   select_n=sel.rules.select_n)
+    base = schedule(bt, kv, PAGE, strategy="pat",
+                    max_query_rows=sel.max_query_rows,
+                    launch=LaunchConfig(rebalance_kv=False))
+    reb = schedule(bt, kv, PAGE, strategy="pat",
+                   max_query_rows=sel.max_query_rows, selector=sel)
     assert base.coverage() == reb.coverage()
     assert len(reb.items) > len(base.items)  # it actually split something
 

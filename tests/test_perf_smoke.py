@@ -32,6 +32,21 @@ def test_bench_artifact_matches_current_code():
     # the default no-share decode batch is >= 80% below the dense model
     hbm = committed["modeled_hbm"]["no_share_64x1024"]
     assert hbm["inter_reduction_pct"] >= 80.0
+    # acceptance invariant (ISSUE 6): with tuned LaunchConfigs the fused
+    # single launch WINS (speedup >= 1.0) on every committed scenario, and
+    # every scenario records where its config came from
+    fused = committed["fused_launch"]
+    for scen in ("shared", "split_light"):
+        entry = fused[scen]
+        assert entry["launches_fused"] == 1
+        assert entry["speedup"] >= 1.0, (
+            f"fused_launch.{scen}: committed speedup "
+            f"{entry['speedup']:.2f}x < 1.0"
+        )
+        assert entry["config_source"] in ("tuned", "heuristic", "explicit")
+        assert entry["launch"]["source"] == entry["config_source"] or (
+            entry["config_source"] == "explicit"
+        )
 
 
 @pytest.mark.slow

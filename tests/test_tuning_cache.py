@@ -1,0 +1,217 @@
+"""ISSUE 6: LaunchConfig + persisted TuningCache.
+
+Covers (a) LaunchConfig round-trip + validation, (b) TuningCache disk
+round-trip and shape-bucket hit/miss, (c) the hard fallback guarantees —
+missing / corrupted / unknown-schema files never propagate an error and
+leave the heuristic TileSelector authoritative, (d) end-to-end consult:
+a PatAttentionBackend pointed at a tuned cache builds its plans with the
+tuned launch parameters (and an engine picks up a tuned prefill chunk).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.attention import PatAttentionBackend, PatConfig
+from repro.core.tile_config import LaunchConfig
+from repro.core.tile_selector import TileSelector
+from repro.core.tuning_cache import SCHEMA, TuningCache, shape_key
+
+PAGE = 16
+
+
+def _shared_batch(batch=8, shared_pages=2, priv=2):
+    rows, nxt = [], shared_pages
+    prefix = list(range(shared_pages))
+    kv = np.zeros(batch, np.int64)
+    for b in range(batch):
+        rows.append(prefix + list(range(nxt, nxt + priv)))
+        nxt += priv
+        kv[b] = (shared_pages + priv - 1) * PAGE + 1 + b % 5
+    bt = np.asarray(rows, np.int32)
+    return bt, kv
+
+
+# --- LaunchConfig ----------------------------------------------------------
+
+def test_launch_config_roundtrip_and_validation():
+    lc = LaunchConfig(m_max=16, n_policy="fixed", n_fixed=256,
+                      num_m_buckets=2, rebalance_ratio=1.5, source="tuned")
+    assert LaunchConfig.from_dict(lc.to_dict()) == lc
+    # unknown keys (future schema growth) are ignored, not fatal
+    assert LaunchConfig.from_dict({**lc.to_dict(), "novel_knob": 7}) == lc
+    with pytest.raises(ValueError):
+        LaunchConfig(n_policy="fixed")  # fixed policy needs n_fixed
+    with pytest.raises(ValueError):
+        LaunchConfig(num_m_buckets=0)
+    with pytest.raises(ValueError):
+        LaunchConfig(n_policy="nope")
+
+
+def test_selector_honors_launch_caps():
+    base = TileSelector(head_dim=64, page_size=PAGE)
+    capped = base.with_launch(LaunchConfig(m_max=16, ppb_cap=16))
+    assert all(t.m <= 16 for t in capped.tiles)
+    assert all(t.n <= 16 * PAGE for t in capped.tiles)
+    # fixed-n snaps to the nearest feasible tile at or below the request
+    fixed = base.with_launch(LaunchConfig(n_policy="fixed", n_fixed=256))
+    assert fixed.select_n(10_000) <= 256
+    # an infeasibly small cap never empties the tile set
+    tiny = base.with_launch(LaunchConfig(m_max=1))
+    assert tiny.tiles
+
+
+# --- TuningCache persistence ----------------------------------------------
+
+def test_tuning_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "tuning.json")
+    tc = TuningCache(path)
+    assert tc.load_error == "missing" and len(tc) == 0
+    key = shape_key("pat", PAGE, 8, 4, 64, batch_size=48, max_kv_len=900)
+    lc = LaunchConfig(m_max=16, num_m_buckets=2)
+    tc.record(key, lc, score_ms=1.25, meta={"workload": "shared"})
+    tc.save()
+
+    tc2 = TuningCache(path)
+    assert tc2.load_error is None and len(tc2) == 1
+    got = tc2.lookup(key)
+    assert got is not None and got.source == "tuned"
+    assert got.m_max == 16 and got.num_m_buckets == 2
+    assert tc2.entries[key]["score_ms"] == 1.25
+
+
+def test_shape_key_buckets_hit_and_miss(tmp_path):
+    # batch and kv_len are pow2-bucketed: 33..64 and 513..1024 share a key
+    k = shape_key("pat", PAGE, 8, 4, 64, 48, 900)
+    assert k == shape_key("pat", PAGE, 8, 4, 64, 64, 1024)
+    assert k != shape_key("pat", PAGE, 8, 4, 64, 65, 900)  # next batch bucket
+    assert k != shape_key("pat", PAGE, 8, 4, 64, 48, 1025)  # next kv bucket
+    assert k != shape_key("relay", PAGE, 8, 4, 64, 48, 900)  # strategy exact
+
+    path = str(tmp_path / "tuning.json")
+    tc = TuningCache(path)
+    tc.record(k, LaunchConfig(m_max=8))
+    tc.save()
+    tc = TuningCache(path)
+    assert tc.lookup(shape_key("pat", PAGE, 8, 4, 64, 64, 1024)) is not None
+    assert tc.lookup(shape_key("pat", PAGE, 8, 4, 64, 128, 900)) is None
+    assert tc.stats == {"hits": 1, "misses": 1}
+
+
+@pytest.mark.parametrize("payload", [
+    "{ not json",                                      # corrupted
+    json.dumps({"schema": 99, "entries": {}}),         # unknown schema
+    json.dumps({"schema": SCHEMA,                      # corrupted entry
+                "entries": {"k": {"launch": {"n_policy": "bogus"}}}}),
+    json.dumps([1, 2, 3]),                             # wrong shape
+])
+def test_corrupted_cache_falls_back_to_heuristic(tmp_path, payload):
+    path = str(tmp_path / "tuning.json")
+    with open(path, "w") as f:
+        f.write(payload)
+    tc = TuningCache(path)
+    assert tc.load_error is not None
+    assert len(tc) == 0
+    assert tc.lookup("anything") is None
+    # the backend still serves plans off the heuristic selector
+    backend = PatAttentionBackend(
+        8, 4, 64, kv_dtype_bytes=4,
+        config=PatConfig(impl="xla", merge_impl="xla", tuning_cache=path),
+    )
+    bt, kv = _shared_batch()
+    wp = backend.plan(bt, kv)
+    assert wp.groups
+    assert backend.cache._selector_for(len(kv), int(kv.max()), PAGE) \
+        is backend.selector
+
+
+# --- end-to-end consult ----------------------------------------------------
+
+def test_plan_cache_consults_tuned_entry(tmp_path):
+    path = str(tmp_path / "tuning.json")
+    bt, kv = _shared_batch(batch=8)
+    key = shape_key("pat", PAGE, 8, 4, 64, bt.shape[0], int(kv.max()))
+    tc = TuningCache(path)
+    tc.record(key, LaunchConfig(m_max=8, num_m_buckets=1))
+    tc.save()
+
+    backend = PatAttentionBackend(
+        8, 4, 64, kv_dtype_bytes=4,
+        config=PatConfig(impl="xla", merge_impl="xla", tuning_cache=path),
+    )
+    wp = backend.plan(bt, kv)
+    sel = backend.cache._selector_for(bt.shape[0], int(kv.max()), PAGE)
+    assert sel is not backend.selector
+    assert sel.launch.source == "tuned" and sel.launch.m_max == 8
+    assert all(g.tile.m <= 8 for g in wp.groups)
+    if wp.unified is not None:
+        assert len(wp.unified.m_classes) == 1
+    # the rebound selector is cached: same bucket -> same object
+    assert backend.cache._selector_for(bt.shape[0], int(kv.max()), PAGE) is sel
+    # an out-of-bucket shape misses back to the heuristic selector
+    assert backend.cache._selector_for(256, int(kv.max()), PAGE) \
+        is backend.selector
+
+    # explicit PatConfig.launch beats the tuning cache
+    forced = PatAttentionBackend(
+        8, 4, 64, kv_dtype_bytes=4,
+        config=PatConfig(impl="xla", merge_impl="xla", tuning_cache=path,
+                         launch=LaunchConfig(m_max=16)),
+    )
+    wp2 = forced.plan(bt, kv)
+    assert all(g.tile.m <= 16 for g in wp2.groups)
+
+
+def test_tuned_parity_with_heuristic(tmp_path):
+    """A tuned launch changes tiling, never numerics: same output as the
+    heuristic plan on the same batch."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import paged_attention_ref
+
+    rng = np.random.default_rng(23)
+    bt, kv = _shared_batch(batch=6)
+    P = int(bt.max()) + 1
+    path = str(tmp_path / "tuning.json")
+    tc = TuningCache(path)
+    key = shape_key("pat", PAGE, 8, 4, 64, bt.shape[0], int(kv.max()))
+    tc.record(key, LaunchConfig(m_max=8, n_policy="fixed", n_fixed=128,
+                                num_m_buckets=2))
+    tc.save()
+    k_pages = jnp.asarray(rng.normal(size=(4, P + 1, PAGE, 64)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(4, P + 1, PAGE, 64)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(len(kv), 8, 64)), jnp.float32)
+    outs = {}
+    for tag, cache_path in (("heuristic", None), ("tuned", path)):
+        backend = PatAttentionBackend(
+            8, 4, 64, kv_dtype_bytes=4,
+            config=PatConfig(impl="xla", merge_impl="xla",
+                             tuning_cache=cache_path),
+        )
+        outs[tag] = backend(q, k_pages, v_pages, bt, kv)
+    ref = paged_attention_ref(
+        q, k_pages, v_pages, jnp.asarray(np.maximum(bt, 0)), jnp.asarray(kv)
+    )
+    np.testing.assert_allclose(outs["tuned"], outs["heuristic"],
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(outs["tuned"], ref, atol=1e-5, rtol=1e-5)
+
+
+def test_engine_picks_up_tuned_prefill_chunk():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serving.engine import Engine
+    from repro.serving.scheduler import SchedulerConfig
+    import jax
+
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    pat = PatConfig(impl="xla", merge_impl="xla",
+                    launch=LaunchConfig(prefill_chunk=24))
+    eng = Engine(params, cfg, num_pages=64, pat_config=pat)
+    assert eng.scheduler.cfg.chunk_tokens == 24
+    # an explicit scheduler choice always wins over the launch default
+    eng2 = Engine(params, cfg, num_pages=64, pat_config=pat,
+                  scheduler=SchedulerConfig(chunk_tokens=8))
+    assert eng2.scheduler.cfg.chunk_tokens == 8
