@@ -22,6 +22,12 @@ across PRs (ISSUE 2):
                        tuned / heuristic — DESIGN.md §8); the tuned
                        configs come from the committed hillclimb artifact
                        TUNING_decode_attention.json when present.
+  * ``kv_quant``     — ISSUE 7: per KV-pool dtype (bf16 / int8 / fp8-sim),
+                       modeled per-step KV HBM bytes (live pages x
+                       payload+scale-sidecar bytes), measured pool
+                       footprint, interleaved fused wall-clock, and max
+                       parity error vs the fp32 oracle
+                       (benchmarks/kv_quant.section).
   * ``e2e_serving``  — ISSUE 4: trace-replay SLO surface — TTFT/TPOT
                        p50/p95/p99 (deterministic virtual token units +
                        measured wall ms) for chunked vs monolithic prefill
@@ -102,7 +108,13 @@ def collect(
     points the fused-launch A/B at a persisted LaunchConfig sweep; the
     default is the committed hillclimb artifact when present (each section
     records the config provenance that actually applied)."""
-    from benchmarks import e2e_serving, kernel_perf, memory_traffic, overhead
+    from benchmarks import (
+        e2e_serving,
+        kernel_perf,
+        kv_quant as kv_quant_bench,
+        memory_traffic,
+        overhead,
+    )
 
     if tuning_cache is None and os.path.exists(DEFAULT_TUNING_PATH):
         tuning_cache = DEFAULT_TUNING_PATH
@@ -150,6 +162,9 @@ def collect(
         "kernel_latency": kern,
         "fused_launch": fused,
         "e2e_serving": e2e_serving.serving_section(fast=fast, verbose=verbose),
+        "kv_quant": kv_quant_bench.section(
+            fast=fast, verbose=verbose, tuning_cache=tuning_cache
+        ),
     }
 
 

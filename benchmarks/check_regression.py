@@ -20,6 +20,11 @@ LaunchConfigs from TUNING_decode_attention.json the fused single launch
 must win on every scenario; tests/test_perf_smoke.py additionally pins
 speedup >= 1.0 on the committed artifact.
 
+ISSUE 7 adds the quantized-KV gates, all within-artifact: int8 modeled KV
+bytes <= 0.55x bf16, per-dtype parity-error ceilings vs the fp32 oracle,
+and the int8 fused step within 10% of bf16 wall-clock (interleaved
+min-of-repeats in the same run).
+
 Usage:
     python benchmarks/check_regression.py [--current PATH] [--baseline PATH]
     python benchmarks/check_regression.py --fresh   # re-measure, then diff
@@ -43,6 +48,15 @@ WALL_CLOCK_THRESHOLD = 0.10  # >10% per-step wall-clock regression fails
 # re-uploading plans per step) are 100-300x, far above this floor.
 WALL_CLOCK_FLOOR_MS = 2.5  # ignore sub-floor absolute jitter
 MODEL_THRESHOLD = 0.001  # modeled bytes/latency are deterministic
+# --- quantized KV datapath gates (ISSUE 7), within-artifact ---------------
+# int8 pages must roughly halve bf16 KV traffic: payload is exactly 0.5x
+# and the per-page scale sidecar adds <1%, so 0.55 has real headroom while
+# still failing if scale granularity ever grows past ~page level.
+KV_QUANT_BYTES_RATIO = 0.55
+# Parity ceilings vs the fp32 oracle on the standard-normal bench batch
+# (max-abs error; measured ~0.011 int8 / ~0.047 fp8 — see DESIGN.md §9's
+# tolerance methodology). bf16 is a round-off sanity bound.
+KV_QUANT_PARITY_CEILING = {"bf16": 0.02, "int8": 0.05, "fp8": 0.15}
 
 
 def git_baseline(path: str = "benchmarks/BENCH_decode_attention.json") -> Optional[Dict]:
@@ -166,6 +180,39 @@ def compare(baseline: Dict, current: Dict) -> List[str]:
                 b_ch["tpot_ms_p95"], ch["tpot_ms_p95"],
             )
 
+    # --- quantized KV datapath gates (ISSUE 7) -----------------------------
+    # All within-artifact: the dtypes are measured interleaved in the same
+    # run, and the modeled ratio is deterministic. A missing section (old
+    # baselines, partial artifacts) just skips the gates.
+    c_q = current.get("kv_quant", {})
+    for scen in ("shared", "split_light"):
+        dt = c_q.get(scen, {}).get("dtypes", {})
+        if not dt:
+            continue
+        int8, bf16 = dt.get("int8", {}), dt.get("bf16", {})
+        if "bytes_vs_bf16" in int8 and int8["bytes_vs_bf16"] > KV_QUANT_BYTES_RATIO:
+            failures.append(
+                f"kv_quant.{scen}: int8 modeled KV bytes are "
+                f"{int8['bytes_vs_bf16']:.3f}x bf16 "
+                f"(must be <= {KV_QUANT_BYTES_RATIO})"
+            )
+        for tag, ceiling in KV_QUANT_PARITY_CEILING.items():
+            err = dt.get(tag, {}).get("max_abs_err_vs_f32")
+            if err is not None and err > ceiling:
+                failures.append(
+                    f"kv_quant.{scen}.{tag}: parity error vs fp32 oracle "
+                    f"{err:.4f} exceeds the {ceiling} ceiling"
+                )
+        # acceptance bound: the quantized fused step must not cost
+        # wall-clock — int8 within 10% of bf16. ``wall_vs_bf16`` is the
+        # median of step-interleaved paired ratios from the same run, the
+        # noise-robust form of this comparison.
+        if int8.get("wall_vs_bf16", 0.0) > 1 + WALL_CLOCK_THRESHOLD:
+            failures.append(
+                f"kv_quant.{scen}: int8 fused step is "
+                f"{int8['wall_vs_bf16']:.2f}x bf16 wall-clock "
+                f"(must be <= {1 + WALL_CLOCK_THRESHOLD:.2f}x)"
+            )
     for wl, bal in sorted(c_f.get("balance", {}).items()):
         # acceptance bound: rebalanced max-item step count within 2x mean
         if bal.get("ratio_after", 0.0) > 2.0 + 1e-9:

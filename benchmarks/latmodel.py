@@ -56,6 +56,7 @@ def plan_latency(
     num_q_heads: Optional[int] = None,
     split_aware: bool = True,
     mode: Optional[str] = None,  # "fused" | "streams" | "serial"
+    kv_dtype: Optional[str] = None,
 ) -> Dict[str, float]:
     """Models one decode-attention step from a built WorkPlan. Head counts
     can be overridden to model a full-size arch from a reduced-model plan
@@ -74,9 +75,21 @@ def plan_latency(
     rows of genuinely split queries — single-partial rows are normalised
     in the forward epilogue and never round-trip through HBM.
     ``split_aware=False`` models the pre-split-aware datapath that paid
-    the merge for every packed row."""
+    the merge for every packed row.
+
+    ``kv_dtype`` charges a named pool encoding per page — payload width
+    plus, for the quantized encodings, the per-page fp32 scale sidecar
+    the kernel scalar-prefetches — instead of the flat
+    ``kv_bytes_per_el`` (whose default of 2 keeps legacy callers'
+    numbers unchanged)."""
+    from repro.core import kv_quant
+
     dv = v_head_dim if v_head_dim is not None else head_dim
     page = wp.page_size
+    if kv_dtype is not None:
+        page_bytes = kv_quant.page_hbm_bytes(page, head_dim, dv, kv_dtype)
+    else:
+        page_bytes = page * (head_dim + dv) * kv_bytes_per_el
     Hkv = num_kv_heads if num_kv_heads is not None else wp.num_kv_heads
     Hq = num_q_heads if num_q_heads is not None else wp.num_q_heads
     bw = hw.mem_bw * hw.bw_eff
@@ -93,7 +106,7 @@ def plan_latency(
         assert u is not None, "fused latency model needs a unified step list"
         act = u.step_len > 0
         live_pages = int(u.step_npages[act].sum())
-        total_bytes = live_pages * page * (head_dim + dv) * Hkv * kv_bytes_per_el
+        total_bytes = live_pages * Hkv * page_bytes
         if u.m_classes is not None and u.step_mclass is not None:
             # bucketed m classes (DESIGN.md §8): each active step pays MMA
             # padded only to ITS class m, not the plan-wide m_max
@@ -114,7 +127,7 @@ def plan_latency(
             # padded counts here would bias the fused-vs-streams A/B
             act_g = g.step_len > 0
             n_pages = int(g.step_npages[act_g].sum())
-            kv_bytes = n_pages * page * (head_dim + dv) * Hkv * kv_bytes_per_el
+            kv_bytes = n_pages * Hkv * page_bytes
             m = g.tile.m
             flops = 2.0 * int(act_g.sum()) * m * g.tile.n * (head_dim + dv) * Hkv
             t_g = max(kv_bytes / bw, flops / hw.peak_flops) + hw.launch_s
@@ -156,18 +169,28 @@ def fixed_tile_latency(
     kv_bytes_per_el: int = 2,
     hw: HwModel = HwModel(),
     rows_per_query: int = 1,
+    kv_dtype: Optional[str] = None,
 ) -> Dict[str, float]:
     """One-size-fits-all kernel model (FlashAttention / PAT-fixed): items
-    pad KV to n-granularity and queries to the fixed m tile."""
+    pad KV to n-granularity and queries to the fixed m tile. ``kv_dtype``
+    charges a named pool encoding (see ``plan_latency``)."""
+    from repro.core import kv_quant
+
     m_fix, n_fix = tile
     bw = hw.mem_bw * hw.bw_eff
     page = plan.page_size
+    if kv_dtype is not None:
+        token_bytes = kv_quant.page_hbm_bytes(
+            page, head_dim, head_dim, kv_dtype
+        ) / page
+    else:
+        token_bytes = 2 * head_dim * kv_bytes_per_el
     total_bytes = 0.0
     total_flops = 0.0
     rows_total = 0
     for it in plan.items:
         kv_padded = -(-it.num_tokens // n_fix) * n_fix
-        total_bytes += kv_padded * 2 * head_dim * num_kv_heads * kv_bytes_per_el
+        total_bytes += kv_padded * num_kv_heads * token_bytes
         rows = -(-max(1, it.num_queries * rows_per_query) // m_fix) * m_fix
         total_flops += 2.0 * rows * kv_padded * 2 * head_dim * num_kv_heads
         rows_total += it.num_queries * rows_per_query

@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES))
     ap.add_argument("--chunk-tokens", type=int, default=32)
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["float32", "bfloat16", "int8", "fp8"],
+                    help="paged KV pool dtype (int8/fp8 = quantized pages "
+                         "with per-page scales, dequantized in-kernel)")
     args = ap.parse_args()
     backend = args.backend or BACKENDS.get(
         os.environ.get("PAT_ATTENTION_BACKEND", "PAT").upper(), "pat"
@@ -46,7 +50,8 @@ def main():
     )
     eng = Engine(
         params, cfg, num_pages=4096,
-        pat_config=PatConfig(impl="xla", merge_impl="xla", strategy=backend),
+        pat_config=PatConfig(impl="xla", merge_impl="xla", strategy=backend,
+                             kv_dtype=args.kv_dtype),
         eos_id=-1,
         scheduler=SchedulerConfig(policy=args.policy,
                                   chunk_tokens=args.chunk_tokens),

@@ -17,6 +17,7 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.core import kv_quant
 from repro.core.lazy_update import PlanCache
 from repro.core.tile_config import LaunchConfig, TpuSpec
 from repro.core.tile_selector import TileSelector
@@ -49,6 +50,10 @@ class PatConfig:
     # Path to a persisted TuningCache (benchmarks/hillclimb.py output);
     # missing/corrupted files fall back to the heuristic selector.
     tuning_cache: Optional[str] = None
+    # KV pool dtype for engines built from this config (ISSUE 7):
+    # float32 | bfloat16 | int8 | fp8. None = the engine's default pool
+    # dtype (float32 on the CPU container).
+    kv_dtype: Optional[str] = None
 
 
 class PatAttentionBackend:
@@ -69,12 +74,25 @@ class PatAttentionBackend:
         config: Optional[PatConfig] = None,
         spec: Optional[TpuSpec] = None,
         share_kv: bool = False,
+        kv_dtype: Optional[str] = None,
+        q_dtype_bytes: Optional[int] = None,
     ):
         self.config = config or PatConfig()
         self.num_q_heads = num_q_heads
         self.num_kv_heads = num_kv_heads
         self.head_dim = head_dim
         self.v_head_dim = v_head_dim if v_head_dim is not None else head_dim
+        # Pool dtype: the named dtype wins (the engine passes its pool's —
+        # one source of truth); legacy byte-width callers get the
+        # non-quantized dtype of that width. kv_bytes for the tile solver
+        # is ALWAYS derived from the dtype, never passed independently.
+        if kv_dtype is None:
+            kv_dtype = kv_quant.dtype_from_bytes(kv_dtype_bytes)
+        self.kv_dtype = kv_dtype
+        kv_bytes = kv_quant.kv_bytes_per_el(kv_dtype)
+        # Q stays at compute precision even over a quantized pool; default
+        # follows the pool width for backward compatibility.
+        q_bytes = q_dtype_bytes if q_dtype_bytes is not None else kv_dtype_bytes
         # share_kv (MLA): V is a slice of the K tile, so the kernel
         # allocates no V buffers — the tile solver must see the same
         # working set or it forfeits VMEM that larger KV tiles could use.
@@ -84,8 +102,8 @@ class PatAttentionBackend:
         selector = TileSelector(
             head_dim=head_dim,
             page_size=self.config.page_size,
-            q_bytes=kv_dtype_bytes,
-            kv_bytes=kv_dtype_bytes,
+            q_bytes=q_bytes,
+            kv_bytes=kv_bytes,
             spec=spec,
             v_head_dim=self.v_head_dim,
             share_kv=share_kv,
@@ -108,6 +126,7 @@ class PatAttentionBackend:
             to_device=self.config.dispatch != "eager",
             bucket=self.config.bucket,
             tuning=tuning,
+            kv_dtype=kv_dtype,
         )
 
     def plan(self, block_tables: np.ndarray, kv_lens: np.ndarray) -> WorkPlan:
@@ -136,6 +155,8 @@ class PatAttentionBackend:
         v_pages: Optional[jax.Array],  # None => MLA shared-KV
         wp: WorkPlan,
         scale: Optional[float] = None,
+        k_scales: Optional[jax.Array] = None,  # [Hkv, P] fp32 (quantized)
+        v_scales: Optional[jax.Array] = None,
     ) -> jax.Array:
         return ops.pat_paged_attention(
             q,
@@ -148,8 +169,13 @@ class PatAttentionBackend:
             v_head_dim=self.v_head_dim,
             interpret=self.config.interpret,
             dispatch=self.config.dispatch,
+            kv_quant=self.kv_dtype if kv_quant.is_quantized(self.kv_dtype) else None,
+            k_scales=k_scales,
+            v_scales=v_scales,
         )
 
-    def __call__(self, q, k_pages, v_pages, block_tables, kv_lens, scale=None):
+    def __call__(self, q, k_pages, v_pages, block_tables, kv_lens, scale=None,
+                 k_scales=None, v_scales=None):
         wp = self.plan(np.asarray(block_tables), np.asarray(kv_lens))
-        return self.attend(q, k_pages, v_pages, wp, scale=scale)
+        return self.attend(q, k_pages, v_pages, wp, scale=scale,
+                           k_scales=k_scales, v_scales=v_scales)

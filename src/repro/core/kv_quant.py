@@ -1,0 +1,211 @@
+"""Shared symmetric quantisation primitives: KV-cache pools + gradients.
+
+One module owns the int8 math so the gradient-compression path
+(training/compression.py) and the quantized paged-KV datapath (ISSUE 7,
+ROADMAP item 2) cannot drift apart. Two payload encodings share the same
+per-block symmetric-scale scheme:
+
+  * ``int8``  — classic symmetric quantisation: ``scale = amax / 127``,
+                payload ``round(x / scale)`` clipped to [-127, 127].
+  * ``fp8``   — simulated float8 (e4m3): ``scale = amax / 448`` maps the
+                block's dynamic range onto e4m3's, values are rounded to
+                the e4m3 grid, and the payload stores the e4m3 BIT PATTERN
+                in an int8 container (the container the CPU/interpret
+                toolchain can DMA; on hardware with native fp8 the bitcast
+                is free). Same bytes/element as int8, different rounding:
+                fp8 keeps ~2-3 significant digits across the block instead
+                of 1/254-of-amax absolute steps, so small-magnitude rows
+                inside a large-amax page quantise better.
+
+For the KV pool the block is one PAGE per KV head: pools are
+[..., Hkv, P, page, d] and the scale sidecar is [..., Hkv, P] fp32 —
+exactly one scalar rides with each page descriptor, which is what lets the
+decode kernel scalar-prefetch scales alongside the page table
+(kernels/pat_decode.py). For gradients the block is the whole tensor
+(per-tensor scalar scale), the granularity the error-feedback residual
+scheme was validated at.
+
+Dequantisation is linear (``payload -> f32 * scale``), so the attention
+kernel can dequantise rows in VMEM right before QK^T / PV while the
+softmax statistics stay fp32 (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# e4m3 finite max (no-inf variant); int8 symmetric max
+FP8_MAX = 448.0
+INT8_MAX = 127.0
+# guards all-zero blocks: scale stays positive, payload quantises to 0
+EPS = 1e-30
+
+
+@dataclass(frozen=True)
+class KVDtype:
+    """One supported KV-pool element encoding."""
+
+    name: str
+    storage: jnp.dtype  # dtype of the pool array itself
+    bytes_per_el: int
+    quantized: bool  # True => a per-page fp32 scale sidecar exists
+    qmax: float = 0.0  # symmetric range the scale maps amax onto
+
+    @property
+    def scale_bytes_per_page(self) -> int:
+        """Sidecar bytes per (head, page): one fp32 scale, or none."""
+        return 4 if self.quantized else 0
+
+
+KV_DTYPES = {
+    "float32": KVDtype("float32", jnp.float32, 4, False),
+    "bfloat16": KVDtype("bfloat16", jnp.bfloat16, 2, False),
+    "int8": KVDtype("int8", jnp.int8, 1, True, INT8_MAX),
+    "fp8": KVDtype("fp8", jnp.int8, 1, True, FP8_MAX),
+}
+
+# short tags for shape-bucket keys (tuning cache) and bench sections
+DTYPE_TAGS = {"float32": "f32", "bfloat16": "bf16", "int8": "int8", "fp8": "fp8"}
+
+
+def kv_dtype(name: str) -> KVDtype:
+    try:
+        return KV_DTYPES[name]
+    except KeyError:
+        raise ValueError(
+            f"unsupported kv dtype {name!r}; choose from {sorted(KV_DTYPES)}"
+        ) from None
+
+
+def kv_bytes_per_el(name: str) -> int:
+    return kv_dtype(name).bytes_per_el
+
+
+def is_quantized(name: str) -> bool:
+    return kv_dtype(name).quantized
+
+
+def dtype_from_bytes(nbytes: int) -> str:
+    """Legacy shim: callers that still speak bytes-per-element get the
+    non-quantized dtype of that width (int8 pools must be named)."""
+    return {4: "float32", 2: "bfloat16", 1: "int8"}[int(nbytes)]
+
+
+# ---------------------------------------------------------------------------
+# core payload <-> f32 codecs
+# ---------------------------------------------------------------------------
+
+
+def payload_to_f32(payload: jax.Array, name: str) -> jax.Array:
+    """Decodes an int8 payload array to unscaled fp32 values ("digits"
+    only — multiply by the block scale to finish dequantisation). This is
+    the exact op the decode kernel applies to a VMEM tile."""
+    kd = kv_dtype(name)
+    if not kd.quantized:
+        return payload.astype(jnp.float32)
+    if name == "fp8":
+        f8 = jax.lax.bitcast_convert_type(payload, jnp.float8_e4m3fn)
+        return f8.astype(jnp.float32)
+    return payload.astype(jnp.float32)
+
+
+def f32_to_payload(x: jax.Array, name: str) -> jax.Array:
+    """Encodes already-scaled values (|x| <= qmax) into the int8 payload."""
+    if name == "fp8":
+        f8 = x.astype(jnp.float8_e4m3fn)
+        return jax.lax.bitcast_convert_type(f8, jnp.int8)
+    return jnp.clip(jnp.round(x), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# block (page / tensor) quantisation
+# ---------------------------------------------------------------------------
+
+
+def quantize_blocks(
+    x: jax.Array, name: str, block_axes: Tuple[int, ...]
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric quantisation with one scale per block.
+
+    ``block_axes`` are the axes reduced into one scale (for KV pages:
+    the trailing (page, d) axes). Returns (payload int8, scales fp32 with
+    the block axes removed)."""
+    kd = kv_dtype(name)
+    if not kd.quantized:
+        raise ValueError(f"{name} is not a quantized kv dtype")
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=block_axes)
+    scale = jnp.maximum(amax, EPS) / kd.qmax
+    expand = list(x.shape)
+    for ax in sorted(a % x.ndim for a in block_axes):
+        expand[ax] = 1
+    q = f32_to_payload(xf / scale.reshape(expand), name)
+    return q, scale
+
+
+def dequantize_blocks(
+    payload: jax.Array, scales: jax.Array, name: str, block_axes: Tuple[int, ...]
+) -> jax.Array:
+    expand = list(payload.shape)
+    for ax in sorted(a % payload.ndim for a in block_axes):
+        expand[ax] = 1
+    return payload_to_f32(payload, name) * scales.reshape(expand)
+
+
+def quantize_pages(x: jax.Array, name: str) -> Tuple[jax.Array, jax.Array]:
+    """Per-page quantisation of a KV pool slice [..., page, d]:
+    one fp32 scale per leading index (i.e. per (layer,) head, page)."""
+    return quantize_blocks(x, name, (-2, -1))
+
+
+def dequantize_pages(payload: jax.Array, scales: jax.Array, name: str) -> jax.Array:
+    return dequantize_blocks(payload, scales, name, (-2, -1))
+
+
+# ---------------------------------------------------------------------------
+# per-tensor primitives (gradient compression)
+# ---------------------------------------------------------------------------
+
+
+def quantize_tensor(
+    g: jax.Array, name: str = "int8"
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric quantisation: (int8 payload, fp32 scalar scale).
+    The granularity training/compression.py's error-feedback loop was
+    validated at."""
+    kd = kv_dtype(name)
+    amax = jnp.max(jnp.abs(g)).astype(jnp.float32)
+    scale = jnp.maximum(amax, EPS) / kd.qmax
+    return f32_to_payload(g.astype(jnp.float32) / scale, name), scale
+
+
+def dequantize_tensor(
+    q: jax.Array, scale: jax.Array, name: str = "int8"
+) -> jax.Array:
+    return payload_to_f32(q, name) * scale
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (latmodel / memory_traffic)
+# ---------------------------------------------------------------------------
+
+
+def page_hbm_bytes(
+    page_size: int,
+    head_dim: int,
+    v_head_dim: Optional[int],
+    name: str,
+    share_kv: bool = False,
+) -> int:
+    """HBM bytes one (head, page) costs in this encoding: K + V payload
+    plus the per-page scale sidecar entries the kernel must also fetch.
+    ``share_kv`` (MLA) stores no separate V pool — and only one scale."""
+    kd = kv_dtype(name)
+    dv = 0 if share_kv else (v_head_dim if v_head_dim is not None else head_dim)
+    payload = page_size * (head_dim + dv) * kd.bytes_per_el
+    sidecars = kd.scale_bytes_per_page * (1 if share_kv else 2)
+    return payload + sidecars

@@ -75,6 +75,7 @@ class PlanCache:
         to_device: bool = True,
         bucket: bool = True,
         tuning: Optional[tuning_cache.TuningCache] = None,
+        kv_dtype: str = "float32",
     ):
         self.selector = selector
         self.num_q_heads = num_q_heads
@@ -84,6 +85,8 @@ class PlanCache:
         self.split_long_kv = split_long_kv
         self.to_device = to_device
         self.bucket = bucket
+        # part of the tuning shape key: tuned launches never cross dtypes
+        self.kv_dtype = kv_dtype
         # Persistent tuned launch parameters (DESIGN.md §8), consulted per
         # fingerprint miss; None or a key miss -> the selector's heuristic
         # LaunchConfig. Rebound selectors are cached per shape key so the
@@ -105,6 +108,7 @@ class PlanCache:
         key = tuning_cache.shape_key(
             self.strategy, page_size, self.num_q_heads, self.num_kv_heads,
             self.selector.head_dim, batch_size, max_kv_len,
+            kv_dtype=self.kv_dtype,
         )
         cached = self._tuned_selectors.get(key)
         if cached is not None:

@@ -457,14 +457,32 @@ def schedule(
 # ---------------------------------------------------------------------------
 
 
+def _page_bytes(
+    page_size: int, head_dim: int, kv_bytes_per_el: int, kv_dtype: Optional[str]
+) -> int:
+    """Per-(head, page) HBM charge. A named ``kv_dtype`` wins and charges
+    the REAL encoding — payload width plus the per-page scale sidecar a
+    quantized pool's kernel must also fetch; the legacy bytes-per-element
+    default (2) keeps every existing caller's numbers bit-identical."""
+    if kv_dtype is not None:
+        from repro.core import kv_quant
+
+        return kv_quant.page_hbm_bytes(page_size, head_dim, head_dim, kv_dtype)
+    return page_size * head_dim * 2 * kv_bytes_per_el
+
+
 def plan_kv_bytes(
-    plan: PackPlan, head_dim: int, num_kv_heads: int, kv_bytes_per_el: int = 2
+    plan: PackPlan, head_dim: int, num_kv_heads: int, kv_bytes_per_el: int = 2,
+    kv_dtype: Optional[str] = None,
 ) -> int:
     """KV bytes crossing the HBM boundary for one decode step: each item
-    loads its full pages once (DMA moves whole pages)."""
-    page_tokens = plan.page_size
+    loads its full pages once (DMA moves whole pages). ``kv_dtype`` charges
+    a named pool encoding (incl. quantized scale sidecars) instead of the
+    legacy flat bytes-per-element."""
     total_pages = sum(len(it.pages) for it in plan.items)
-    return total_pages * page_tokens * head_dim * num_kv_heads * 2 * kv_bytes_per_el
+    return total_pages * num_kv_heads * _page_bytes(
+        plan.page_size, head_dim, kv_bytes_per_el, kv_dtype
+    )
 
 
 def plan_query_part_counts(plan: PackPlan) -> np.ndarray:
@@ -511,20 +529,24 @@ def theoretical_min_kv_bytes(
     head_dim: int,
     num_kv_heads: int,
     kv_bytes_per_el: int = 2,
+    kv_dtype: Optional[str] = None,
 ) -> int:
     """Every distinct physical page loaded exactly once (paper's optimum)."""
     pages = set()
     for q in range(block_tables.shape[0]):
         n_pages = -(-int(kv_lens[q]) // page_size)
         pages.update(int(p) for p in block_tables[q, :n_pages])
-    return len(pages) * page_size * head_dim * num_kv_heads * 2 * kv_bytes_per_el
+    return len(pages) * num_kv_heads * _page_bytes(
+        page_size, head_dim, kv_bytes_per_el, kv_dtype
+    )
 
 
 def plan_total_bytes(
     plan: PackPlan, head_dim: int, num_q_heads: int, num_kv_heads: int,
     kv_bytes_per_el: int = 2, split_aware: bool = False,
+    kv_dtype: Optional[str] = None,
 ) -> int:
-    kv = plan_kv_bytes(plan, head_dim, num_kv_heads, kv_bytes_per_el)
+    kv = plan_kv_bytes(plan, head_dim, num_kv_heads, kv_bytes_per_el, kv_dtype)
     inter = plan_intermediate_bytes(
         plan, head_dim, num_q_heads, split_aware=split_aware
     )

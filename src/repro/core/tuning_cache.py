@@ -21,6 +21,7 @@ import json
 import os
 from typing import Dict, Optional
 
+from repro.core.kv_quant import DTYPE_TAGS
 from repro.core.tile_config import LaunchConfig
 
 SCHEMA = 1
@@ -39,12 +40,18 @@ def shape_key(
     head_dim: int,
     batch_size: int,
     max_kv_len: int,
+    kv_dtype: str = "float32",
 ) -> str:
-    """Shape-bucket key: structural config exact, batch/KV pow2-bucketed."""
+    """Shape-bucket key: structural config exact, batch/KV pow2-bucketed.
+
+    The pool dtype is part of the key: tile feasibility depends on
+    kv_bytes (a tuned n for bf16 can be infeasible — or badly undersized —
+    for an int8 pool), so tuned configs must never leak across dtypes."""
     return (
         f"{strategy}|p{page_size}|hq{num_q_heads}|hkv{num_kv_heads}"
         f"|d{head_dim}|b{_pow2_bucket(batch_size)}"
         f"|kv{_pow2_bucket(max_kv_len)}"
+        f"|{DTYPE_TAGS[kv_dtype]}"
     )
 
 

@@ -47,6 +47,7 @@ import numpy as np
 from repro.kernels import merge as merge_mod
 from repro.kernels import pat_decode
 from repro.kernels import ref as ref_mod
+from repro.core import kv_quant as kv_quant_mod
 from repro.core.work_plan import DeviceGroupArrays, TileGroupPlan, WorkPlan
 
 # Instrumentation for the overhead benchmark and the dispatch-cache / fused-
@@ -140,20 +141,33 @@ def _xla_items_forward(
     *,
     scale: float,
     dv: int,
+    kv_quant: Optional[str] = None,
+    k_scales: Optional[jax.Array] = None,  # [Hkv, P] fp32 per-page scales
+    v_scales: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Kernel-identical forward over one chunk of items (unnormalised
-    partials + stats)."""
+    partials + stats). Quantized pools (``kv_quant``) are dequantized
+    per gathered page against the sidecar scales — the XLA mirror of the
+    kernel's in-VMEM dequant."""
     c, Hkv, m, dk = q_packed.shape
     share_kv = v_pages is None
     maxp, page = item_pages.shape[1], k_pages.shape[2]
     L = maxp * page
 
     k_it = jnp.take(k_pages, item_pages.reshape(-1), axis=1)  # [Hkv, c*maxp, page, dk]
+    if kv_quant is not None:
+        k_it = kv_quant_mod.dequantize_pages(
+            k_it, jnp.take(k_scales, item_pages.reshape(-1), axis=1), kv_quant
+        )
     k_it = k_it.reshape(Hkv, c, L, dk).transpose(1, 0, 2, 3)  # [c, Hkv, L, dk]
     if share_kv:
         v_it = k_it[..., :dv]
     else:
         v_it = jnp.take(v_pages, item_pages.reshape(-1), axis=1)
+        if kv_quant is not None:
+            v_it = kv_quant_mod.dequantize_pages(
+                v_it, jnp.take(v_scales, item_pages.reshape(-1), axis=1), kv_quant
+            )
         v_it = v_it.reshape(Hkv, c, L, dv).transpose(1, 0, 2, 3)
 
     scores = (
@@ -189,6 +203,9 @@ def xla_group_forward(
     v_head_dim: Optional[int] = None,
     row_sole: Optional[jax.Array] = None,  # [T, m] int32 fast-path flags
     item_chunk: Optional[int] = None,
+    kv_quant: Optional[str] = None,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """XLA-only forward with kernel-identical semantics — runs one step
     list (the fused unified plan, or one tile group on the oracle path).
@@ -205,18 +222,19 @@ def xla_group_forward(
     share_kv = v_pages is None
     dv = v_head_dim if share_kv else v_pages.shape[-1]
     c = XLA_ITEM_CHUNK if item_chunk is None else item_chunk
+    quant = dict(kv_quant=kv_quant, k_scales=k_scales, v_scales=v_scales)
 
     if T <= c:
         num, stats = _xla_items_forward(
             q_packed, k_pages, v_pages, item_pages, item_kv_len,
-            scale=scale, dv=dv,
+            scale=scale, dv=dv, **quant,
         )
     elif not isinstance(q_packed, jax.core.Tracer):
         outs = [
             _xla_items_forward(
                 q_packed[j : j + c], k_pages, v_pages,
                 item_pages[j : j + c], item_kv_len[j : j + c],
-                scale=scale, dv=dv,
+                scale=scale, dv=dv, **quant,
             )
             for j in range(0, T, c)
         ]
@@ -232,7 +250,7 @@ def xla_group_forward(
         def chunk_fn(args):
             qc, ic, lc = args
             return _xla_items_forward(
-                qc, k_pages, v_pages, ic, lc, scale=scale, dv=dv
+                qc, k_pages, v_pages, ic, lc, scale=scale, dv=dv, **quant
             )
 
         num, stats = jax.lax.map(
@@ -301,6 +319,8 @@ def _forward_merge(
     q: jax.Array,
     k_pages: jax.Array,
     v_pages: Optional[jax.Array],
+    k_scales: Optional[jax.Array],  # [Hkv, P] fp32 (quantized pools only)
+    v_scales: Optional[jax.Array],
     group_arrays: Tuple,  # step lists: (unified,) fused, or per-group oracle
     split_table: jax.Array,  # [R_split, P] compact merge table
     split_qh: jax.Array,  # [R_split] output rows of merged results
@@ -312,6 +332,7 @@ def _forward_merge(
     num_kv_heads: int,
     split_cap: int,
     interpret: bool,
+    kv_quant: Optional[str] = None,
 ) -> jax.Array:
     """Shared pack -> forward -> split-aware merge body (traced under jit
     on the hot path, executed eagerly on the legacy path). On the fused
@@ -342,6 +363,14 @@ def _forward_merge(
             # ONE pallas_call regardless of the class count: the kernel
             # branches per step on the scalar-prefetched step_mclass and
             # computes at the (static) class width (DESIGN.md §8).
+            # Quantized pools: gather the per-page sidecar through the
+            # step page table so each step's scales ride the scalar
+            # prefetch with its page descriptors.
+            step_kscale = step_vscale = None
+            if kv_quant is not None:
+                step_kscale = k_scales[:, ga.step_pages]  # [Hkv, S, ppb]
+                if v_scales is not None:
+                    step_vscale = v_scales[:, ga.step_pages]
             o, st = pat_decode.pat_decode_forward(
                 qp,
                 k_pages,
@@ -362,12 +391,17 @@ def _forward_merge(
                 scale=scale,
                 v_head_dim=dv,
                 interpret=interpret,
+                kv_quant=kv_quant,
+                step_kscale=step_kscale,
+                step_vscale=step_vscale,
             )
         elif impl == "xla":
+            quant = dict(kv_quant=kv_quant, k_scales=k_scales, v_scales=v_scales)
             if len(ga.m_classes) == 1:
                 o, st = xla_group_forward(
                     qp, k_pages, v_pages, ga.item_pages, ga.item_kv_len,
                     scale=scale, v_head_dim=dv, row_sole=ga.row_sole,
+                    **quant,
                 )
             else:
                 # Per-m-class compute: each class's items run at the class
@@ -386,6 +420,7 @@ def _forward_merge(
                         ga.item_pages[e0:e1], ga.item_kv_len[e0:e1],
                         scale=scale, v_head_dim=dv,
                         row_sole=ga.row_sole[e0:e1, :mc],
+                        **quant,
                     )
                     if mc < m_w:
                         o_c = jnp.pad(
@@ -434,17 +469,19 @@ def _forward_merge(
 
 
 def _traced_forward_merge(
-    q, k_pages, v_pages, group_arrays, split_table, split_qh,
+    q, k_pages, v_pages, k_scales, v_scales, group_arrays, split_table,
+    split_qh,
     *, scale, impl, merge_impl, v_head_dim, num_kv_heads,
-    split_cap, interpret,
+    split_cap, interpret, kv_quant,
 ):
     # runs only when jax traces (i.e. on a jit-cache miss)
     _DISPATCH_STATS["traces"] += 1
     return _forward_merge(
-        q, k_pages, v_pages, group_arrays, split_table, split_qh,
+        q, k_pages, v_pages, k_scales, v_scales, group_arrays, split_table,
+        split_qh,
         scale=scale, impl=impl, merge_impl=merge_impl,
         v_head_dim=v_head_dim, num_kv_heads=num_kv_heads,
-        split_cap=split_cap, interpret=interpret,
+        split_cap=split_cap, interpret=interpret, kv_quant=kv_quant,
     )
 
 
@@ -452,7 +489,9 @@ def _traced_forward_merge(
 # (bucketed) shapes/dtypes of every argument array — DeviceGroupArrays is a
 # pytree whose (kv_tile, pages_per_block) metadata is part of the treedef —
 # which IS the dispatch signature (m_max, n_max, S_bucket, T_bucket, dk, dv,
-# split_cap, B, Hq, ...).
+# split_cap, B, Hq, ...). kv_quant is static: it selects the dequant code
+# path, and the scale sidecars (None for direct-storage pools) change the
+# pytree structure anyway.
 _forward_merge_jit = jax.jit(
     _traced_forward_merge,
     static_argnames=(
@@ -463,6 +502,7 @@ _forward_merge_jit = jax.jit(
         "num_kv_heads",
         "split_cap",
         "interpret",
+        "kv_quant",
     ),
 )
 
@@ -479,9 +519,16 @@ def pat_paged_attention(
     v_head_dim: Optional[int] = None,
     interpret: bool = True,
     dispatch: str = "auto",  # "auto" | "jit" | "jit_groups" | "eager"
+    kv_quant: Optional[str] = None,  # None | "int8" | "fp8"
+    k_scales: Optional[jax.Array] = None,  # [Hkv, P] fp32 per-page scales
+    v_scales: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Full pack->forward->split-aware-merge decode attention. Returns
     [B, Hq, dv].
+
+    Quantized pools pass ``kv_quant`` plus the per-page scale sidecars;
+    every dispatch path dequantizes identically (in-kernel for Pallas,
+    per gathered page for the XLA mirror).
 
     ``dispatch="auto"`` uses the fused jit-cached device-resident path
     (ONE forward launch per decode step) whenever the plan has a unified
@@ -496,6 +543,8 @@ def pat_paged_attention(
     if scale is None:
         scale = 1.0 / (dk**0.5)
     dv = v_head_dim if v_pages is None else v_pages.shape[-1]
+    if kv_quant is not None and k_scales is None:
+        raise ValueError("quantized pools need their per-page k_scales sidecar")
 
     def run_jit(step_lists, split_table, sqh, cap):
         # single jitted entry shared by the fused hot path and the
@@ -506,6 +555,8 @@ def pat_paged_attention(
             q,
             k_pages,
             v_pages,
+            k_scales,
+            v_scales,
             step_lists,
             split_table,
             sqh,
@@ -516,6 +567,7 @@ def pat_paged_attention(
             num_kv_heads=Hkv,
             split_cap=cap,
             interpret=interpret,
+            kv_quant=kv_quant,
         )
 
     use_fused = dispatch == "jit" or (
@@ -554,6 +606,8 @@ def pat_paged_attention(
         q,
         k_pages,
         v_pages,
+        k_scales,
+        v_scales,
         tuple(group_arrays),
         jnp.asarray(wp.split_part_rows),
         jnp.asarray(wp.split_qh),
@@ -564,4 +618,5 @@ def pat_paged_attention(
         num_kv_heads=Hkv,
         split_cap=wp.total_split_rows,
         interpret=interpret,
+        kv_quant=kv_quant,
     )

@@ -69,34 +69,7 @@ NEG_INF = float("-inf")
 
 
 def _kernel(
-    # --- scalar prefetch (SMEM) ---
-    step_item_ref,  # [S]
-    step_pages_ref,  # [S, ppb]
-    step_npages_ref,  # [S] live pages of the step (page-granular DMA)
-    step_len_ref,  # [S]
-    step_start_ref,  # [S]
-    step_end_ref,  # [S]
-    step_ord_ref,  # [S] rank among active steps
-    act_steps_ref,  # [S] indices of active steps (0-padded tail)
-    act_total_ref,  # [1] number of active steps
-    step_mclass_ref,  # [S] m class of the step's item (bucketed m widths)
-    # --- inputs ---
-    q_ref,  # VMEM block (1, 1, m, dk)
-    row_sole_ref,  # VMEM block (1, m) int32: 1 = single-partial query row
-    k_hbm,  # ANY [Hkv, P, page, dk]
-    v_hbm,  # ANY [Hkv, P, page, dv] (aliases k_hbm when share_kv)
-    # --- outputs ---
-    o_ref,  # VMEM block (1, 1, m, dv) fp32
-    stats_ref,  # VMEM block (1, 1, 2, m) fp32
-    # --- scratch (V buffers/semaphores exist only when V is fetched) ---
-    k_buf,  # VMEM (2, ppb, page, dk)
-    acc_ref,  # VMEM (m, dv) fp32
-    m_scr,  # VMEM (m, 128) fp32
-    l_scr,  # VMEM (m, 128) fp32
-    k_sems,  # DMA sems (2, ppb)
-    v_buf=None,  # VMEM (2, ppb, page, dv) — absent when share_kv
-    v_sems=None,  # DMA sems (2, ppb) — absent when share_kv
-    *,
+    *refs,
     ppb: int,
     page: int,
     m: int,
@@ -108,7 +81,46 @@ def _kernel(
     num_kv_heads: int,
     share_kv: bool,
     m_classes: tuple,
+    kv_quant: Optional[str],
 ):
+    # The ref list varies with (kv_quant, share_kv) — quantized pools add
+    # per-step scale operands to the scalar prefetch block, share_kv drops
+    # the V scratch — so unpack positionally in pallas_call order:
+    # scalar prefetch, inputs, outputs, scratch.
+    it = iter(refs)
+    step_item_ref = next(it)  # [S]
+    step_pages_ref = next(it)  # [S, ppb]
+    step_npages_ref = next(it)  # [S] live pages of the step
+    step_len_ref = next(it)  # [S]
+    step_start_ref = next(it)  # [S]
+    step_end_ref = next(it)  # [S]
+    step_ord_ref = next(it)  # [S] rank among active steps
+    act_steps_ref = next(it)  # [S] indices of active steps (0-padded tail)
+    act_total_ref = next(it)  # [1] number of active steps
+    step_mclass_ref = next(it)  # [S] m class of the step's item
+    step_kscale_ref = step_vscale_ref = None
+    if kv_quant is not None:
+        # per-(head, step, page-slot) fp32 scales, prefetched with the
+        # page descriptors they ride alongside (DESIGN.md §9)
+        step_kscale_ref = next(it)  # [Hkv, S, ppb]
+        if not share_kv:
+            step_vscale_ref = next(it)  # [Hkv, S, ppb]
+    q_ref = next(it)  # VMEM block (1, 1, m, dk)
+    row_sole_ref = next(it)  # VMEM block (1, m) int32: 1 = sole-partial row
+    k_hbm = next(it)  # ANY [Hkv, P, page, dk]
+    v_hbm = next(it)  # ANY [Hkv, P, page, dv] (aliases k_hbm when share_kv)
+    o_ref = next(it)  # VMEM block (1, 1, m, dv) fp32
+    stats_ref = next(it)  # VMEM block (1, 1, 2, m) fp32
+    k_buf = next(it)  # VMEM (2, ppb, page, dk) — pool dtype (int8 payload)
+    acc_ref = next(it)  # VMEM (m, dv) fp32
+    m_scr = next(it)  # VMEM (m, 128) fp32
+    l_scr = next(it)  # VMEM (m, 128) fp32
+    k_sems = next(it)  # DMA sems (2, ppb)
+    v_buf = v_sems = None
+    if not share_kv:
+        v_buf = next(it)  # VMEM (2, ppb, page, dv)
+        v_sems = next(it)  # DMA sems (2, ppb)
+
     h = pl.program_id(0)
     s = pl.program_id(1)
     # The DMA pipeline advances over ACTIVE steps only (zero-token DMA
@@ -210,9 +222,28 @@ def _kernel(
     # Rows >= mc stay at their step_start reset state (l = 0, acc = 0), so
     # the full-width epilogue emits exact zeros for them; they are
     # row_query = -1 padding and are never read back.
+    def _row_scales(scale_ref):
+        # one fp32 scale per prefetched page slot, expanded to tile rows
+        per_page = jnp.stack([scale_ref[h, s, j] for j in range(ppb)])
+        return jnp.repeat(per_page, page)[:, None]  # (n, 1)
+
+    def _dequant(tile, scale_ref):
+        # int8 payload -> fp32 digits -> x per-row page scale, in VMEM
+        # right before the matmul; rows beyond the step's live pages hold
+        # stale bytes and are masked downstream (col/vrow < valid).
+        if kv_quant == "fp8":
+            digits = jax.lax.bitcast_convert_type(
+                tile, jnp.float8_e4m3fn
+            ).astype(jnp.float32)
+        else:
+            digits = tile.astype(jnp.float32)
+        return digits * _row_scales(scale_ref)
+
     def attend(mc: int):
         q = q_ref[0, 0][:mc]  # (mc, dk)
         k = k_buf[slot].reshape(n, dk)  # (n, dk)
+        if kv_quant is not None:
+            k = _dequant(k, step_kscale_ref)
         scores = (
             jax.lax.dot_general(
                 q,
@@ -238,9 +269,13 @@ def _kernel(
         l_cur = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
 
         if share_kv:
-            v = k_buf[slot].reshape(n, dk)[:, :dv]
+            # V is a prefix slice of the (already dequantized) K tile —
+            # one pool, one scale, one dequant
+            v = k[:, :dv]
         else:
             v = v_buf[slot].reshape(n, dv)
+            if kv_quant is not None:
+                v = _dequant(v, step_vscale_ref)
         # With page-granular DMA the tail of the buffer beyond the step's
         # live pages holds stale bytes; p is 0 there, but 0 * Inf/NaN
         # garbage would still poison the matmul — zero the dead V rows.
@@ -309,6 +344,9 @@ def pat_decode_forward(
     interpret: bool = True,
     step_mclass: Optional[jax.Array] = None,  # [S] per-step m class
     m_classes: Optional[Tuple[int, ...]] = None,  # static class widths
+    kv_quant: Optional[str] = None,  # None | "int8" | "fp8"
+    step_kscale: Optional[jax.Array] = None,  # [Hkv, S, ppb] fp32
+    step_vscale: Optional[jax.Array] = None,  # [Hkv, S, ppb] fp32
 ):
     """Runs one step list (the fused unified plan, or one tile group on the
     oracle path); returns (partial_o [T,Hkv,m,dv] fp32, stats [T,Hkv,2,m]
@@ -318,7 +356,15 @@ def pat_decode_forward(
 
     ``m_classes``/``step_mclass`` carry the bucketed m classes of the
     unified step list (DESIGN.md §8); omitted, the whole list computes at
-    the packed width m (single class)."""
+    the packed width m (single class).
+
+    ``kv_quant`` marks the pools as quantized payloads ("int8"/"fp8"):
+    ``step_kscale``/``step_vscale`` then carry one fp32 scale per
+    (head, step, page slot) — the pool's per-page sidecar gathered through
+    the step page table — and ride the scalar-prefetch block so each
+    step's scales arrive with its page descriptors. Tiles are dequantized
+    in VMEM right before QK^T / PV; softmax stats stay fp32 (DESIGN.md §9).
+    """
     T, Hkv, m, dk = q_packed.shape
     if m_classes is None:
         m_classes = (m,)
@@ -335,6 +381,14 @@ def pat_decode_forward(
     ppb = n // page
     assert ppb * page == n, (n, page)
     S = step_item.shape[0]
+    scale_ops = []
+    if kv_quant is not None:
+        assert step_kscale is not None, "quantized pools need step_kscale"
+        assert step_kscale.shape == (Hkv, S, ppb), (step_kscale.shape, (Hkv, S, ppb))
+        scale_ops.append(step_kscale)
+        if not share_kv:
+            assert step_vscale is not None, "separate V pool needs step_vscale"
+            scale_ops.append(step_vscale)
 
     kernel = functools.partial(
         _kernel,
@@ -349,6 +403,7 @@ def pat_decode_forward(
         num_kv_heads=Hkv,
         share_kv=share_kv,
         m_classes=tuple(m_classes),
+        kv_quant=kv_quant,
     )
 
     # MLA (share_kv) fetches no V: allocate neither the V double buffer nor
@@ -368,7 +423,7 @@ def pat_decode_forward(
         ]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=10,
+        num_scalar_prefetch=10 + len(scale_ops),
         grid=(Hkv, S),
         in_specs=[
             pl.BlockSpec(
@@ -417,6 +472,7 @@ def pat_decode_forward(
         act_steps,
         act_total,
         step_mclass,
+        *scale_ops,
         q_packed,
         row_sole,
         k_pages,

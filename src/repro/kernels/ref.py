@@ -59,6 +59,34 @@ def paged_attention_ref(
     return jax.vmap(one_query)(jnp.arange(B)).astype(q.dtype)
 
 
+def paged_attention_quant_ref(
+    q: jax.Array,  # [B, Hq, dk]
+    k_pages: jax.Array,  # [Hkv, P, page, dk] quantized payload
+    v_pages: Optional[jax.Array],  # None => share_kv
+    k_scales: jax.Array,  # [Hkv, P] fp32 per-page scales
+    v_scales: Optional[jax.Array],
+    kv_quant: str,  # "int8" | "fp8"
+    block_tables: jax.Array,
+    kv_lens: jax.Array,
+    scale: Optional[float] = None,
+    v_head_dim: Optional[int] = None,
+) -> jax.Array:
+    """Oracle for quantized pools: dequantize the WHOLE pool against the
+    per-page sidecar, then run the fp32 oracle. The quantized datapath must
+    match this exactly up to fp32 accumulation order — the quantisation
+    error itself lives in the pool contents, not in the attention math
+    (DESIGN.md §9 tolerance methodology)."""
+    from repro.core import kv_quant as kvq
+
+    k = kvq.dequantize_pages(k_pages, k_scales, kv_quant)
+    if v_pages is None:
+        assert v_head_dim is not None
+        v = k[..., :v_head_dim]
+    else:
+        v = kvq.dequantize_pages(v_pages, v_scales, kv_quant)
+    return paged_attention_ref(q, k, v, block_tables, kv_lens, scale)
+
+
 def merge_rows_ref(
     partial_o: jax.Array,  # [R_buf, dv] fp32 unnormalised numerators
     partial_stats: jax.Array,  # [R_buf, 2] fp32 (running max, denominator)

@@ -42,6 +42,11 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--backend", default=None)
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["float32", "bfloat16", "int8", "fp8"],
+                    help="paged KV pool dtype; int8/fp8 quantize pages at "
+                         "write time and dequantize in-kernel against "
+                         "per-page scales (default: float32)")
     ap.add_argument("--num-pages", type=int, default=4096)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES))
@@ -85,7 +90,8 @@ def main():
         pat_config=PatConfig(impl=args.impl,
                              merge_impl=args.impl,
                              strategy=backend,
-                             tuning_cache=args.tuning_cache),
+                             tuning_cache=args.tuning_cache,
+                             kv_dtype=args.kv_dtype),
         eos_id=-1, temperature=args.temperature,
         scheduler=SchedulerConfig(
             policy=args.policy,

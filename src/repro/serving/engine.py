@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import kv_quant
 from repro.core.attention import PatAttentionBackend, PatConfig
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -107,34 +108,54 @@ class Engine:
             impl="xla", merge_impl="xla", page_size=page_size
         )
         self.mla = cfg.mla is not None
+        # Pool dtype (ISSUE 7): fp32 default on the CPU container; the pool
+        # validates the name. Quantized pools only make sense when every
+        # layer holds paged KV — hybrid/SSM archs decode through dense
+        # state (DESIGN.md §5) and enc-dec has no paged decode path, so
+        # their KV never flows through the quantized datapath at all.
+        kv_dtype = self.pat_config.kv_dtype or "float32"
+        all_paged = cfg.encdec is None and all(
+            cfg.layer_is_attention(i % cfg.scan_block)
+            for i in range(cfg.num_layers)
+        )
+        if kv_quant.is_quantized(kv_dtype) and not all_paged:
+            raise ValueError(
+                f"kv_dtype={kv_dtype!r} needs paged KV on every layer, but "
+                f"arch {cfg.name!r} has non-attention (or enc-dec) layers "
+                "that decode through dense state — use float32/bfloat16"
+            )
         if self.mla:
             dk = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
             dv = cfg.mla.v_head_dim
             kvcfg = KVCacheConfig(
                 cfg.num_layers, 1, dk, None, num_pages, page_size,
-                dtype="float32",
-            )
-            self.backend = PatAttentionBackend(
-                cfg.num_heads, 1, dk, v_head_dim=cfg.mla.kv_lora_rank,
-                kv_dtype_bytes=4, config=self.pat_config, share_kv=True,
+                dtype=kv_dtype,
             )
         else:
             kvcfg = KVCacheConfig(
                 cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, cfg.head_dim,
-                num_pages, page_size, dtype="float32",
+                num_pages, page_size, dtype=kv_dtype,
             )
+        # pool first: it is the one source of truth for the KV dtype; the
+        # backend derives its tile-solver byte model from the pool, while Q
+        # stays at the fp32 compute precision of this engine
+        self.kv = PagedKVCache(kvcfg)
+        if self.mla:
+            self.backend = PatAttentionBackend(
+                cfg.num_heads, 1, dk, v_head_dim=cfg.mla.kv_lora_rank,
+                kv_dtype=self.kv.kv_dtype, q_dtype_bytes=4,
+                config=self.pat_config, share_kv=True,
+            )
+        else:
             self.backend = PatAttentionBackend(
                 cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
-                kv_dtype_bytes=4, config=self.pat_config,
+                kv_dtype=self.kv.kv_dtype, q_dtype_bytes=4,
+                config=self.pat_config,
             )
-        self.kv = PagedKVCache(kvcfg)
         self.radix = RadixCache(self.kv.allocator, page_size)
         self.page = page_size
         # chunked (suffix) prefill needs every layer to hold paged KV
-        self._chunkable = cfg.encdec is None and all(
-            cfg.layer_is_attention(i % cfg.scan_block)
-            for i in range(cfg.num_layers)
-        )
+        self._chunkable = all_paged
         # A tuned LaunchConfig may carry a prefill chunk size; it fills in
         # only when the caller left chunk_tokens unset (explicit CLI/config
         # choices always win over the tuning cache).
@@ -227,11 +248,15 @@ class Engine:
     def _gather_prefix_caches(self, pages: List[int], cached: int):
         """Per-layer K/V of the pool-resident prefix (radix-cached pages
         plus earlier chunks' writes), gathered from the page pool (one
-        gather across all layers)."""
+        gather across all layers). Quantized pools are dequantized against
+        the per-page sidecar right after the gather — the dense suffix
+        prefill attends over fp32 prefix K/V."""
         cfg = self.cfg
         pids = jnp.asarray(np.asarray(pages, np.int32))
         # [L, Hkv, n, page, dk] -> [L, n*page, Hkv, dk] -> first `cached`
         kg = self.kv.k_pages[:, :, pids]
+        if self.kv.quantized:
+            kg = self.kv.dequantize_pages(kg, self.kv.k_scales[:, :, pids])
         Lyr, Hkv = kg.shape[0], kg.shape[1]
         kg = kg.transpose(0, 2, 3, 1, 4).reshape(Lyr, -1, Hkv, kg.shape[-1])
         kg = kg[:, :cached]
@@ -245,6 +270,8 @@ class Engine:
                 for l in range(Lyr)
             ]
         vg = self.kv.v_pages[:, :, pids]
+        if self.kv.quantized:
+            vg = self.kv.dequantize_pages(vg, self.kv.v_scales[:, :, pids])
         vg = vg.transpose(0, 2, 3, 1, 4).reshape(Lyr, -1, Hkv, vg.shape[-1])
         vg = vg[:, :cached]
         return [{"k": kg[l][None], "v": vg[l][None]} for l in range(Lyr)]
@@ -357,13 +384,15 @@ class Engine:
             self._refresh_batch()
         return self._bt, self._pos + 1
 
-    def _decode_write_slots(self) -> (jax.Array, jax.Array):
+    def _decode_write_slots(self) -> (np.ndarray, np.ndarray):
         """(page id, slot) of the token being decoded, per running request —
         computed once per step, shared by every layer, and vectorised
-        (gather into the cached block table; no per-request python loop)."""
+        (gather into the cached block table; no per-request python loop).
+        Host arrays: the quantized write path needs np.unique over the
+        touched pages; kv_cache converts for the device scatter."""
         pids = self._bt[np.arange(len(self.running)), self._pos // self.page]
         slots = self._pos % self.page
-        return jnp.asarray(pids.astype(np.int32)), jnp.asarray(slots.astype(np.int32))
+        return pids.astype(np.int32), slots.astype(np.int32)
 
     def _decode_batch(self) -> None:
         t0 = time.perf_counter()
@@ -458,16 +487,19 @@ class Engine:
             pos = positions[:, None]
             q = L.apply_rope(q, pos, cfg.rope_theta)
             k = L.apply_rope(k, pos, cfg.rope_theta)
-        # write this token's K/V into the pool BEFORE attending (it attends
-        # to itself: kv_lens includes it)
-        kp, vp = self.kv.layer_view(layer)
-        kp = kp.at[:, pids, slots].set(
-            k[:, 0].transpose(1, 0, 2).astype(kp.dtype)
+        # write this token's K/V into the pool view BEFORE attending (it
+        # attends to itself: kv_lens includes it); quantized pools
+        # requantise the touched pages and hand back updated scales
+        kp, vp, ks, vs = self.kv.layer_view_with(
+            layer,
+            k[:, 0].transpose(1, 0, 2),
+            v[:, 0].transpose(1, 0, 2),
+            pids,
+            slots,
         )
-        vp = vp.at[:, pids, slots].set(
-            v[:, 0].transpose(1, 0, 2).astype(vp.dtype)
-        )
-        out = self.backend.attend(q[:, 0], kp, vp, wp)  # [B, Hq, hd]
+        out = self.backend.attend(
+            q[:, 0], kp, vp, wp, k_scales=ks, v_scales=vs
+        )  # [B, Hq, hd]
         out = out.reshape(B, 1, -1).astype(x.dtype) @ ap["wo"]
         return out, k[:, 0], v[:, 0]
 
@@ -478,9 +510,8 @@ class Engine:
         q_nope, q_rope = A._mla_q(ap, cfg, x, pos)
         c_kv, k_rope = A._mla_ckv(ap, cfg, x, pos)
         entry = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0][:, None, :]  # [B,1,dk]
-        kp, _ = self.kv.layer_view(layer)
-        kp = kp.at[:, pids, slots].set(
-            entry.transpose(1, 0, 2).astype(kp.dtype)
+        kp, _, ks, _ = self.kv.layer_view_with(
+            layer, entry.transpose(1, 0, 2), None, pids, slots
         )
         # absorbed query per head: [B, Hq, kv_lora + rope]
         w_uk = ap["w_uk"].reshape(m.kv_lora_rank, cfg.num_heads, m.qk_nope_head_dim)
@@ -488,7 +519,7 @@ class Engine:
         q_full = jnp.concatenate([q_lat, q_rope[:, 0].astype(jnp.float32)], axis=-1)
         scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
         out_lat = self.backend.attend(
-            q_full.astype(x.dtype), kp, None, wp, scale=scale
+            q_full.astype(x.dtype), kp, None, wp, scale=scale, k_scales=ks
         )  # [B, Hq, kv_lora]
         w_uv = ap["w_uv"].reshape(m.kv_lora_rank, cfg.num_heads, m.v_head_dim)
         out = jnp.einsum(

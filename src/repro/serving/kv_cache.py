@@ -5,6 +5,18 @@ Layout per layer: k_pages/v_pages [Hkv, num_pages, page_size, head_dim]
 is the layout the PAT kernel DMAs from. MLA archs store one combined pool
 (c_kv ++ k_rope) and use the kernel's share_kv mode.
 
+ISSUE 7 makes the pool dtype-aware: ``fp32``/``bf16`` store values
+directly; ``int8``/``fp8`` store a quantized payload plus a per-page
+per-head fp32 scale sidecar ``k_scales``/``v_scales`` of shape
+[L, Hkv, num_pages] (one scalar per page descriptor — the granularity the
+decode kernel scalar-prefetches alongside the page table). Quantisation
+happens at page-write time: a write touches whole pages (dequantise the
+affected pages, scatter the new fp32 rows, recompute the page amax,
+requantise), so a page's scale always covers every live row in it. The
+pool object is the ONE source of truth for ``kv_dtype``/``kv_bytes`` —
+tile selection derives its byte model from here, never from a hardcoded
+constant.
+
 The host allocator is a free list with reference counts, shared with the
 radix prefix cache (a page referenced by N live requests + the radix tree
 has refcount N+1 and is only recycled at zero).
@@ -18,6 +30,8 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import kv_quant
 
 
 class PageAllocator:
@@ -59,7 +73,7 @@ class KVCacheConfig:
     v_head_dim: Optional[int]  # None => share_kv (MLA)
     num_pages: int
     page_size: int = 16
-    dtype: str = "float32"  # CPU container default; bf16 on TPU
+    dtype: str = "float32"  # float32 | bfloat16 | int8 | fp8
 
 
 class PagedKVCache:
@@ -67,17 +81,45 @@ class PagedKVCache:
 
     def __init__(self, cfg: KVCacheConfig):
         self.cfg = cfg
-        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        kd = kv_quant.kv_dtype(cfg.dtype)  # raises on unknown names
+        self._kd = kd
         shape_k = (cfg.num_layers, cfg.num_kv_heads, cfg.num_pages, cfg.page_size, cfg.head_dim)
-        self.k_pages = jnp.zeros(shape_k, dt)
+        self.k_pages = jnp.zeros(shape_k, kd.storage)
         self.share_kv = cfg.v_head_dim is None
         if self.share_kv:
             self.v_pages = None
         else:
             self.v_pages = jnp.zeros(
-                (cfg.num_layers, cfg.num_kv_heads, cfg.num_pages, cfg.page_size, cfg.v_head_dim), dt
+                (cfg.num_layers, cfg.num_kv_heads, cfg.num_pages, cfg.page_size, cfg.v_head_dim),
+                kd.storage,
             )
+            # K and V pools must agree on dtype: one plan (tile sizes, byte
+            # model, kernel dequant mode) covers both streams
+            assert self.k_pages.dtype == self.v_pages.dtype, (
+                self.k_pages.dtype, self.v_pages.dtype,
+            )
+        scale_shape = (cfg.num_layers, cfg.num_kv_heads, cfg.num_pages)
+        self.k_scales = jnp.zeros(scale_shape, jnp.float32) if kd.quantized else None
+        self.v_scales = (
+            jnp.zeros(scale_shape, jnp.float32)
+            if kd.quantized and not self.share_kv else None
+        )
         self.allocator = PageAllocator(cfg.num_pages)
+
+    # --- dtype: the one source of truth -------------------------------------
+
+    @property
+    def kv_dtype(self) -> str:
+        return self._kd.name
+
+    @property
+    def kv_bytes(self) -> int:
+        """Bytes per pool element — what TileSelector's byte model uses."""
+        return self._kd.bytes_per_el
+
+    @property
+    def quantized(self) -> bool:
+        return self._kd.quantized
 
     # --- device writes ------------------------------------------------------
 
@@ -88,18 +130,91 @@ class PagedKVCache:
         page_ids: np.ndarray,  # [S] physical page per token
         slots: np.ndarray,  # [S] slot within page per token
     ) -> None:
-        pids = jnp.asarray(page_ids)
-        slt = jnp.asarray(slots)
-        k = layer_k.transpose(0, 2, 1, 3).astype(self.k_pages.dtype)  # [L,Hkv,S,dk]
-        self.k_pages = self.k_pages.at[:, :, pids, slt].set(k)
+        k = layer_k.transpose(0, 2, 1, 3)  # [L, Hkv, S, dk]
+        v = None
         if not self.share_kv and layer_v is not None:
-            v = layer_v.transpose(0, 2, 1, 3).astype(self.v_pages.dtype)
-            self.v_pages = self.v_pages.at[:, :, pids, slt].set(v)
+            v = layer_v.transpose(0, 2, 1, 3)
+        if not self.quantized:
+            pids, slt = jnp.asarray(page_ids), jnp.asarray(slots)
+            self.k_pages = self.k_pages.at[:, :, pids, slt].set(
+                k.astype(self.k_pages.dtype)
+            )
+            if v is not None:
+                self.v_pages = self.v_pages.at[:, :, pids, slt].set(
+                    v.astype(self.v_pages.dtype)
+                )
+            return
+        upids, local = np.unique(np.asarray(page_ids), return_inverse=True)
+        self.k_pages, self.k_scales = self._requantized_insert(
+            self.k_pages, self.k_scales, k, upids, local, slots
+        )
+        if v is not None:
+            self.v_pages, self.v_scales = self._requantized_insert(
+                self.v_pages, self.v_scales, v, upids, local, slots
+            )
+
+    def _requantized_insert(self, pages, scales, new_rows, upids, local, slots):
+        """Page-granular quantized write: dequantise the affected pages
+        (empty slots hold exact zeros), scatter the new fp32 rows,
+        requantise against the recomputed per-page amax. ``upids`` are the
+        unique physical pages touched; ``local`` maps each new row to its
+        index in ``upids``."""
+        up = jnp.asarray(upids)
+        loc, slt = jnp.asarray(local), jnp.asarray(slots)
+        f32 = kv_quant.dequantize_pages(
+            pages[..., up, :, :], scales[..., up], self.kv_dtype
+        )
+        f32 = f32.at[..., loc, slt, :].set(new_rows.astype(jnp.float32))
+        q, s = kv_quant.quantize_pages(f32, self.kv_dtype)
+        return pages.at[..., up, :, :].set(q), scales.at[..., up].set(s)
+
+    # --- views --------------------------------------------------------------
 
     def layer_view(self, layer: int):
         k = self.k_pages[layer]
         v = None if self.share_kv else self.v_pages[layer]
         return k, v
+
+    def layer_scales(self, layer: int):
+        """(k_scales, v_scales) [Hkv, num_pages] fp32 for one layer, or
+        (None, None) for direct-storage pools."""
+        if not self.quantized:
+            return None, None
+        vs = None if self.share_kv else self.v_scales[layer]
+        return self.k_scales[layer], vs
+
+    def layer_view_with(
+        self,
+        layer: int,
+        k_new: jax.Array,  # [Hkv, S, dk]
+        v_new: Optional[jax.Array],  # [Hkv, S, dv]
+        page_ids: np.ndarray,
+        slots: np.ndarray,
+    ):
+        """Functional insert: one layer's pools with ``k_new``/``v_new``
+        written at (page, slot), WITHOUT mutating the persistent cache.
+        The engine attends through this view for the current decode token;
+        the persistent write happens once per step via write_tokens.
+        Returns (k_pages, v_pages, k_scales, v_scales) for the layer."""
+        kp, vp = self.layer_view(layer)
+        if not self.quantized:
+            pids, slt = jnp.asarray(page_ids), jnp.asarray(slots)
+            kp = kp.at[:, pids, slt].set(k_new.astype(kp.dtype))
+            if vp is not None and v_new is not None:
+                vp = vp.at[:, pids, slt].set(v_new.astype(vp.dtype))
+            return kp, vp, None, None
+        ks, vs = self.layer_scales(layer)
+        upids, local = np.unique(np.asarray(page_ids), return_inverse=True)
+        kp, ks = self._requantized_insert(kp, ks, k_new, upids, local, slots)
+        if vp is not None and v_new is not None:
+            vp, vs = self._requantized_insert(vp, vs, v_new, upids, local, slots)
+        return kp, vp, ks, vs
+
+    def dequantize_pages(self, payload: jax.Array, scales: jax.Array) -> jax.Array:
+        """fp32 view of gathered pages [..., page, d] (prefix-reuse path)."""
+        if not self.quantized:
+            return payload.astype(jnp.float32)
+        return kv_quant.dequantize_pages(payload, scales, self.kv_dtype)
 
 
 def token_to_page_slots(

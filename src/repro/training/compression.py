@@ -11,6 +11,11 @@ Usage in an explicit shard_map DP loop:
     comp = jax.lax.psum(decompress(comp), "pod") / n_pods   # 1/4 the bytes
 (pjit's implicit reduction cannot intercept the dtype; this path is for
 the shard_map training variant and is unit-tested for convergence safety.)
+
+The quantisation math itself lives in core.kv_quant — the SAME symmetric
+int8 primitives back the quantized paged-KV pool (ISSUE 7); this module
+owns only the gradient-specific per-tensor granularity and the
+error-feedback residual bookkeeping.
 """
 
 from __future__ import annotations
@@ -20,6 +25,8 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import kv_quant
+
 
 class Compressed(NamedTuple):
     q: jax.Array  # int8 payload
@@ -27,16 +34,11 @@ class Compressed(NamedTuple):
 
 
 def compress(g: jax.Array) -> Compressed:
-    amax = jnp.max(jnp.abs(g)).astype(jnp.float32)
-    scale = jnp.maximum(amax, 1e-30) / 127.0
-    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(
-        jnp.int8
-    )
-    return Compressed(q, scale)
+    return Compressed(*kv_quant.quantize_tensor(g, "int8"))
 
 
 def decompress(c: Compressed) -> jax.Array:
-    return c.q.astype(jnp.float32) * c.scale
+    return kv_quant.dequantize_tensor(c.q, c.scale, "int8")
 
 
 def compress_with_feedback(

@@ -206,7 +206,7 @@ def test_one_forward_launch_per_decode_step():
         import jax
 
         fn = lambda qq: ops._forward_merge(  # noqa: E731
-            qq, k_pages, v_pages, step_lists,
+            qq, k_pages, v_pages, None, None, step_lists,
             dwp.split_part_rows, dwp.split_qh,
             scale=1.0 / dk**0.5, impl="pallas", merge_impl="pallas",
             v_head_dim=dk, num_kv_heads=Hkv, split_cap=dwp.split_cap,

@@ -1,0 +1,350 @@
+"""ISSUE 7: quantized KV datapath (int8 / simulated fp8).
+
+Tolerance methodology (DESIGN.md §9): the quantized datapath must match
+the QUANT oracle (dequantize-whole-pool + fp32 oracle) to fp32
+accumulation tolerance — the kernel's in-VMEM dequant is the same linear
+map, so any gap there is a datapath bug. Against the FP32 oracle the gap
+IS the quantisation error of the pool contents; on standard-normal KV the
+per-page amax is ~3.5 sigma, giving an int8 step of amax/127 (~1% of a
+typical value, measured max output error ~0.011) and an fp8 e4m3 grid
+with 3 mantissa bits (~6% worst-case within a binade, measured ~0.047—
+0.07). The asserted bands — int8 0.05, fp8 0.15 — hold 2-3x headroom over
+measured and are the same ceilings benchmarks/check_regression.py gates
+the committed bench artifact with.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import kv_quant
+from repro.core.attention import PatAttentionBackend, PatConfig
+from repro.core.pack_scheduler import schedule
+from repro.core.tile_config import TpuSpec, feasible_tiles
+from repro.core.tile_selector import TileSelector
+from repro.core.tuning_cache import TuningCache, shape_key
+from repro.core.work_plan import build_work_plan
+from repro.kernels.ops import pat_paged_attention
+from repro.kernels.ref import paged_attention_quant_ref, paged_attention_ref
+from repro.serving.kv_cache import KVCacheConfig, PagedKVCache
+
+PAGE = 16
+# fp32-oracle parity bands per quantized dtype (see module docstring)
+ORACLE_BAND = {"int8": 0.05, "fp8": 0.15}
+
+
+def tree_batch(rng, B, page=PAGE, levels=(4, 2), priv=2):
+    """Multi-level shared-prefix block table (split + sole queries)."""
+    rows, nxt = [], 0
+    lvl1 = list(range(nxt, nxt + levels[0])); nxt += levels[0]
+    lvl2a = list(range(nxt, nxt + levels[1])); nxt += levels[1]
+    lvl2b = list(range(nxt, nxt + levels[1])); nxt += levels[1]
+    kv = np.zeros(B, np.int64)
+    for b in range(B):
+        extra = int(rng.integers(1, 4))
+        mine = list(range(nxt, nxt + extra)); nxt += extra
+        pages = lvl1 + (lvl2a if b % 2 == 0 else lvl2b) + mine
+        rows.append(pages)
+        kv[b] = (len(pages) - 1) * page + int(rng.integers(1, page + 1))
+    maxp = max(len(r) for r in rows)
+    bt = -np.ones((B, maxp), np.int32)
+    for b, r in enumerate(rows):
+        bt[b, : len(r)] = r
+    return bt, kv, nxt
+
+
+def flat_batch(rng, B, page=PAGE, npages=1):
+    """No sharing: every query is a sole row (merge stage vanishes)."""
+    bt = np.arange(B * npages, dtype=np.int32).reshape(B, npages)
+    kv = (npages - 1) * page + 1 + rng.integers(0, page, B).astype(np.int64)
+    return bt, kv, B * npages
+
+
+# --- scale round-trip properties -------------------------------------------
+
+@pytest.mark.parametrize("name", ["int8", "fp8"])
+def test_page_roundtrip_error_band(name):
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 5, PAGE, 32)), jnp.float32)
+    q, s = kv_quant.quantize_pages(x, name)
+    assert q.dtype == jnp.int8  # fp8 payload = e4m3 bits in an int8 box
+    assert s.shape == (2, 5) and bool((s > 0).all())
+    deq = kv_quant.dequantize_pages(q, s, name)
+    err = np.abs(np.asarray(deq - x))
+    amax = np.abs(np.asarray(x)).max(axis=(-2, -1))
+    # int8: absolute grid of amax/127 -> half-step rounding error.
+    # fp8: relative grid (3 mantissa bits) -> ~2^-4 within a binade.
+    rel_to_amax = (err / amax[..., None, None]).max()
+    assert rel_to_amax <= (0.5 / 127 + 1e-6 if name == "int8" else 0.04), rel_to_amax
+
+
+@pytest.mark.parametrize("name", ["int8", "fp8"])
+def test_zero_page_is_exact_and_finite(name):
+    q, s = kv_quant.quantize_pages(jnp.zeros((1, 2, PAGE, 8)), name)
+    assert bool((s > 0).all())  # EPS guard: scale never hits zero
+    deq = kv_quant.dequantize_pages(q, s, name)
+    assert bool((deq == 0.0).all())
+
+
+def test_fp8_grid_values_roundtrip_exactly():
+    # values on the e4m3 grid survive the bitcast codec bit-exactly
+    vals = jnp.asarray([0.0, 1.0, -2.5, 448.0, -448.0, 0.125], jnp.float32)
+    payload = kv_quant.f32_to_payload(vals, "fp8")
+    assert payload.dtype == jnp.int8
+    np.testing.assert_array_equal(kv_quant.payload_to_f32(payload, "fp8"), vals)
+
+
+def test_kv_dtype_registry_rejects_unknown():
+    with pytest.raises(ValueError, match="unsupported kv dtype"):
+        kv_quant.kv_dtype("int4")
+    assert kv_quant.kv_bytes_per_el("fp8") == 1
+    assert not kv_quant.is_quantized("bfloat16")
+
+
+# --- kernel parity ---------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["int8", "fp8"])
+@pytest.mark.parametrize("batch_kind", ["tree", "flat"])
+def test_gqa_parity_quant_oracle_and_f32_band(name, batch_kind):
+    """Both impls match the quant oracle to fp32 tolerance on split AND
+    sole paths; the fp32-oracle gap stays inside the documented band."""
+    rng = np.random.default_rng(17)
+    B, Hq, Hkv, dk = 5, 8, 4, 64
+    bt, kv, P = (tree_batch if batch_kind == "tree" else flat_batch)(rng, B)
+    k_f32 = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    v_f32 = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, Hq, dk)), jnp.float32)
+    kp, ks = kv_quant.quantize_pages(k_f32, name)
+    vp, vs = kv_quant.quantize_pages(v_f32, name)
+
+    sel = TileSelector(head_dim=dk, page_size=PAGE, q_bytes=4, kv_bytes=1)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq // Hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv)
+    if batch_kind == "tree":
+        assert wp.num_split_queries > 0  # merge path exercised
+    else:
+        assert wp.num_split_queries == 0  # sole-row epilogue exercised
+
+    bt_d, kv_d = jnp.asarray(np.maximum(bt, 0)), jnp.asarray(kv)
+    qref = paged_attention_quant_ref(q, kp, vp, ks, vs, name, bt_d, kv_d)
+    f32ref = paged_attention_ref(q, k_f32, v_f32, bt_d, kv_d)
+    for impl in ["pallas", "xla"]:
+        out = pat_paged_attention(
+            q, kp, vp, wp, impl=impl, kv_quant=name, k_scales=ks, v_scales=vs
+        )
+        np.testing.assert_allclose(out, qref, atol=2e-5, rtol=2e-5,
+                                   err_msg=f"{impl} vs quant oracle")
+        gap = float(jnp.max(jnp.abs(out - f32ref)))
+        assert gap <= ORACLE_BAND[name], (impl, gap)
+
+
+@pytest.mark.parametrize("name", ["int8", "fp8"])
+def test_mla_share_kv_parity(name):
+    """MLA mode: one quantized pool, one scale sidecar; V is a slice of
+    the dequantized K tile."""
+    rng = np.random.default_rng(3)
+    B, Hq, Hkv, dk, dv = 4, 16, 1, 96, 64
+    bt, kv, P = tree_batch(rng, B)
+    k_f32 = jnp.asarray(rng.normal(size=(Hkv, P + 1, PAGE, dk)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, Hq, dk)), jnp.float32)
+    kp, ks = kv_quant.quantize_pages(k_f32, name)
+
+    sel = TileSelector(head_dim=dk, page_size=PAGE, q_bytes=4, kv_bytes=1,
+                       v_head_dim=dv, share_kv=True)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=Hq,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, Hq, Hkv, kv_lens=kv)
+    bt_d, kv_d = jnp.asarray(np.maximum(bt, 0)), jnp.asarray(kv)
+    qref = paged_attention_quant_ref(
+        q, kp, None, ks, None, name, bt_d, kv_d, v_head_dim=dv
+    )
+    f32ref = paged_attention_ref(q, k_f32, k_f32[..., :dv], bt_d, kv_d)
+    for impl in ["pallas", "xla"]:
+        out = pat_paged_attention(
+            q, kp, None, wp, v_head_dim=dv, impl=impl,
+            kv_quant=name, k_scales=ks,
+        )
+        np.testing.assert_allclose(out, qref, atol=2e-5, rtol=2e-5,
+                                   err_msg=f"{impl} vs quant oracle")
+        gap = float(jnp.max(jnp.abs(out - f32ref)))
+        assert gap <= ORACLE_BAND[name], (impl, gap)
+
+
+def test_quantized_call_requires_scales():
+    rng = np.random.default_rng(0)
+    bt, kv, P = flat_batch(rng, 2)
+    kp = jnp.zeros((2, P + 1, PAGE, 32), jnp.int8)
+    sel = TileSelector(head_dim=32, page_size=PAGE, q_bytes=4, kv_bytes=1)
+    plan = schedule(bt, kv, PAGE, strategy="pat", rows_per_query=1,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(plan, sel, 2, 2, kv_lens=kv)
+    with pytest.raises(ValueError, match="k_scales"):
+        pat_paged_attention(jnp.zeros((2, 2, 32)), kp, kp, wp,
+                            impl="xla", kv_quant="int8")
+
+
+# --- pool writes -----------------------------------------------------------
+
+def _mini_pool(dtype="int8", page=4):
+    return PagedKVCache(KVCacheConfig(
+        num_layers=2, num_kv_heads=2, head_dim=8, v_head_dim=8,
+        num_pages=6, page_size=page, dtype=dtype,
+    ))
+
+
+@pytest.mark.parametrize("name", ["int8", "fp8"])
+def test_incremental_write_matches_oneshot_on_disjoint_pages(name):
+    """Requantising writes are page-local: chunked writes that touch
+    disjoint pages leave bit-identical pools vs a single write."""
+    rng = np.random.default_rng(9)
+    page = 4
+    k = jnp.asarray(rng.normal(size=(2, 8, 2, 8)), jnp.float32)  # [L,S,Hkv,dk]
+    v = jnp.asarray(rng.normal(size=(2, 8, 2, 8)), jnp.float32)
+    pids = np.repeat([0, 1], page).astype(np.int32)
+    slots = np.tile(np.arange(page), 2).astype(np.int32)
+
+    one = _mini_pool(name, page)
+    one.write_tokens(k, v, pids, slots)
+    two = _mini_pool(name, page)
+    two.write_tokens(k[:, :page], v[:, :page], pids[:page], slots[:page])
+    two.write_tokens(k[:, page:], v[:, page:], pids[page:], slots[page:])
+    np.testing.assert_array_equal(one.k_pages, two.k_pages)
+    np.testing.assert_array_equal(one.k_scales, two.k_scales)
+    np.testing.assert_array_equal(one.v_pages, two.v_pages)
+
+
+@pytest.mark.parametrize("name", ["int8", "fp8"])
+def test_partial_page_write_requantises_in_band(name):
+    """Growing a half-written page re-quantises it: earlier rows absorb at
+    most one extra rounding step, later rows land fresh; empty slots stay
+    exact zeros."""
+    rng = np.random.default_rng(9)
+    page = 4
+    k = jnp.asarray(rng.normal(size=(2, 3, 2, 8)), jnp.float32)
+    pool = _mini_pool(name, page)
+    pool.write_tokens(k[:, :2], None if pool.share_kv else k[:, :2],
+                      np.zeros(2, np.int32), np.arange(2, dtype=np.int32))
+    pool.write_tokens(k[:, 2:], None if pool.share_kv else k[:, 2:],
+                      np.zeros(1, np.int32), np.asarray([2], np.int32))
+    deq = kv_quant.dequantize_pages(
+        pool.k_pages[:, :, 0], pool.k_scales[:, :, 0], name
+    )  # [L, Hkv, page, dk]
+    want = np.asarray(k.transpose(0, 2, 1, 3))  # [L, Hkv, S, dk]
+    band = 0.05 if name == "int8" else 0.3  # two lossy passes for rows 0-1
+    np.testing.assert_allclose(deq[:, :, :3], want, atol=band)
+    assert bool((deq[:, :, 3:] == 0.0).all())  # untouched slot: exact zero
+
+
+def test_pool_dtype_is_single_source_of_truth():
+    pool = _mini_pool("int8")
+    assert pool.kv_dtype == "int8" and pool.kv_bytes == 1 and pool.quantized
+    assert pool.k_pages.dtype == pool.v_pages.dtype == jnp.int8
+    fp32 = _mini_pool("float32")
+    assert fp32.k_scales is None and not fp32.quantized and fp32.kv_bytes == 4
+    with pytest.raises(ValueError, match="unsupported kv dtype"):
+        _mini_pool("int4")
+
+
+# --- tile solver sees real bytes -------------------------------------------
+
+def test_inflight_bound_raises_min_n_for_quantized_pools():
+    """kv_bytes=1 halves the bytes each KV row puts in flight, so the
+    DMA-saturation bound (constraint ②) doubles the minimum feasible n."""
+    kw = dict(head_dim=64, page_size=PAGE, q_bytes=4)
+    n_bf16 = min(t.n for t in feasible_tiles(kv_bytes=2, **kw))
+    n_int8 = min(t.n for t in feasible_tiles(kv_bytes=1, **kw))
+    assert n_bf16 == 64 and n_int8 == 128
+
+
+def test_small_vmem_budget_unlocks_larger_tiles_for_int8():
+    """Constraint ①: halved payload bytes admit KV tiles a bf16 pool
+    cannot fit on the same (tight) VMEM budget."""
+    tight = TpuSpec(vmem_bytes=700 * 1024)
+    kw = dict(spec=tight, head_dim=64, page_size=PAGE, q_bytes=4)
+    max_bf16 = max(t.n for t in feasible_tiles(kv_bytes=2, **kw))
+    max_int8 = max(t.n for t in feasible_tiles(kv_bytes=1, **kw))
+    assert max_int8 > max_bf16
+
+
+def test_backend_derives_kv_bytes_from_dtype():
+    be = PatAttentionBackend(8, 4, 64, kv_dtype="int8", q_dtype_bytes=4,
+                             config=PatConfig(impl="xla", merge_impl="xla"))
+    assert be.selector.kv_bytes == 1 and be.selector.q_bytes == 4
+    # legacy byte-width callers resolve to the named non-quantized dtype
+    legacy = PatAttentionBackend(8, 4, 64, kv_dtype_bytes=4)
+    assert legacy.kv_dtype == "float32" and legacy.selector.kv_bytes == 4
+
+
+# --- tuned configs never cross dtypes --------------------------------------
+
+def test_bf16_tuned_config_not_served_for_int8_pool(tmp_path):
+    from repro.core.tile_config import LaunchConfig
+
+    path = str(tmp_path / "tuning.json")
+    bt, kv, _ = tree_batch(np.random.default_rng(1), 8)
+    tc = TuningCache(path)
+    key = shape_key("pat", PAGE, 8, 4, 64, bt.shape[0], int(kv.max()),
+                    kv_dtype="bfloat16")
+    tc.record(key, LaunchConfig(m_max=8))
+    tc.save()
+
+    def backend(dtype):
+        return PatAttentionBackend(
+            8, 4, 64, kv_dtype=dtype, q_dtype_bytes=4,
+            config=PatConfig(impl="xla", merge_impl="xla", tuning_cache=path),
+        )
+
+    b16 = backend("bfloat16")
+    b16.plan(bt, kv)
+    sel = b16.cache._selector_for(bt.shape[0], int(kv.max()), PAGE)
+    assert sel.launch.source == "tuned" and sel.launch.m_max == 8
+
+    b8 = backend("int8")
+    b8.plan(bt, kv)
+    # same shape, different pool dtype: the bf16 entry must NOT apply
+    assert b8.cache._selector_for(bt.shape[0], int(kv.max()), PAGE) \
+        is b8.selector
+
+
+# --- engine integration ----------------------------------------------------
+
+def test_engine_decodes_with_int8_pool():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serving.engine import Engine
+
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = Engine(
+        params, cfg, num_pages=64,
+        pat_config=PatConfig(impl="xla", merge_impl="xla", kv_dtype="int8"),
+        eos_id=-1,
+    )
+    assert eng.kv.kv_dtype == "int8" and eng.kv.k_pages.dtype == jnp.int8
+    assert eng.backend.kv_dtype == "int8" and eng.backend.selector.kv_bytes == 1
+    rng = np.random.default_rng(5)
+    eng.submit(rng.integers(3, cfg.vocab_size, 20).tolist(), max_new_tokens=3)
+    eng.submit(rng.integers(3, cfg.vocab_size, 9).tolist(), max_new_tokens=3)
+    m = eng.run()
+    assert len(m.finished) == 2
+    assert all(len(r.generated) == 3 for r in m.finished)
+    # pages were written through the requantising path: live scales > 0
+    assert int((np.asarray(eng.kv.k_scales) > 0).sum()) > 0
+
+
+def test_engine_rejects_quantized_pool_on_non_paged_arch():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serving.engine import Engine
+
+    cfg = get_config("mamba2-1.3b").reduced(dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="needs paged KV on every layer"):
+        Engine(params, cfg, num_pages=32,
+               pat_config=PatConfig(impl="xla", merge_impl="xla",
+                                    kv_dtype="fp8"))
