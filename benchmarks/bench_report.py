@@ -28,6 +28,14 @@ across PRs (ISSUE 2):
                        footprint, interleaved fused wall-clock, and max
                        parity error vs the fp32 oracle
                        (benchmarks/kv_quant.section).
+  * ``sharded_decode`` — ISSUE 8: 4-device host-mesh scale-out — parity
+                       of sharded vs single-device fused decode (GQA
+                       KV-head parallel, MLA KV-sequence parallel incl.
+                       cross-shard split/merge, int8 pools), modeled
+                       per-device KV bytes vs the even single/N split,
+                       and the prefix-aware placement counters
+                       (benchmarks/sharded_decode.section; runs in a
+                       subprocess with forced host devices).
   * ``e2e_serving``  — ISSUE 4: trace-replay SLO surface — TTFT/TPOT
                        p50/p95/p99 (deterministic virtual token units +
                        measured wall ms) for chunked vs monolithic prefill
@@ -114,6 +122,7 @@ def collect(
         kv_quant as kv_quant_bench,
         memory_traffic,
         overhead,
+        sharded_decode,
     )
 
     if tuning_cache is None and os.path.exists(DEFAULT_TUNING_PATH):
@@ -165,6 +174,7 @@ def collect(
         "kv_quant": kv_quant_bench.section(
             fast=fast, verbose=verbose, tuning_cache=tuning_cache
         ),
+        "sharded_decode": sharded_decode.section(fast=fast, verbose=verbose),
     }
 
 

@@ -25,6 +25,13 @@ bytes <= 0.55x bf16, per-dtype parity-error ceilings vs the fp32 oracle,
 and the int8 fused step within 10% of bf16 wall-clock (interleaved
 min-of-repeats in the same run).
 
+ISSUE 8 adds the multi-device gates, all within-artifact on the 4-way
+forced host mesh: sharded decode must match the single-device fused
+oracle to fp32 tightness (GQA head-parallel, MLA seq-parallel including
+cross-shard split/merge, int8 pools), modeled per-device KV bytes must
+stay <= 1.15x the even single/N split, and prefix-aware placement must
+keep >= 90% of shared-prefix page references shard-local.
+
 Usage:
     python benchmarks/check_regression.py [--current PATH] [--baseline PATH]
     python benchmarks/check_regression.py --fresh   # re-measure, then diff
@@ -57,6 +64,18 @@ KV_QUANT_BYTES_RATIO = 0.55
 # (max-abs error; measured ~0.011 int8 / ~0.047 fp8 — see DESIGN.md §9's
 # tolerance methodology). bf16 is a round-off sanity bound.
 KV_QUANT_PARITY_CEILING = {"bf16": 0.02, "int8": 0.05, "fp8": 0.15}
+# --- multi-device scale-out gates (ISSUE 8), within-artifact --------------
+# Sharded decode reorders the same fp32 reductions (per-shard partials +
+# one online-softmax merge), so parity vs the single-device fused oracle
+# is fp32-tight — measured 0 (head) to ~2e-7 (seq), ceiling leaves slack
+# for platform-dependent reduction order only.
+SHARDED_PARITY_CEILING = 5e-5
+# Modeled per-device KV bytes vs the even single/N split; 1.15 allows the
+# padding of ragged shard-local page counts, not systematic imbalance.
+SHARDED_BYTES_RATIO = 1.15
+# Prefix-aware placement must keep shared-prefix page references on the
+# shard that owns the prefix.
+SHARDED_PLACEMENT_FLOOR = 0.90
 
 
 def git_baseline(path: str = "benchmarks/BENCH_decode_attention.json") -> Optional[Dict]:
@@ -213,6 +232,41 @@ def compare(baseline: Dict, current: Dict) -> List[str]:
                 f"{int8['wall_vs_bf16']:.2f}x bf16 wall-clock "
                 f"(must be <= {1 + WALL_CLOCK_THRESHOLD:.2f}x)"
             )
+    # --- multi-device scale-out gates (ISSUE 8) ----------------------------
+    # All within-artifact (sharded and single-device oracle run in the same
+    # subprocess on the same forced host mesh); a missing section skips.
+    c_s = current.get("sharded_decode", {})
+    for scen in ("gqa_head", "mla_seq", "int8_seq"):
+        s = c_s.get(scen, {})
+        err = s.get("parity_max_err")
+        if err is not None and err > SHARDED_PARITY_CEILING:
+            failures.append(
+                f"sharded_decode.{scen}: parity error vs single-device "
+                f"fused oracle {err:.2e} exceeds the "
+                f"{SHARDED_PARITY_CEILING:.0e} ceiling"
+            )
+        ratio = s.get("ratio_vs_even")
+        if ratio is not None and ratio > SHARDED_BYTES_RATIO + 1e-9:
+            failures.append(
+                f"sharded_decode.{scen}: modeled per-device KV bytes are "
+                f"{ratio:.3f}x the even single/N split "
+                f"(must be <= {SHARDED_BYTES_RATIO})"
+            )
+    # structural: the MLA seq scenario is built so every query spans all
+    # shards — if no query needs the cross-shard merge the scenario
+    # silently stopped exercising the split/merge path
+    if c_s.get("mla_seq", {}).get("split_queries") == 0:
+        failures.append(
+            "sharded_decode.mla_seq.split_queries is 0 "
+            "(cross-shard split/merge path not exercised)"
+        )
+    frac = c_s.get("placement", {}).get("fraction_local")
+    if frac is not None and frac < SHARDED_PLACEMENT_FLOOR:
+        failures.append(
+            f"sharded_decode.placement: only {100 * frac:.1f}% of "
+            f"shared-prefix page references are shard-local "
+            f"(must be >= {100 * SHARDED_PLACEMENT_FLOOR:.0f}%)"
+        )
     for wl, bal in sorted(c_f.get("balance", {}).items()):
         # acceptance bound: rebalanced max-item step count within 2x mean
         if bal.get("ratio_after", 0.0) > 2.0 + 1e-9:

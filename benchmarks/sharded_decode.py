@@ -1,0 +1,298 @@
+"""ISSUE 8 measurement: multi-device prefix-aware decode on a forced
+host mesh.
+
+The parent process spawns a child interpreter with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the device count
+is fixed at backend init, so the parent's single-device JAX cannot grow a
+mesh in-process). The child runs on a REAL 4-device mesh — every
+shard_map collective and per-device kernel launch is exercised, just on
+host devices — and prints one JSON line the parent folds into the
+``sharded_decode`` section of BENCH_decode_attention.json.
+
+Scenarios (all fp32-parity-checked against the single-device fused path
+in the same child run):
+
+  * ``gqa_head``  — shared-prefix GQA batch, KV-head parallel: every
+    shard runs the unchanged fused forward+merge on its head slice; per-
+    device modeled KV bytes are exactly single-device / N by
+    construction (each shard DMAs the same pages at Hkv/N heads).
+  * ``mla_seq``   — MLA-style shared-KV batch with long per-query KV,
+    KV-sequence parallel: per-shard partial attention + one (dv+2)-fp32
+    cross-shard merge per row; split/merge items are exercised
+    (``split_queries`` > 0). Per-device modeled bytes are the MAX over
+    shards of the shard plan's pages — balanced placement keeps it near
+    single-device / N.
+  * ``int8_seq``  — the quantized pool datapath (per-page scale
+    sidecars, in-datapath dequant) through the sequence-parallel path.
+  * ``placement`` — prefix-aware page placement: `ShardedPageAllocator`
+    + the scheduler's prefer-shard hint on a shared-prefix workload;
+    reports the fraction of shared-prefix page reads served
+    shard-locally (gated >= 0.9 by check_regression).
+
+check_regression gates (within-artifact): parity <= 5e-5 on every
+scenario, per-device modeled bytes <= (single-device / N) * 1.15, and
+placement fraction_local >= 0.9.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict
+
+import numpy as np
+
+PAGE = 16
+N_SHARDS = 4
+CHILD_TIMEOUT_S = 540
+
+
+# --- scenario construction (host-side, numpy only) --------------------------
+
+
+def _shared_batch(batch: int, shared_pages: int, priv: int, budget: int = 2):
+    """vLLM-style shared-prefix batch (same shape as the dispatch
+    benchmarks' workload): one radix-shared prefix + private pages +
+    pre-allocated generation budget."""
+    rows, nxt = [], shared_pages
+    prefix = list(range(shared_pages))
+    kv = np.zeros(batch, np.int64)
+    for b in range(batch):
+        mine = list(range(nxt, nxt + priv + budget))
+        nxt += priv + budget
+        rows.append(prefix + mine)
+        kv[b] = (shared_pages + priv) * PAGE + 1 + b % 7
+    bt = -np.ones((batch, shared_pages + priv + budget), np.int32)
+    for b, r in enumerate(rows):
+        bt[b, : len(r)] = r
+    return bt, kv, nxt
+
+
+def _long_kv_batch(batch: int, kv_len: int):
+    """Strided long-KV batch: query b's j-th page is j*batch + b, so with
+    batch*ppq exactly covering the pool every query SPANS all contiguous
+    shard ranges with the same page count per shard — the cross-shard
+    partial+merge path carries real weight for every query (each is
+    covered by N shard-local items), and per-device bytes stay exactly
+    balanced."""
+    ppq = -(-kv_len // PAGE)
+    bt = (
+        np.arange(ppq, dtype=np.int32)[None, :] * batch
+        + np.arange(batch, dtype=np.int32)[:, None]
+    )
+    kv = np.full(batch, kv_len, np.int64)
+    return bt, kv, batch * ppq
+
+
+# --- child: runs on the forced multi-device mesh ----------------------------
+
+
+def _pack_bytes(bt, kv, selector, hq, hkv, dk, kv_dtype):
+    from repro.core import pack_scheduler
+
+    pack = pack_scheduler.schedule(
+        bt, kv, PAGE, strategy="pat", rows_per_query=hq // hkv,
+        max_query_rows=selector.max_query_rows, selector=selector,
+    )
+    return pack_scheduler.plan_kv_bytes(pack, dk, hkv, kv_dtype=kv_dtype)
+
+
+def child_main(fast: bool) -> Dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import kv_quant as kvq
+    from repro.core import pack_scheduler
+    from repro.core.attention import PatAttentionBackend, PatConfig
+    from repro.core.shard_spec import ShardSpec
+    from repro.distributed.sharded_decode import ShardedPatBackend
+    from repro.launch.mesh import make_kv_mesh
+    from repro.serving.kv_cache import ShardedPageAllocator
+
+    n = N_SHARDS
+    if jax.device_count() < n:
+        raise SystemExit(
+            f"child needs {n} devices, got {jax.device_count()} — "
+            "XLA_FLAGS forcing failed"
+        )
+    mesh = make_kv_mesh(n)
+    rng = np.random.default_rng(11)
+    cfg = PatConfig(impl="xla", merge_impl="xla", kv_dtype="float32")
+    out: Dict = {"devices": jax.device_count(), "num_shards": n}
+
+    def parity(a, b):
+        return float(jnp.max(jnp.abs(a - b)))
+
+    # --- gqa_head ----------------------------------------------------------
+    B = 16 if fast else 48
+    hq, hkv, dk = 8, 4, 64
+    bt, kv, used = _shared_batch(B, shared_pages=4, priv=2)
+    P = 1 << (used - 1).bit_length()
+    q = jnp.asarray(rng.standard_normal((B, hq, dk)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((hkv, P, PAGE, dk)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((hkv, P, PAGE, dk)), jnp.float32)
+    single = PatAttentionBackend(
+        hq, hkv, dk, config=cfg, kv_dtype="float32", kv_dtype_bytes=4
+    )
+    ref = single(q, kp, vp, bt, kv)
+    single_bytes = _pack_bytes(bt, kv, single.selector, hq, hkv, dk, "float32")
+
+    head_be = ShardedPatBackend(
+        hq, hkv, dk, mesh=mesh, shard=ShardSpec(num_shards=n, mode="head"),
+        num_pages=P, config=cfg, kv_dtype="float32", kv_dtype_bytes=4,
+    )
+    head_out = head_be.attend(q, kp, vp, head_be.plan(bt, kv))
+    # each shard DMAs the plan's pages at its LOCAL head count
+    head_dev_bytes = _pack_bytes(
+        bt, kv, head_be.selector, hq // n, hkv // n, dk, "float32"
+    )
+    out["gqa_head"] = {
+        "batch": B, "hq": hq, "hkv": hkv,
+        "parity_max_err": parity(head_out, ref),
+        "single_bytes": int(single_bytes),
+        "per_device_bytes": int(head_dev_bytes),
+        "ratio_vs_even": head_dev_bytes / (single_bytes / n),
+    }
+
+    # --- mla_seq -----------------------------------------------------------
+    Bm = 8 if fast else 16
+    kv_len = 256 if fast else 512
+    hqm, dkm, dvm = 16, 96, 64
+    btm, kvm, usedm = _long_kv_batch(Bm, kv_len)
+    Pm = usedm  # pool exactly covered -> contiguous ranges balance
+    qm = jnp.asarray(rng.standard_normal((Bm, hqm, dkm)), jnp.float32)
+    kpm = jnp.asarray(rng.standard_normal((1, Pm, PAGE, dkm)), jnp.float32)
+    single_m = PatAttentionBackend(
+        hqm, 1, dkm, v_head_dim=dvm, config=cfg, share_kv=True,
+        kv_dtype="float32", kv_dtype_bytes=4,
+    )
+    ref_m = single_m(qm, kpm, None, btm, kvm)
+    single_m_bytes = _pack_bytes(
+        btm, kvm, single_m.selector, hqm, 1, dkm, "float32"
+    )
+    seq_be = ShardedPatBackend(
+        hqm, 1, dkm, mesh=mesh, shard=ShardSpec(num_shards=n, mode="seq"),
+        num_pages=Pm, v_head_dim=dvm, config=cfg, share_kv=True,
+        kv_dtype="float32", kv_dtype_bytes=4,
+    )
+    wpm = seq_be.plan(btm, kvm)
+    seq_out = seq_be.attend(qm, kpm, None, wpm)
+    shard_bytes = wpm.shard_kv_bytes(dkm, 1, kv_dtype="float32")
+    out["mla_seq"] = {
+        "batch": Bm, "kv_len": kv_len, "hq": hqm,
+        "parity_max_err": parity(seq_out, ref_m),
+        "split_queries": int(wpm.num_split_queries),
+        "single_bytes": int(single_m_bytes),
+        "per_device_bytes_max": int(max(shard_bytes)),
+        "per_device_bytes": [int(x) for x in shard_bytes],
+        "ratio_vs_even": max(shard_bytes) / (single_m_bytes / n),
+    }
+
+    # --- int8_seq ----------------------------------------------------------
+    cfg8 = PatConfig(impl="xla", merge_impl="xla", kv_dtype="int8")
+    kq, ksc = kvq.quantize_pages(kp, "int8")
+    vq, vsc = kvq.quantize_pages(vp, "int8")
+    ref8 = PatAttentionBackend(hq, hkv, dk, config=cfg8, kv_dtype="int8")(
+        q, kq, vq, bt, kv, k_scales=ksc, v_scales=vsc
+    )
+    seq8 = ShardedPatBackend(
+        hq, hkv, dk, mesh=mesh, shard=ShardSpec(num_shards=n, mode="seq"),
+        num_pages=P, config=cfg8, kv_dtype="int8",
+    )
+    out8 = seq8.attend(
+        q, kq, vq, seq8.plan(bt, kv), k_scales=ksc, v_scales=vsc
+    )
+    out["int8_seq"] = {"parity_max_err": parity(out8, ref8)}
+
+    # --- placement ---------------------------------------------------------
+    # Two prefix cohorts allocated through the sharded allocator with the
+    # scheduler's prefer-shard hint: each request's suffix pages chase its
+    # prefix's shard, so shared-prefix reads stay shard-local.
+    pool = ShardedPageAllocator(256, n)
+    reqs_per_prefix = 4 if fast else 8
+    rows, kvs = [], []
+    for _ in range(2):
+        prefix = pool.alloc(4)
+        for r in range(reqs_per_prefix):
+            pool.incref(prefix)
+            sfx = pool.alloc(3, prefer=pool.shard_of(prefix[-1]))
+            rows.append(prefix + sfx)
+            kvs.append((4 + 2) * PAGE + 3 + r)
+    btp = -np.ones((len(rows), max(len(r) for r in rows)), np.int32)
+    for i, r in enumerate(rows):
+        btp[i, : len(r)] = r
+    rep = pack_scheduler.placement_report(
+        btp, np.asarray(kvs, np.int64), PAGE, pool.shard_of,
+        head_dim=dk, num_kv_heads=hkv, kv_dtype="float32",
+    )
+    rep.update(pool.placement)
+    out["placement"] = rep
+    return out
+
+
+# --- parent: subprocess orchestration ---------------------------------------
+
+
+def _child_env() -> Dict[str, str]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={N_SHARDS}"
+    ).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root, env.get("PYTHONPATH"))
+        if p
+    )
+    return env
+
+
+def section(fast: bool = False, verbose: bool = True) -> Dict:
+    """The ``sharded_decode`` section of BENCH_decode_attention.json —
+    measured in a forced 4-device child process."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cmd = [sys.executable, "-m", "benchmarks.sharded_decode", "--child"]
+    if fast:
+        cmd.append("--fast")
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        cmd, env=_child_env(), cwd=root, capture_output=True, text=True,
+        timeout=CHILD_TIMEOUT_S,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded_decode child failed (rc={proc.returncode}):\n"
+            + proc.stderr[-2000:]
+        )
+    line = next(
+        ln for ln in reversed(proc.stdout.splitlines())
+        if ln.startswith("{")
+    )
+    res = json.loads(line)
+    res["collect_time_s"] = round(time.perf_counter() - t0, 2)
+    if verbose:
+        gh, ms = res["gqa_head"], res["mla_seq"]
+        print(
+            f"[sharded_decode] {res['num_shards']}-device mesh: "
+            f"head parity {gh['parity_max_err']:.2e} "
+            f"(bytes/dev {gh['ratio_vs_even']:.3f}x even), "
+            f"seq parity {ms['parity_max_err']:.2e} "
+            f"(bytes/dev {ms['ratio_vs_even']:.3f}x even, "
+            f"{ms['split_queries']} split), "
+            f"int8 parity {res['int8_seq']['parity_max_err']:.2e}, "
+            f"placement {res['placement']['fraction_local']:.3f} local"
+        )
+    return res
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        print(json.dumps(child_main("--fast" in sys.argv)))
+    else:
+        from benchmarks import bench_report
+
+        res = section(fast="--fast" in sys.argv)
+        bench_report.update_section("sharded_decode", res)

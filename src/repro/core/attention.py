@@ -54,6 +54,12 @@ class PatConfig:
     # float32 | bfloat16 | int8 | fp8. None = the engine's default pool
     # dtype (float32 on the CPU container).
     kv_dtype: Optional[str] = None
+    # Multi-device decode (ISSUE 8): shard the KV pool over a kv_shards-way
+    # 1-D mesh. shard_mode "head" (GQA head-parallel) / "seq" (KV-sequence
+    # parallel) / "auto" (head when Hkv divides evenly, else seq). 1 = the
+    # unsharded single-device path.
+    kv_shards: int = 1
+    shard_mode: str = "auto"
 
 
 class PatAttentionBackend:
@@ -76,6 +82,7 @@ class PatAttentionBackend:
         share_kv: bool = False,
         kv_dtype: Optional[str] = None,
         q_dtype_bytes: Optional[int] = None,
+        mesh_tag: str = "1",
     ):
         self.config = config or PatConfig()
         self.num_q_heads = num_q_heads
@@ -127,6 +134,7 @@ class PatAttentionBackend:
             bucket=self.config.bucket,
             tuning=tuning,
             kv_dtype=kv_dtype,
+            mesh_tag=mesh_tag,
         )
 
     def plan(self, block_tables: np.ndarray, kv_lens: np.ndarray) -> WorkPlan:

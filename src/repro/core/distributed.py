@@ -4,9 +4,11 @@ The paper's long-KV split generalised to cluster scope with EXPLICIT
 collectives (DESIGN.md §2): the KV cache's sequence dim is sharded over a
 mesh axis; every shard computes a *partial* attention (unnormalised
 numerator + online-softmax stats) over its local KV slice, and the shards
-combine with exactly the paper's merge algebra — implemented with
-`jax.lax` collectives inside `shard_map` so the communication volume is
-explicit and tiny: (dv + 2) floats per (query, head) per shard.
+combine with exactly the paper's merge algebra — one `jax.lax.all_gather`
+inside `shard_map` (so the communication volume is explicit and tiny:
+(dv + 2) floats per (query, head) per shard) feeding the PR 2 merge
+kernel via `cross_shard_merge`, the single combiner shared with the paged
+sequence-parallel path (`distributed/sharded_decode.py`, ISSUE 8).
 
 This is the hand-written counterpart of the GSPMD-derived §Perf A2 lever;
 tests assert it matches the dense oracle bit-for-bit (up to fp tolerance),
@@ -15,14 +17,12 @@ and its collective payload is the merge triple only.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.ref import dense_attention_ref
+from repro.kernels import merge as merge_mod
+from repro.kernels import ref as ref_mod
 
 
 def _shard_map(fn, *, mesh, in_specs, out_specs, no_check_replication):
@@ -73,6 +73,43 @@ def _partial_decode(q, k, v, kv_base, kv_len):
     )
 
 
+def cross_shard_merge(
+    num: jax.Array,  # [R, dv] fp32 unnormalised numerators (local shard)
+    m: jax.Array,  # [R] fp32 row maxima
+    l: jax.Array,  # [R] fp32 row denominators (unweighted)
+    axis: str,
+    *,
+    merge_impl: str = "xla",
+    interpret: bool = True,
+) -> jax.Array:
+    """Combines per-shard attention partials across a mesh axis.
+
+    Must run inside `shard_map`. One all_gather of (num, m, l) — exactly
+    (dv + 2) fp32 per (row, shard), independent of KV length — then the
+    PR 2 merge kernel (`kernels/merge.py`, or its jnp oracle when
+    ``merge_impl != "pallas"``) combines the S partials of each row via
+    the online-softmax algebra. Returns [R, dv] fp32, replicated across
+    ``axis``. This is the ONE cross-shard combiner: both the dense
+    split-KV path below and the paged sequence-parallel path
+    (`distributed/sharded_decode.py`) route through it.
+    """
+    R, dv = num.shape
+    nums = jax.lax.all_gather(num, axis)  # [S, R, dv]
+    stats = jax.lax.all_gather(jnp.stack([m, l], axis=-1), axis)  # [S, R, 2]
+    S = nums.shape[0]
+    parts = nums.reshape(S * R, dv)
+    st = stats.reshape(S * R, 2)
+    # Row r's partials live at flat ids {s*R + r}: an iota table, no host
+    # work, so the compact-table merge kernel applies unchanged.
+    table = (
+        jnp.arange(S, dtype=jnp.int32)[None, :] * R
+        + jnp.arange(R, dtype=jnp.int32)[:, None]
+    )  # [R, S]
+    if merge_impl == "pallas":
+        return merge_mod.merge_rows(parts, st, table, interpret=interpret)
+    return ref_mod.merge_rows_ref(parts, st, table)
+
+
 def split_kv_decode_attention(
     q: jax.Array,  # [B, Hq, dk] (replicated across the kv axis)
     k_cache: jax.Array,  # [B, L, Hkv, dk] (L sharded over `axis`)
@@ -80,6 +117,9 @@ def split_kv_decode_attention(
     kv_lens: jax.Array,  # [B]
     mesh,
     axis: str = "data",
+    *,
+    merge_impl: str = "xla",
+    interpret: bool = True,
 ) -> jax.Array:
     """Cross-device split-KV decode: per-shard partials + merge collective.
 
@@ -94,18 +134,16 @@ def split_kv_decode_attention(
     def shard_fn(q, k, v, kv_lens):
         idx = jax.lax.axis_index(axis)
         num, m, l = _partial_decode(q, k, v, idx * l_loc, kv_lens)
-        # merge across shards: gather the (num, m, l) triples (tiny)
-        nums = jax.lax.all_gather(num, axis)  # [S, B, Hq, dv]
-        ms = jax.lax.all_gather(m, axis)  # [S, B, Hq]
-        ls = jax.lax.all_gather(l, axis)
-        m_max = jnp.max(ms, axis=0)
-        m_safe = jnp.where(jnp.isfinite(m_max), m_max, 0.0)
-        w = jnp.where(jnp.isfinite(ms), jnp.exp(ms - m_safe[None]), 0.0)
-        den = jnp.sum(w * ls, axis=0)
-        out = jnp.sum(w[..., None] * nums, axis=0) / jnp.maximum(
-            den[..., None], 1e-30
+        B, Hq, dv = num.shape
+        out = cross_shard_merge(
+            num.reshape(B * Hq, dv),
+            m.reshape(B * Hq),
+            l.reshape(B * Hq),
+            axis,
+            merge_impl=merge_impl,
+            interpret=interpret,
         )
-        return out.astype(q.dtype)
+        return out.reshape(B, Hq, dv).astype(q.dtype)
 
     fn = _shard_map(
         shard_fn,

@@ -76,6 +76,7 @@ class PlanCache:
         bucket: bool = True,
         tuning: Optional[tuning_cache.TuningCache] = None,
         kv_dtype: str = "float32",
+        mesh_tag: str = "1",
     ):
         self.selector = selector
         self.num_q_heads = num_q_heads
@@ -87,6 +88,10 @@ class PlanCache:
         self.bucket = bucket
         # part of the tuning shape key: tuned launches never cross dtypes
         self.kv_dtype = kv_dtype
+        # ShardSpec.tag ("1" single device, "head4"/"seq4" sharded): keys
+        # both the plan fingerprint and the tuning lookup, so plans and
+        # tuned launches never cross mesh layouts (ISSUE 8)
+        self.mesh_tag = mesh_tag
         # Persistent tuned launch parameters (DESIGN.md §8), consulted per
         # fingerprint miss; None or a key miss -> the selector's heuristic
         # LaunchConfig. Rebound selectors are cached per shape key so the
@@ -108,7 +113,7 @@ class PlanCache:
         key = tuning_cache.shape_key(
             self.strategy, page_size, self.num_q_heads, self.num_kv_heads,
             self.selector.head_dim, batch_size, max_kv_len,
-            kv_dtype=self.kv_dtype,
+            kv_dtype=self.kv_dtype, mesh=self.mesh_tag,
         )
         cached = self._tuned_selectors.get(key)
         if cached is not None:
@@ -133,7 +138,8 @@ class PlanCache:
     ) -> work_plan.WorkPlan:
         kv_lens = np.asarray(kv_lens, np.int64)
         key = work_plan.plan_fingerprint(
-            block_tables, kv_lens, page_size, self.strategy
+            block_tables, kv_lens, page_size, self.strategy,
+            mesh=self.mesh_tag,
         )
         if key == self._key and self._plan is not None:
             self.stats.hits += 1

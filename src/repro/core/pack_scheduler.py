@@ -551,3 +551,64 @@ def plan_total_bytes(
         plan, head_dim, num_q_heads, split_aware=split_aware
     )
     return kv + inter
+
+
+def placement_report(
+    block_tables: np.ndarray,
+    kv_lens: np.ndarray,
+    page_size: int,
+    shard_of,
+    *,
+    head_dim: int = 1,
+    num_kv_heads: int = 1,
+    kv_bytes_per_el: int = 2,
+    kv_dtype: Optional[str] = None,
+) -> dict:
+    """Scores prefix-aware placement for one decode batch (ISSUE 8).
+
+    Walks the prefix forest's SHARED nodes (num_queries > 1): every
+    (query, shared page) reference is a page the query's pack must read at
+    each decode step. A reference is *shard-local* when the page's shard
+    (``shard_of``, the seq-parallel contiguous-range map) equals the
+    query's home shard — the shard holding its private tail page, where
+    its new tokens land every step. Cross-shard references are redundant
+    prefix loads that scale-out was supposed to eliminate; the report
+    counts the bytes avoided versus a placement-oblivious pool, where an
+    (N-1)/N fraction of shared bytes would land remotely in expectation.
+    """
+    rows = np.asarray(block_tables)
+    kv = np.asarray(kv_lens)
+    pb = _page_bytes(page_size, head_dim, kv_bytes_per_el, kv_dtype)
+    pb *= num_kv_heads
+    forest = build_forest(rows, kv, page_size)
+    home = {}
+    for b in range(rows.shape[0]):
+        n_pages = -(-int(kv[b]) // page_size)
+        if n_pages > 0:
+            home[b] = shard_of(int(rows[b, n_pages - 1]))
+    total_refs = 0
+    local_refs = 0
+    stack = list(forest)
+    while stack:
+        node = stack.pop()
+        stack.extend(node.children)
+        if node.num_queries <= 1 or not node.pages:
+            continue
+        shards = [shard_of(p) for p in node.pages]
+        for qid in node.query_ids:
+            h = home.get(qid)
+            if h is None:
+                continue
+            total_refs += len(shards)
+            local_refs += sum(1 for s in shards if s == h)
+    total_bytes = total_refs * pb
+    local_bytes = local_refs * pb
+    frac = local_refs / total_refs if total_refs else 1.0
+    return {
+        "shared_page_refs": int(total_refs),
+        "local_page_refs": int(local_refs),
+        "fraction_local": float(frac),
+        "shared_prefix_bytes": int(total_bytes),
+        "local_prefix_bytes": int(local_bytes),
+        "cross_shard_bytes": int(total_bytes - local_bytes),
+    }

@@ -1,0 +1,49 @@
+"""Mesh-shard configuration for the multi-device decode datapath.
+
+One tiny value object shared by the KV pool (`serving/kv_cache.py`), the
+plan/tuning caches (mesh-tagged keys), and the sharded attention paths
+(`distributed/sharded_decode.py`), so every layer agrees on the axis name,
+shard count, and parallelism mode:
+
+  * ``mode="head"`` — KV-head parallel (GQA): the page pool's Hkv axis is
+    sharded; every shard runs the full fused kernel on its head slice and
+    the outputs concatenate along heads. Zero cross-shard math.
+  * ``mode="seq"``  — KV-sequence parallel (MLA / long prefixes): the page
+    pool's PAGE axis is sharded into contiguous ranges; every shard runs
+    partial attention over its local pages and the PR 2 merge kernel
+    combines the (num, m, l) partials across shards.
+
+``tag`` feeds the TuningCache shape key and the WorkPlan fingerprint so a
+single-device-tuned LaunchConfig (or plan) is never served for a sharded
+pool.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MODES = ("head", "seq")
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    num_shards: int = 1
+    mode: str = "seq"
+    axis: str = "kv"
+
+    def __post_init__(self):
+        if self.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1: {self.num_shards}")
+        if self.num_shards > 1 and self.mode not in MODES:
+            raise ValueError(f"unknown shard mode: {self.mode!r}")
+
+    @property
+    def active(self) -> bool:
+        return self.num_shards > 1
+
+    @property
+    def tag(self) -> str:
+        """Mesh tag for tuning keys / plan fingerprints ("1" = unsharded)."""
+        if not self.active:
+            return "1"
+        return f"{self.mode}{self.num_shards}"

@@ -41,17 +41,23 @@ def shape_key(
     batch_size: int,
     max_kv_len: int,
     kv_dtype: str = "float32",
+    mesh: str = "1",
 ) -> str:
     """Shape-bucket key: structural config exact, batch/KV pow2-bucketed.
 
     The pool dtype is part of the key: tile feasibility depends on
     kv_bytes (a tuned n for bf16 can be infeasible — or badly undersized —
-    for an int8 pool), so tuned configs must never leak across dtypes."""
+    for an int8 pool), so tuned configs must never leak across dtypes.
+    The mesh/shard tag (``ShardSpec.tag``: "1", "head4", "seq4", ...) is
+    part of the key for the same reason (ISSUE 8): a sharded pool sees
+    per-shard head counts or KV lengths, so a single-device-tuned config
+    must never be served for it."""
     return (
         f"{strategy}|p{page_size}|hq{num_q_heads}|hkv{num_kv_heads}"
         f"|d{head_dim}|b{_pow2_bucket(batch_size)}"
         f"|kv{_pow2_bucket(max_kv_len)}"
         f"|{DTYPE_TAGS[kv_dtype]}"
+        f"|ms{mesh}"
     )
 
 

@@ -1119,11 +1119,19 @@ def refresh_lengths(wp: WorkPlan, kv_lens: np.ndarray) -> WorkPlan:
 
 
 def plan_fingerprint(
-    block_tables: np.ndarray, kv_lens: np.ndarray, page_size: int, strategy: str
+    block_tables: np.ndarray,
+    kv_lens: np.ndarray,
+    page_size: int,
+    strategy: str,
+    mesh: str = "1",
 ) -> int:
     """Fingerprint for the lazy-update cache: the plan depends only on the
     block-table structure. With vLLM-style pre-allocated tables the
     fingerprint is stable across every decode step of a batch (kv growth is
     handled by `refresh_lengths` masking); only arrivals/departures/new
-    block assignments change it — exactly the paper's trigger set."""
-    return hash((strategy, page_size, block_tables.shape, block_tables.tobytes()))
+    block assignments change it — exactly the paper's trigger set. The
+    mesh tag (``ShardSpec.tag``) keys sharded plans separately: the same
+    block table schedules differently per shard layout (ISSUE 8)."""
+    return hash(
+        (strategy, page_size, mesh, block_tables.shape, block_tables.tobytes())
+    )

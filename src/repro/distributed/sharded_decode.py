@@ -1,0 +1,800 @@
+"""Multi-device paged decode attention over a 1-D kv mesh (ISSUE 8).
+
+Two parallelisms over the SAME pack-forward-merge structure, selected by
+`ShardSpec.mode`:
+
+  * ``head`` — KV-head parallel (GQA). The page pool's Hkv axis is
+    sharded; the row-major query layout ([b, hkv, g] head order) means a
+    contiguous Hq slice matches a contiguous Hkv slice, so every shard
+    runs the UNCHANGED fused forward+merge (`ops._forward_merge`) on its
+    head slice and the outputs concatenate along heads. The work plan is
+    built once at LOCAL head counts and replicated — plans are
+    head-count-parametric, so one host schedule serves all shards, and
+    each device launches its own fused kernel under `shard_map` with no
+    host round-trip per step. Zero cross-shard math.
+
+  * ``seq`` — KV-sequence parallel (MLA / long prefixes). The page pool's
+    page axis is sharded into contiguous ranges (shard = page // (P/N),
+    the same map `ShardedPageAllocator` places against). Each shard gets
+    its own work plan over its LOCAL pages (local page ids, local KV
+    lengths); the per-shard plans are padded to COMMON pow2 buckets and
+    stacked with a leading shard axis, so ONE pytree feeds `shard_map`
+    and each device slices out its own step list. Every shard runs the
+    forward with in-kernel normalisation disabled (row_sole = 0),
+    segment-merges its items into per-(query, head) ``(num, m, l)``
+    partials, and `core.distributed.cross_shard_merge` — one all_gather
+    of (dv + 2) fp32 per row per shard feeding the PR 2 merge kernel —
+    combines across shards. A query whose pages live wholly on one shard
+    (the placement invariant) costs that shard only; other shards see no
+    items for it and contribute (0, -inf, 0).
+
+Everything host-side here (table sharding, plan stacking) is numpy, kept
+async-friendly like the pack scheduler; the device path is one jitted
+`shard_map` call per decode step per mode.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import pack_scheduler, work_plan
+from repro.core.attention import PatAttentionBackend, PatConfig
+from repro.core.distributed import _shard_map, cross_shard_merge
+from repro.core.lazy_update import CacheStats
+from repro.core.shard_spec import ShardSpec
+from repro.core.tile_config import LaunchConfig
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import (
+    DeviceGroupArrays,
+    _activity_arrays,
+    _next_pow2,
+    _pad_cols,
+    _pad_rows,
+)
+from repro.kernels import ops, pat_decode
+
+
+# --- host side: seq-parallel table sharding ---------------------------------
+
+
+def shard_block_tables(
+    block_tables: np.ndarray,
+    kv_lens: np.ndarray,
+    page_size: int,
+    num_shards: int,
+    pages_per_shard: int,
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Splits a global paged batch into per-shard LOCAL batches.
+
+    Shard s owns global pages [s*pps, (s+1)*pps); its local table keeps a
+    row's owned pages in global order with LOCAL page ids (global minus
+    the range base — the index into the shard's pool slice). Local KV
+    length is the owned token count: a page's valid tokens always occupy
+    its leading slots, and global per-page token counts follow the pattern
+    full..full, partial?, zero.. (the partial page is the tail), so any
+    in-order subset preserves it and the local batch is just a normal
+    paged batch — the unchanged planner and kernels apply per shard.
+    Pre-allocated (zero-token) pages stay in the owning shard's table;
+    queries with zero LOCAL KV are dropped by the planner, which is why
+    the seq fingerprint includes used-page counts (see
+    `SeqShardedPlanCache`): growth crossing into a page can give a shard
+    its first tokens of a query — a structural change no lazy refresh can
+    express.
+    """
+    bt = np.asarray(block_tables)
+    kv = np.asarray(kv_lens, np.int64)
+    B, W = bt.shape
+    out = []
+    for s in range(num_shards):
+        lo, hi = s * pages_per_shard, (s + 1) * pages_per_shard
+        rows = np.full((B, max(1, W)), -1, np.int32)
+        lens = np.zeros(B, np.int64)
+        width = 1
+        for b in range(B):
+            w = 0
+            for j in range(W):
+                p = int(bt[b, j])
+                if p < 0:
+                    break
+                if lo <= p < hi:
+                    rows[b, w] = p - lo
+                    w += 1
+                    lens[b] += int(
+                        np.clip(kv[b] - j * page_size, 0, page_size)
+                    )
+            width = max(width, w)
+        out.append((rows[:, :width], lens))
+    return out
+
+
+# --- host side: stacked per-shard device plans (seq mode) -------------------
+
+
+def _stacked_fields(unis: List[work_plan.TileGroupPlan], shapes: dict):
+    """Pads one shard's unified step list to the COMMON bucket shapes and
+    returns the per-field numpy arrays. Padding conventions mirror
+    `WorkPlan._device_group`: padded steps carry zero length/pages and
+    target the LAST (padded) item; padded rows carry row_query = -1.
+    row_sole is forced to ZERO everywhere — seq-parallel partials must
+    leave the forward unnormalised so the cross-shard merge owns the
+    softmax denominator."""
+    Sp, Tp, m_w, ppb, maxpp = (
+        shapes["Sp"], shapes["Tp"], shapes["m_w"], shapes["ppb"],
+        shapes["maxpp"],
+    )
+    outs = []
+    for u in unis:
+        if u is None:
+            # empty shard: an all-pad step list — zero active steps, every
+            # row dropped by the scatter (row_query = -1), so the shard
+            # contributes the merge identity for every query
+            outs.append(
+                dict(
+                    step_mclass=np.zeros(Sp, np.int32),
+                    step_item=np.full(Sp, Tp - 1, np.int32),
+                    step_pages=np.zeros((Sp, ppb), np.int32),
+                    step_npages=np.zeros(Sp, np.int32),
+                    step_len=np.zeros(Sp, np.int32),
+                    step_start=np.zeros(Sp, np.int32),
+                    step_end=np.zeros(Sp, np.int32),
+                    step_ord=np.zeros(Sp, np.int32),
+                    act_steps=np.zeros(Sp, np.int32),
+                    act_total=np.zeros(1, np.int32),
+                    row_query=np.full((Tp, m_w), -1, np.int32),
+                    row_group=np.zeros((Tp, m_w), np.int32),
+                    row_sole=np.zeros((Tp, m_w), np.int32),
+                    item_pages=np.zeros((Tp, maxpp), np.int32),
+                    item_kv_len=np.zeros(Tp, np.int64),
+                    split_src=np.zeros(1, np.int32),
+                    split_dst=np.full(1, 1, np.int32),
+                )
+            )
+            continue
+        outs.append(
+            dict(
+                step_mclass=np.zeros(Sp, np.int32),
+                step_item=_pad_rows(u.step_item, Sp, fill=Tp - 1),
+                step_pages=_pad_rows(_pad_cols(u.step_pages, ppb), Sp),
+                step_npages=_pad_rows(u.step_npages, Sp),
+                step_len=_pad_rows(u.step_len, Sp),
+                step_start=_pad_rows(u.step_start, Sp),
+                step_end=_pad_rows(u.step_end, Sp),
+                step_ord=_pad_rows(u.step_ord, Sp),
+                act_steps=_pad_rows(u.act_steps, Sp),
+                act_total=np.asarray(u.act_total),
+                row_query=_pad_rows(
+                    _pad_cols(u.row_query, m_w, fill=-1), Tp, fill=-1
+                ),
+                row_group=_pad_rows(_pad_cols(u.row_group, m_w), Tp),
+                row_sole=np.zeros((Tp, m_w), np.int32),
+                item_pages=_pad_rows(_pad_cols(u.item_pages, maxpp), Tp),
+                item_kv_len=_pad_rows(u.item_kv_len, Tp),
+                split_src=np.zeros(1, np.int32),
+                split_dst=np.full(1, 1, np.int32),
+            )
+        )
+    return outs
+
+
+def _common_shapes(
+    unis: List[Optional[work_plan.TileGroupPlan]], page_size: int
+) -> dict:
+    live = [u for u in unis if u is not None]
+    if not live:
+        return dict(Sp=1, Tp=1, m_w=1, ppb=1, maxpp=1, kv_tile=page_size)
+    return dict(
+        Sp=_next_pow2(max(1, max(u.num_steps for u in live))),
+        Tp=_next_pow2(max(1, max(u.num_items for u in live))),
+        m_w=max(u.row_query.shape[1] for u in live),
+        ppb=max(u.pages_per_block for u in live),
+        maxpp=_next_pow2(max(1, max(u.item_pages.shape[1] for u in live))),
+        kv_tile=max(u.tile.n for u in live),
+    )
+
+
+def stack_shard_plans(
+    plans: List[work_plan.WorkPlan], page_size: int
+) -> DeviceGroupArrays:
+    """One DeviceGroupArrays whose data leaves carry a leading shard axis
+    and whose static metadata (treedef) is shared: common kv_tile (each
+    shard's step_len stays within its own, smaller or equal, tile), common
+    pages-per-block, and a single m class at the widest shard's width —
+    the shard plans are built single-class so class boundaries never
+    diverge. Shards with no local work (all their owned pages empty)
+    stack as all-pad step lists. `shard_map` with P(axis) on every leaf
+    hands each device its own step list."""
+    if any(p.unified is None and p.num_items for p in plans):
+        raise ValueError(
+            "seq-parallel sharding needs a fusable unified step list on "
+            "every non-empty shard (single-m-class selector guarantees "
+            "this)"
+        )
+    unis = [p.unified for p in plans]
+    shapes = _common_shapes(unis, page_size)
+    per_shard = _stacked_fields(unis, shapes)
+    stacked = {
+        k: jnp.asarray(np.stack([f[k] for f in per_shard]))
+        for k in per_shard[0]
+    }
+    return DeviceGroupArrays(
+        kv_tile=shapes["kv_tile"],
+        pages_per_block=shapes["ppb"],
+        m_classes=(shapes["m_w"],),
+        class_ends=(shapes["Tp"],),
+        **stacked,
+    )
+
+
+@dataclass
+class SeqShardedPlan:
+    """Per-shard work plans + their stacked device form (seq mode)."""
+
+    stacked: DeviceGroupArrays  # leaves [N, ...]
+    shard_plans: List[work_plan.WorkPlan]
+    shard_packs: List[pack_scheduler.PackPlan]
+    shard_kv_lens: List[np.ndarray]
+    num_shards: int
+    # queries covered by more than one work item ACROSS all shards — the
+    # engine's split metric generalised to the mesh
+    num_split_queries: int = 0
+
+    def shard_kv_bytes(
+        self,
+        head_dim: int,
+        num_kv_heads: int,
+        kv_dtype: Optional[str] = None,
+        kv_bytes_per_el: int = 2,
+    ) -> List[int]:
+        """Modeled per-device KV HBM bytes for one decode step: each shard
+        DMAs exactly its own plan's pages."""
+        return [
+            pack_scheduler.plan_kv_bytes(
+                pk, head_dim, num_kv_heads,
+                kv_bytes_per_el=kv_bytes_per_el, kv_dtype=kv_dtype,
+            )
+            for pk in self.shard_packs
+        ]
+
+
+def _count_split_queries(
+    packs: List[pack_scheduler.PackPlan], batch_size: int
+) -> int:
+    parts = np.zeros(batch_size, np.int64)
+    for pk in packs:
+        parts += pack_scheduler.plan_query_part_counts(pk)
+    return int(np.sum(parts > 1))
+
+
+def build_seq_sharded_plan(
+    block_tables: np.ndarray,
+    kv_lens: np.ndarray,
+    page_size: int,
+    selector: TileSelector,
+    num_q_heads: int,
+    num_kv_heads: int,
+    num_shards: int,
+    pages_per_shard: int,
+    *,
+    strategy: str = "pat",
+    alpha: float = pack_scheduler.MERGE_ALPHA_DEFAULT,
+    split_long_kv: bool = True,
+) -> SeqShardedPlan:
+    """Schedules each shard's LOCAL batch through the unchanged planner
+    and stacks the results. Shards with no local KV for a query simply
+    have no items for it — their partials are the merge identity."""
+    selector = _single_class_selector(selector)
+    locals_ = shard_block_tables(
+        block_tables, kv_lens, page_size, num_shards, pages_per_shard
+    )
+    plans, packs, sh_kv = [], [], []
+    rows_per_query = num_q_heads // num_kv_heads
+    for bt_s, kv_s in locals_:
+        pack = pack_scheduler.schedule(
+            bt_s,
+            kv_s,
+            page_size,
+            strategy=strategy,
+            rows_per_query=rows_per_query,
+            max_query_rows=selector.max_query_rows,
+            alpha=alpha,
+            split_long_kv=split_long_kv,
+            selector=selector,
+        )
+        plan = work_plan.build_work_plan(
+            pack, selector, num_q_heads, num_kv_heads,
+            kv_lens=kv_s, block_tables=bt_s,
+        )
+        plans.append(plan)
+        packs.append(pack)
+        sh_kv.append(kv_s)
+    return SeqShardedPlan(
+        stacked=stack_shard_plans(plans, page_size),
+        shard_plans=plans,
+        shard_packs=packs,
+        shard_kv_lens=sh_kv,
+        num_shards=num_shards,
+        num_split_queries=_count_split_queries(
+            packs, np.asarray(block_tables).shape[0]
+        ),
+    )
+
+
+def _single_class_selector(selector: TileSelector) -> TileSelector:
+    """Shard plans must stack, so their class partitions must agree —
+    force one m class (the stacked metadata then only depends on the
+    widest shard, not on per-shard class boundaries)."""
+    lc = selector.launch
+    if lc.num_m_buckets == 1:
+        return selector
+    return selector.with_launch(
+        LaunchConfig.from_dict({**lc.to_dict(), "num_m_buckets": 1})
+    )
+
+
+# --- device side ------------------------------------------------------------
+
+
+def _squeeze_shard(ga: DeviceGroupArrays) -> DeviceGroupArrays:
+    """Inside shard_map every leaf arrives [1, ...] — drop the shard axis."""
+    return jax.tree_util.tree_map(lambda a: a[0], ga)
+
+
+def _seq_local_partials(
+    q, k_pages, v_pages, k_scales, v_scales, ga,
+    *, scale, impl, v_head_dim, num_kv_heads, interpret, kv_quant,
+):
+    """One shard's forward + WITHIN-shard segment merge.
+
+    Runs the step list with in-kernel normalisation off (row_sole = 0 in
+    the stacked plan; row_sole=None on the XLA path), then combines each
+    (query, head)'s items by the online-softmax algebra via three
+    segment scatters (max for m, weighted adds for l and the numerator).
+    Returns (num [B*Hq, dv], m [B*Hq], l [B*Hq]) — the merge identity
+    (0, -inf, 0) for queries with no local items.
+    """
+    B, Hq, _ = q.shape
+    Hkv = num_kv_heads
+    G = Hq // Hkv
+    dv = v_head_dim if v_pages is None else v_pages.shape[-1]
+    qr = ops.q_row_major(q, Hkv)
+    qp = ops.gather_q_rows(qr, ga.row_query, ga.row_group, G)
+    if impl == "pallas":
+        step_kscale = step_vscale = None
+        if kv_quant is not None:
+            step_kscale = k_scales[:, ga.step_pages]
+            if v_scales is not None:
+                step_vscale = v_scales[:, ga.step_pages]
+        o, st = pat_decode.pat_decode_forward(
+            qp, k_pages, v_pages,
+            ga.step_item, ga.step_pages, ga.step_npages, ga.step_len,
+            ga.step_start, ga.step_end, ga.step_ord, ga.act_steps,
+            ga.act_total, ga.row_sole,
+            step_mclass=ga.step_mclass, m_classes=ga.m_classes,
+            kv_tile=ga.kv_tile, scale=scale, v_head_dim=dv,
+            interpret=interpret, kv_quant=kv_quant,
+            step_kscale=step_kscale, step_vscale=step_vscale,
+        )
+    else:
+        o, st = ops.xla_group_forward(
+            qp, k_pages, v_pages, ga.item_pages, ga.item_kv_len,
+            scale=scale, v_head_dim=dv, row_sole=None,
+            kv_quant=kv_quant, k_scales=k_scales, v_scales=v_scales,
+        )
+    T, _, m, _ = qp.shape
+    flat_o = o.reshape(T * Hkv * m, dv)
+    flat_st = st.transpose(0, 1, 3, 2).reshape(T * Hkv * m, 2)
+    rq, rg = ga.row_query, ga.row_group
+    h_ix = jnp.arange(Hkv, dtype=jnp.int32)[None, :, None]
+    dst = rq[:, None, :] * Hq + h_ix * G + rg[:, None, :]
+    R = B * Hq
+    dst = jnp.where((rq >= 0)[:, None, :], dst, R).reshape(-1)
+    m_p, l_p = flat_st[:, 0], flat_st[:, 1]
+    m_row = (
+        jnp.full((R,), -jnp.inf, jnp.float32).at[dst].max(m_p, mode="drop")
+    )
+    m_safe = jnp.where(jnp.isfinite(m_row), m_row, 0.0)
+    m_g = m_safe[jnp.minimum(dst, R - 1)]
+    # padded rows (dst == R) get weight 0; the exp argument is clamped so
+    # their garbage partials can't overflow before the where() selects 0
+    w = jnp.where(
+        (dst < R) & jnp.isfinite(m_p),
+        jnp.exp(jnp.minimum(m_p - m_g, 80.0)),
+        0.0,
+    )
+    l_row = jnp.zeros((R,), jnp.float32).at[dst].add(w * l_p, mode="drop")
+    num_row = (
+        jnp.zeros((R, dv), jnp.float32)
+        .at[dst]
+        .add(w[:, None] * flat_o, mode="drop")
+    )
+    return num_row, m_row, l_row
+
+
+@functools.lru_cache(maxsize=None)
+def _seq_callable(
+    mesh, axis, scale, impl, merge_impl, v_head_dim, num_kv_heads,
+    interpret, kv_quant, share_kv, quantized,
+):
+    def body(q, kp, vp, ks, vs, ga):
+        ga_l = _squeeze_shard(ga)
+        num, m, l = _seq_local_partials(
+            q, kp, vp, ks, vs, ga_l,
+            scale=scale, impl=impl, v_head_dim=v_head_dim,
+            num_kv_heads=num_kv_heads, interpret=interpret,
+            kv_quant=kv_quant,
+        )
+        out = cross_shard_merge(
+            num, m, l, axis, merge_impl=merge_impl, interpret=interpret
+        )
+        B, Hq, _ = q.shape
+        return out.reshape(B, Hq, -1).astype(q.dtype)
+
+    pool = P(None, axis)  # [Hkv, P, page, d]: page axis sharded
+    fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(),  # q replicated: every shard sees every query
+            pool,
+            P() if share_kv else pool,
+            P(None, axis) if quantized else P(),  # k_scales [Hkv, P]
+            P(None, axis) if (quantized and not share_kv) else P(),
+            P(axis),  # stacked plan: leading shard axis on every leaf
+        ),
+        # replicated by construction (all_gather + identical merge), but
+        # axis_index-dependent step lists defeat static replication
+        # inference — same reasoning as split_kv_decode_attention
+        out_specs=P(),
+        no_check_replication=True,
+    )
+    return jax.jit(fn)
+
+
+def seq_parallel_attention(
+    q: jax.Array,  # [B, Hq, dk]
+    k_pages: jax.Array,  # [Hkv, P, page, dk] (page axis mesh-sharded)
+    v_pages: Optional[jax.Array],
+    plan: SeqShardedPlan,
+    *,
+    mesh,
+    shard: ShardSpec,
+    scale: Optional[float] = None,
+    impl: str = "xla",
+    merge_impl: str = "xla",
+    v_head_dim: Optional[int] = None,
+    num_kv_heads: int,
+    interpret: bool = True,
+    kv_quant: Optional[str] = None,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+) -> jax.Array:
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    dv = v_head_dim if v_pages is None else v_pages.shape[-1]
+    fn = _seq_callable(
+        mesh, shard.axis, scale, impl, merge_impl, dv, num_kv_heads,
+        interpret, kv_quant, v_pages is None, k_scales is not None,
+    )
+    return fn(q, k_pages, v_pages, k_scales, v_scales, plan.stacked)
+
+
+@functools.lru_cache(maxsize=None)
+def _head_callable(
+    mesh, axis, scale, impl, merge_impl, v_head_dim, hkv_local,
+    split_cap, interpret, kv_quant, quantized,
+):
+    def body(q, kp, vp, ks, vs, ga, split_table, split_qh):
+        return ops._forward_merge(
+            q, kp, vp, ks, vs, (ga,), split_table, split_qh,
+            scale=scale, impl=impl, merge_impl=merge_impl,
+            v_head_dim=v_head_dim, num_kv_heads=hkv_local,
+            split_cap=split_cap, interpret=interpret, kv_quant=kv_quant,
+        )
+
+    fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis),  # q: contiguous Hq slice == contiguous Hkv slice
+            P(axis),  # k_pages [Hkv, P, page, dk]
+            P(axis),  # v_pages (head mode is GQA: always present)
+            P(axis) if quantized else P(),
+            P(axis) if quantized else P(),
+            P(),  # plan replicated: built at LOCAL head counts
+            P(),
+            P(),
+        ),
+        out_specs=P(None, axis),  # outputs concatenate along heads
+        no_check_replication=True,
+    )
+    return jax.jit(fn)
+
+
+def head_parallel_attention(
+    q: jax.Array,  # [B, Hq, dk] (GLOBAL heads)
+    k_pages: jax.Array,  # [Hkv, P, page, dk] (Hkv axis mesh-sharded)
+    v_pages: jax.Array,
+    wp: work_plan.WorkPlan,  # built at LOCAL head counts (Hq/N, Hkv/N)
+    *,
+    mesh,
+    shard: ShardSpec,
+    scale: Optional[float] = None,
+    impl: str = "xla",
+    merge_impl: str = "xla",
+    v_head_dim: Optional[int] = None,
+    interpret: bool = True,
+    kv_quant: Optional[str] = None,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+) -> jax.Array:
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    dwp = wp.to_device()
+    if dwp is None:
+        raise ValueError("head-parallel attention needs a unified step list")
+    dv = v_head_dim if v_head_dim is not None else v_pages.shape[-1]
+    fn = _head_callable(
+        mesh, shard.axis, scale, impl, merge_impl, dv, wp.num_kv_heads,
+        dwp.split_cap, interpret, kv_quant, k_scales is not None,
+    )
+    return fn(
+        q, k_pages, v_pages, k_scales, v_scales,
+        dwp.unified, dwp.split_part_rows, dwp.split_qh,
+    )
+
+
+# --- plan cache + backend ---------------------------------------------------
+
+
+class SeqShardedPlanCache:
+    """Seq-mode counterpart of `lazy_update.PlanCache`: fingerprint on the
+    GLOBAL block table (per-shard tables are a pure function of it) with
+    the mesh tag, rebuild per-shard plans on a miss, and on within-page
+    KV growth refresh each shard plan from its LOCAL lengths and restack
+    only the length-derived arrays."""
+
+    def __init__(
+        self,
+        selector: TileSelector,
+        num_q_heads: int,
+        num_kv_heads: int,
+        shard: ShardSpec,
+        pages_per_shard: int,
+        *,
+        strategy: str = "pat",
+        alpha: float = pack_scheduler.MERGE_ALPHA_DEFAULT,
+        split_long_kv: bool = True,
+        tuning=None,
+        kv_dtype: str = "float32",
+    ):
+        self.selector = _single_class_selector(selector)
+        self.num_q_heads = num_q_heads
+        self.num_kv_heads = num_kv_heads
+        self.shard = shard
+        self.pages_per_shard = pages_per_shard
+        self.strategy = strategy
+        self.alpha = alpha
+        self.split_long_kv = split_long_kv
+        self.tuning = tuning
+        self.kv_dtype = kv_dtype
+        self.stats = CacheStats()
+        self._key = None
+        self._plan: Optional[SeqShardedPlan] = None
+        self._kv_lens: Optional[np.ndarray] = None
+
+    def _selector_for(self, batch_size, max_kv_len, page_size):
+        if self.tuning is None:
+            return self.selector
+        from repro.core import tuning_cache
+
+        key = tuning_cache.shape_key(
+            self.strategy, page_size, self.num_q_heads, self.num_kv_heads,
+            self.selector.head_dim, batch_size, max_kv_len,
+            kv_dtype=self.kv_dtype, mesh=self.shard.tag,
+        )
+        launch = self.tuning.lookup(key)
+        if launch is None:
+            return self.selector
+        return _single_class_selector(self.selector.with_launch(launch))
+
+    def _refresh(self, block_tables, kv_lens):
+        """Within-page growth: refresh each shard plan from its new local
+        lengths and restack step_len / item_kv_len / activity arrays."""
+        locals_ = shard_block_tables(
+            block_tables, kv_lens, self._page_size, self.shard.num_shards,
+            self.pages_per_shard,
+        )
+        plans = []
+        for p, (_, kv_s) in zip(self._plan.shard_plans, locals_):
+            # empty shards (no items) have nothing to refresh — their
+            # stacked pad rows already carry zero lengths
+            plans.append(
+                p if p.unified is None else work_plan.refresh_lengths(p, kv_s)
+            )
+        st = self._plan.stacked
+        Sp, Tp = st.step_len.shape[1], st.item_kv_len.shape[1]
+
+        def restack(get, width, host):
+            rows = [
+                np.zeros(width, host.dtype) if p.unified is None
+                else _pad_rows(get(p.unified), width)
+                for p in plans
+            ]
+            return jnp.asarray(np.stack(rows))
+
+        step_len = np.asarray(st.step_len)
+        item_kv = np.asarray(st.item_kv_len)
+        self._plan.shard_plans = plans
+        self._plan.shard_kv_lens = [kv_s for _, kv_s in locals_]
+        self._plan.stacked = DeviceGroupArrays(
+            kv_tile=st.kv_tile,
+            pages_per_block=st.pages_per_block,
+            m_classes=st.m_classes,
+            class_ends=st.class_ends,
+            step_mclass=st.step_mclass,
+            step_item=st.step_item,
+            step_pages=st.step_pages,
+            step_npages=st.step_npages,
+            step_len=restack(lambda u: u.step_len, Sp, step_len[0]),
+            step_start=st.step_start,
+            step_end=st.step_end,
+            step_ord=restack(lambda u: u.step_ord, Sp, step_len[0]),
+            act_steps=restack(lambda u: u.act_steps, Sp, step_len[0]),
+            act_total=jnp.asarray(
+                np.stack(
+                    [
+                        np.zeros(1, np.int32) if p.unified is None
+                        else np.asarray(p.unified.act_total)
+                        for p in plans
+                    ]
+                )
+            ),
+            row_query=st.row_query,
+            row_group=st.row_group,
+            row_sole=st.row_sole,
+            item_pages=st.item_pages,
+            item_kv_len=restack(lambda u: u.item_kv_len, Tp, item_kv[0]),
+            split_src=st.split_src,
+            split_dst=st.split_dst,
+        )
+
+    def get(
+        self, block_tables: np.ndarray, kv_lens: np.ndarray, page_size: int
+    ) -> SeqShardedPlan:
+        kv_lens = np.asarray(kv_lens, np.int64)
+        self._page_size = page_size
+        # Seq-parallel fingerprints add the per-row USED-page counts on
+        # top of the block-table structure: crossing a page boundary can
+        # hand a shard its first tokens of a query (its local plan gains
+        # an item), a structural change `refresh_lengths` cannot express.
+        # Within-page growth still hits + refreshes, so the lazy update
+        # re-schedules at most once per page_size decode steps.
+        used_pages = -(-kv_lens // page_size)
+        key = hash(
+            (
+                work_plan.plan_fingerprint(
+                    block_tables, kv_lens, page_size, self.strategy,
+                    mesh=self.shard.tag,
+                ),
+                used_pages.tobytes(),
+            )
+        )
+        if key == self._key and self._plan is not None:
+            self.stats.hits += 1
+            if self._kv_lens is None or not np.array_equal(
+                self._kv_lens, kv_lens
+            ):
+                t0 = time.perf_counter()
+                self._refresh(block_tables, kv_lens)
+                self.stats.refresh_time_s += time.perf_counter() - t0
+                self.stats.refreshes += 1
+                self._kv_lens = kv_lens.copy()
+            return self._plan
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        max_kv = int(kv_lens.max()) if kv_lens.size else 1
+        selector = self._selector_for(
+            int(np.asarray(block_tables).shape[0]), max_kv, page_size
+        )
+        plan = build_seq_sharded_plan(
+            block_tables, kv_lens, page_size, selector,
+            self.num_q_heads, self.num_kv_heads,
+            self.shard.num_shards, self.pages_per_shard,
+            strategy=self.strategy, alpha=self.alpha,
+            split_long_kv=self.split_long_kv,
+        )
+        self.stats.schedule_time_s += time.perf_counter() - t0
+        self._key, self._plan, self._kv_lens = key, plan, kv_lens.copy()
+        return plan
+
+
+class ShardedPatBackend(PatAttentionBackend):
+    """Drop-in `PatAttentionBackend` for a mesh-sharded pool.
+
+    head mode: the inherited PlanCache builds ONE plan at LOCAL head
+    counts (replicated across shards); `attend` dispatches the fused
+    forward+merge per shard under shard_map. seq mode: `self.cache` is a
+    `SeqShardedPlanCache` (same ``get`` signature, so the inherited
+    ``plan()`` works unchanged) and `attend` runs the partial+merge path.
+    """
+
+    def __init__(
+        self,
+        num_q_heads: int,
+        num_kv_heads: int,
+        head_dim: int,
+        *,
+        mesh,
+        shard: ShardSpec,
+        num_pages: int,
+        v_head_dim: Optional[int] = None,
+        config: Optional[PatConfig] = None,
+        share_kv: bool = False,
+        kv_dtype: Optional[str] = None,
+        q_dtype_bytes: Optional[int] = None,
+        kv_dtype_bytes: int = 2,
+    ):
+        n = shard.num_shards
+        self.mesh = mesh
+        self.shard = shard
+        self.global_q_heads = num_q_heads
+        self.global_kv_heads = num_kv_heads
+        if shard.mode == "head":
+            if num_kv_heads % n or num_q_heads % num_kv_heads:
+                raise ValueError(
+                    f"head-parallel needs Hkv % N == 0 (got Hkv="
+                    f"{num_kv_heads}, N={n})"
+                )
+            local_q = num_q_heads // n
+            local_kv = num_kv_heads // n
+        else:
+            local_q, local_kv = num_q_heads, num_kv_heads
+        super().__init__(
+            local_q, local_kv, head_dim,
+            v_head_dim=v_head_dim, config=config, share_kv=share_kv,
+            kv_dtype=kv_dtype, q_dtype_bytes=q_dtype_bytes,
+            kv_dtype_bytes=kv_dtype_bytes, mesh_tag=shard.tag,
+        )
+        if shard.mode == "seq":
+            if num_pages % n:
+                raise ValueError(
+                    f"seq-parallel needs num_pages % N == 0 "
+                    f"(got {num_pages}, N={n})"
+                )
+            self.cache = SeqShardedPlanCache(
+                self.selector, num_q_heads, num_kv_heads, shard,
+                num_pages // n,
+                strategy=self.config.strategy, alpha=self.config.alpha,
+                split_long_kv=self.config.split_long_kv,
+                tuning=self.tuning, kv_dtype=self.kv_dtype,
+            )
+
+    def attend(
+        self, q, k_pages, v_pages, wp, scale=None,
+        k_scales=None, v_scales=None,
+    ):
+        from repro.core import kv_quant
+
+        quant = (
+            self.kv_dtype if kv_quant.is_quantized(self.kv_dtype) else None
+        )
+        common = dict(
+            mesh=self.mesh, shard=self.shard, scale=scale,
+            impl=self.config.impl, merge_impl=self.config.merge_impl,
+            v_head_dim=self.v_head_dim, interpret=self.config.interpret,
+            kv_quant=quant, k_scales=k_scales, v_scales=v_scales,
+        )
+        if self.shard.mode == "head":
+            return head_parallel_attention(q, k_pages, v_pages, wp, **common)
+        return seq_parallel_attention(
+            q, k_pages, v_pages, wp,
+            num_kv_heads=self.global_kv_heads, **common,
+        )

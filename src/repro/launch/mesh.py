@@ -58,6 +58,24 @@ def make_mesh(
     )
 
 
+def make_kv_mesh(num_shards: int, axis: str = "kv"):
+    """1-D decode mesh for the sharded KV pool (ISSUE 8).
+
+    One axis, named after the ShardSpec axis ("kv" by default): KV-head
+    parallel shards the pool's Hkv dim over it, KV-sequence parallel
+    shards the page dim. Kept separate from the training meshes — decode
+    serving and training don't share device grids.
+    """
+    if num_shards > jax.device_count():
+        raise RuntimeError(
+            f"mesh wants {num_shards} devices but only {jax.device_count()} "
+            "are visible; set XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={num_shards} before importing jax (serve.py --mesh re-execs "
+            "with it automatically)"
+        )
+    return jax.make_mesh((num_shards,), (axis,), **_axis_type_kwargs(1))
+
+
 def dp_axes(mesh) -> Tuple[str, ...]:
     """The axes that jointly form data parallelism."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

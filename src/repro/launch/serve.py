@@ -18,6 +18,7 @@ Run:
 
 import argparse
 import os
+import sys
 
 import jax
 
@@ -68,7 +69,37 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="submit everything up front and stream the first "
                          "request's tokens as produced (no arrival replay)")
+    ap.add_argument("--mesh", type=int, default=1, metavar="N",
+                    help="shard the KV pool over an N-way kv mesh "
+                         "(ISSUE 8); on a CPU host the process re-execs "
+                         "itself with forced host devices when fewer than "
+                         "N are visible")
+    ap.add_argument("--shard-mode", default="auto",
+                    choices=["auto", "head", "seq"],
+                    help="kv mesh parallelism: head (GQA KV-head "
+                         "parallel) / seq (KV-sequence parallel, MLA and "
+                         "long prefixes) / auto")
     args = ap.parse_args()
+    if args.mesh > 1 and jax.device_count() < args.mesh:
+        # The device count is fixed at backend init, so a too-small host
+        # platform can only grow by re-entering the interpreter with
+        # XLA_FLAGS set. The marker env var makes a second failure
+        # (e.g. a real accelerator platform ignoring the flag) terminal
+        # instead of an exec loop.
+        if os.environ.get("_PAT_MESH_REEXEC"):
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {args.mesh} devices but only "
+                f"{jax.device_count()} came up even with forced host "
+                "devices"
+            )
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.mesh}"
+        ).strip()
+        env["_PAT_MESH_REEXEC"] = "1"
+        os.execve(sys.executable, [sys.executable, "-m", "repro.launch.serve"]
+                  + sys.argv[1:], env)
     backend = args.backend or BACKENDS.get(
         os.environ.get("PAT_ATTENTION_BACKEND", "PAT").upper(), "pat"
     )
@@ -91,7 +122,9 @@ def main():
                              merge_impl=args.impl,
                              strategy=backend,
                              tuning_cache=args.tuning_cache,
-                             kv_dtype=args.kv_dtype),
+                             kv_dtype=args.kv_dtype,
+                             kv_shards=args.mesh,
+                             shard_mode=args.shard_mode),
         eos_id=-1, temperature=args.temperature,
         scheduler=SchedulerConfig(
             policy=args.policy,
@@ -126,6 +159,16 @@ def main():
           f"prefill_tokens={m.prefill_tokens}")
     print(f"pack: {st.misses} schedules, {st.hits} lazy hits, "
           f"{st.refreshes} refreshes, sched {1e3*st.schedule_time_s:.1f}ms total")
+    if eng.shard is not None:
+        free = getattr(eng.kv.allocator, "free_per_shard", None)
+        placement = getattr(eng.kv.allocator, "placement", None)
+        print(f"mesh: {eng.shard.tag} over {jax.device_count()} devices"
+              + (f", free/shard={free()}" if free else ""))
+        if placement:
+            hits, reqs = placement["prefer_hits"], placement["prefer_requests"]
+            print(f"placement: {placement['allocs']} allocs, "
+                  f"{hits}/{reqs} prefix-affine, "
+                  f"{placement['spilled_pages']} pages spilled")
     tc = eng.backend.tuning
     if tc is not None:
         status = f"load_error={tc.load_error}" if tc.load_error else \

@@ -47,6 +47,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import kv_quant
 from repro.core.attention import PatAttentionBackend, PatConfig
+from repro.core.shard_spec import ShardSpec
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models import attention as A
@@ -136,22 +137,48 @@ class Engine:
                 cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, cfg.head_dim,
                 num_pages, page_size, dtype=kv_dtype,
             )
+        # Multi-device decode (ISSUE 8): kv_shards > 1 shards the page pool
+        # over a 1-D kv mesh. "auto" picks KV-head parallel when the KV
+        # heads divide evenly (GQA) and falls back to KV-sequence parallel
+        # (MLA's single latent head, odd head counts).
+        self.mesh = None
+        self.shard: Optional[ShardSpec] = None
+        n_shards = self.pat_config.kv_shards
+        if n_shards > 1:
+            from repro.launch.mesh import make_kv_mesh
+
+            mode = self.pat_config.shard_mode
+            if mode == "auto":
+                mode = (
+                    "head"
+                    if not self.mla and kvcfg.num_kv_heads % n_shards == 0
+                    else "seq"
+                )
+            self.shard = ShardSpec(num_shards=n_shards, mode=mode)
+            self.mesh = make_kv_mesh(n_shards, self.shard.axis)
         # pool first: it is the one source of truth for the KV dtype; the
         # backend derives its tile-solver byte model from the pool, while Q
         # stays at the fp32 compute precision of this engine
-        self.kv = PagedKVCache(kvcfg)
+        self.kv = PagedKVCache(kvcfg, shard=self.shard, mesh=self.mesh)
         if self.mla:
-            self.backend = PatAttentionBackend(
-                cfg.num_heads, 1, dk, v_head_dim=cfg.mla.kv_lora_rank,
-                kv_dtype=self.kv.kv_dtype, q_dtype_bytes=4,
-                config=self.pat_config, share_kv=True,
+            head_args = (cfg.num_heads, 1, dk)
+            head_kwargs = dict(v_head_dim=cfg.mla.kv_lora_rank, share_kv=True)
+        else:
+            head_args = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+            head_kwargs = {}
+        common = dict(
+            kv_dtype=self.kv.kv_dtype, q_dtype_bytes=4,
+            config=self.pat_config, **head_kwargs,
+        )
+        if self.shard is not None:
+            from repro.distributed.sharded_decode import ShardedPatBackend
+
+            self.backend = ShardedPatBackend(
+                *head_args, mesh=self.mesh, shard=self.shard,
+                num_pages=num_pages, **common,
             )
         else:
-            self.backend = PatAttentionBackend(
-                cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
-                kv_dtype=self.kv.kv_dtype, q_dtype_bytes=4,
-                config=self.pat_config,
-            )
+            self.backend = PatAttentionBackend(*head_args, **common)
         self.radix = RadixCache(self.kv.allocator, page_size)
         self.page = page_size
         # chunked (suffix) prefill needs every layer to hold paged KV
@@ -383,6 +410,25 @@ class Engine:
         if self._batch_dirty:
             self._refresh_batch()
         return self._bt, self._pos + 1
+
+    def placement_report(self) -> Optional[dict]:
+        """Prefix-locality report for the current decode batch (ISSUE 8):
+        what fraction of shared-prefix page reads the seq-parallel mesh
+        serves shard-locally. None when the pool has no page sharding
+        (single device, or head-parallel where every shard holds every
+        page's head slice)."""
+        shard_of = getattr(self.kv.allocator, "shard_of", None)
+        if shard_of is None or not self.running:
+            return None
+        from repro.core import pack_scheduler
+
+        bt, kv_lens = self._block_tables()
+        return pack_scheduler.placement_report(
+            bt, kv_lens, self.page, shard_of,
+            head_dim=self.kv.cfg.head_dim,
+            num_kv_heads=self.kv.cfg.num_kv_heads,
+            kv_dtype=self.kv.kv_dtype,
+        )
 
     def _decode_write_slots(self) -> (np.ndarray, np.ndarray):
         """(page id, slot) of the token being decoded, per running request —

@@ -20,6 +20,16 @@ constant.
 The host allocator is a free list with reference counts, shared with the
 radix prefix cache (a page referenced by N live requests + the radix tree
 has refcount N+1 and is only recycled at zero).
+
+ISSUE 8 makes the pool mesh-aware: given a `ShardSpec` + a 1-D `kv` mesh
+(`launch/mesh.make_kv_mesh`), the pools are `device_put` with the Hkv axis
+sharded (KV-head parallel, GQA) or the page axis sharded into contiguous
+ranges (KV-sequence parallel, MLA / long prefixes). Sequence parallelism
+additionally swaps in `ShardedPageAllocator`: per-shard free lists whose
+``alloc(n, prefer=shard)`` implements prefix-aware placement — a request
+extending a cached prefix allocates on the shard already holding that
+prefix, and a fresh request lands wholly on one shard (never voluntarily
+splitting a future prefix), spilling across shards only under pressure.
 """
 
 from __future__ import annotations
@@ -32,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import kv_quant
+from repro.core.shard_spec import ShardSpec
 
 
 class PageAllocator:
@@ -40,7 +51,9 @@ class PageAllocator:
         self.free = list(range(num_pages - 1, -1, -1))
         self.refs = np.zeros(num_pages, np.int32)
 
-    def alloc(self, n: int) -> List[int]:
+    def alloc(self, n: int, prefer: Optional[int] = None) -> List[int]:
+        """Allocates n pages. ``prefer`` (a shard id) is a placement hint
+        honoured by `ShardedPageAllocator`; the flat allocator ignores it."""
         if len(self.free) < n:
             raise MemoryError(f"KV pool exhausted: need {n}, free {len(self.free)}")
         out = [self.free.pop() for _ in range(n)]
@@ -65,6 +78,96 @@ class PageAllocator:
         return len(self.free)
 
 
+class ShardedPageAllocator(PageAllocator):
+    """Per-shard free lists with prefix-aware placement (ISSUE 8).
+
+    Shard s owns the contiguous page range [s*P/N, (s+1)*P/N) — the same
+    partition the sequence-parallel pool sharding uses, so "page p lives on
+    shard s" is a pure function of the page id and the placement decision
+    IS the physical placement.
+
+    Policy (in order):
+      1. ``prefer`` shard, when it can hold the whole allocation — a pack
+         extending a cached prefix co-locates with it.
+      2. Otherwise the most-free shard that fits the WHOLE allocation — a
+         request's pages (tomorrow's shared prefix) never split voluntarily.
+      3. Otherwise spill greedily across shards (counted: the
+         placement_report's "cross-shard bytes" come from here).
+    """
+
+    def __init__(self, num_pages: int, num_shards: int):
+        if num_shards < 1 or num_pages % num_shards:
+            raise ValueError(
+                f"num_pages={num_pages} not divisible by num_shards={num_shards}"
+            )
+        super().__init__(num_pages)
+        self.num_shards = num_shards
+        self.pages_per_shard = num_pages // num_shards
+        pps = self.pages_per_shard
+        # descending ids so .pop() hands out each shard's lowest ids first
+        self._free = [
+            list(range((s + 1) * pps - 1, s * pps - 1, -1))
+            for s in range(num_shards)
+        ]
+        self.free = []  # base-class list unused; every path is overridden
+        self.placement = {
+            "allocs": 0,
+            "prefer_requests": 0,
+            "prefer_hits": 0,
+            "spilled_allocs": 0,
+            "spilled_pages": 0,
+        }
+
+    def shard_of(self, page: int) -> int:
+        return int(page) // self.pages_per_shard
+
+    def free_per_shard(self) -> List[int]:
+        return [len(f) for f in self._free]
+
+    def alloc(self, n: int, prefer: Optional[int] = None) -> List[int]:
+        if self.num_free < n:
+            raise MemoryError(
+                f"KV pool exhausted: need {n}, free {self.num_free}"
+            )
+        self.placement["allocs"] += 1
+        if prefer is not None:
+            self.placement["prefer_requests"] += 1
+        order = sorted(
+            range(self.num_shards), key=lambda s: -len(self._free[s])
+        )
+        if prefer is not None:
+            order = [prefer] + [s for s in order if s != prefer]
+        out: List[int] = []
+        for s in order:
+            if len(self._free[s]) >= n:
+                if prefer is not None and s == prefer:
+                    self.placement["prefer_hits"] += 1
+                out = [self._free[s].pop() for _ in range(n)]
+                break
+        else:  # no single shard fits: spill across shards under pressure
+            self.placement["spilled_allocs"] += 1
+            self.placement["spilled_pages"] += n
+            for s in order:
+                take = min(n - len(out), len(self._free[s]))
+                out.extend(self._free[s].pop() for _ in range(take))
+                if len(out) == n:
+                    break
+        for p in out:
+            self.refs[p] = 1
+        return out
+
+    def decref(self, pages: List[int]) -> None:
+        for p in pages:
+            self.refs[p] -= 1
+            assert self.refs[p] >= 0
+            if self.refs[p] == 0:
+                self._free[self.shard_of(p)].append(p)
+
+    @property
+    def num_free(self) -> int:
+        return sum(len(f) for f in self._free)
+
+
 @dataclass
 class KVCacheConfig:
     num_layers: int
@@ -77,12 +180,37 @@ class KVCacheConfig:
 
 
 class PagedKVCache:
-    """Device-side page pools for all layers + the host allocator."""
+    """Device-side page pools for all layers + the host allocator.
 
-    def __init__(self, cfg: KVCacheConfig):
+    ``shard``/``mesh`` (ISSUE 8) place the pools across a 1-D kv mesh:
+    head mode shards the Hkv axis, seq mode shards the page axis (and
+    swaps in the prefix-aware `ShardedPageAllocator`). Unsharded when
+    omitted — the default single-device path is untouched.
+    """
+
+    def __init__(
+        self,
+        cfg: KVCacheConfig,
+        shard: Optional[ShardSpec] = None,
+        mesh=None,
+    ):
         self.cfg = cfg
         kd = kv_quant.kv_dtype(cfg.dtype)  # raises on unknown names
         self._kd = kd
+        self.shard = shard if (shard is not None and shard.active) else None
+        self.mesh = mesh if self.shard is not None else None
+        if self.shard is not None:
+            n = self.shard.num_shards
+            if self.shard.mode == "head" and cfg.num_kv_heads % n:
+                raise ValueError(
+                    f"head-parallel needs Hkv % shards == 0: "
+                    f"{cfg.num_kv_heads} % {n}"
+                )
+            if self.shard.mode == "seq" and cfg.num_pages % n:
+                raise ValueError(
+                    f"seq-parallel needs num_pages % shards == 0: "
+                    f"{cfg.num_pages} % {n}"
+                )
         shape_k = (cfg.num_layers, cfg.num_kv_heads, cfg.num_pages, cfg.page_size, cfg.head_dim)
         self.k_pages = jnp.zeros(shape_k, kd.storage)
         self.share_kv = cfg.v_head_dim is None
@@ -104,7 +232,44 @@ class PagedKVCache:
             jnp.zeros(scale_shape, jnp.float32)
             if kd.quantized and not self.share_kv else None
         )
-        self.allocator = PageAllocator(cfg.num_pages)
+        if self.shard is not None and self.shard.mode == "seq":
+            # placement decisions ARE physical placement: the allocator's
+            # shard ranges match the pool's page-axis partition below
+            self.allocator: PageAllocator = ShardedPageAllocator(
+                cfg.num_pages, self.shard.num_shards
+            )
+        else:
+            self.allocator = PageAllocator(cfg.num_pages)
+        self._pool_sharding = self._scale_sharding = None
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            ax = self.shard.axis
+            if self.shard.mode == "head":
+                pool_spec, scale_spec = P(None, ax), P(None, ax)
+            else:  # seq: page axis is dim 2 of [L, Hkv, P, page, d]
+                pool_spec, scale_spec = P(None, None, ax), P(None, None, ax)
+            self._pool_sharding = NamedSharding(self.mesh, pool_spec)
+            self._scale_sharding = NamedSharding(self.mesh, scale_spec)
+            self._reshard()
+
+    def _reshard(self) -> None:
+        """Re-pins the pools to the mesh partition. Called after
+        whole-pool mutation (write_tokens): an eager scatter may hand back
+        a differently-placed result, and the per-shard capacity story only
+        holds if the pools stay partitioned."""
+        if self._pool_sharding is None:
+            return
+
+        def pin(a, ns):
+            if a is None or a.sharding == ns:
+                return a
+            return jax.device_put(a, ns)
+
+        self.k_pages = pin(self.k_pages, self._pool_sharding)
+        self.v_pages = pin(self.v_pages, self._pool_sharding)
+        self.k_scales = pin(self.k_scales, self._scale_sharding)
+        self.v_scales = pin(self.v_scales, self._scale_sharding)
 
     # --- dtype: the one source of truth -------------------------------------
 
@@ -143,6 +308,7 @@ class PagedKVCache:
                 self.v_pages = self.v_pages.at[:, :, pids, slt].set(
                     v.astype(self.v_pages.dtype)
                 )
+            self._reshard()
             return
         upids, local = np.unique(np.asarray(page_ids), return_inverse=True)
         self.k_pages, self.k_scales = self._requantized_insert(
@@ -152,6 +318,7 @@ class PagedKVCache:
             self.v_pages, self.v_scales = self._requantized_insert(
                 self.v_pages, self.v_scales, v, upids, local, slots
             )
+        self._reshard()
 
     def _requantized_insert(self, pages, scales, new_rows, upids, local, slots):
         """Page-granular quantized write: dequantise the affected pages

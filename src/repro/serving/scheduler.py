@@ -343,7 +343,16 @@ class Scheduler:
             req.share_from = (provider, shared)
         else:
             req.share_from = None
-        req.pages = base_pages + self.alloc.alloc(new_needed)
+        # Prefix-aware placement (ISSUE 8): a request extending a shared
+        # prefix allocates its suffix on the shard that already holds the
+        # prefix (the tail page's shard — the prefix never straddles shards
+        # unless the allocator itself spilled), so the pack reads its
+        # shared-prefix bytes shard-locally. Flat allocators ignore the hint.
+        prefer = None
+        shard_of = getattr(self.alloc, "shard_of", None)
+        if shard_of is not None and base_pages:
+            prefer = shard_of(base_pages[-1])
+        req.pages = base_pages + self.alloc.alloc(new_needed, prefer=prefer)
         req.cached_tokens = shared
         # chunked prefill resumes after the shared prefix; at least one
         # prompt token is always recomputed so the final chunk emits the

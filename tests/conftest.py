@@ -1,0 +1,47 @@
+"""Shared test fixtures.
+
+`mesh_run` is the one sanctioned way to test multi-device code paths on
+the CPU container: it spawns a FRESH interpreter with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so the code under
+test sees a real N-device mesh. The flag must be set before the XLA
+backend initialises, and it must never leak into the main test process
+(smoke tests and benches assume 1 device, per the dry-run contract) —
+subprocess isolation gives both. Used by test_distributed*.py and
+test_sharded_decode.py; heavy mesh parity sweeps carry the ``slow`` mark
+on top (tier-1 keeps the fast representatives).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="session")
+def mesh_run():
+    """Callable ``mesh_run(code, devices=8, timeout=560) -> stdout``.
+
+    Runs dedented ``code`` in a subprocess with ``devices`` forced host
+    devices and PYTHONPATH=src; asserts exit 0 (tail of stderr on
+    failure) and returns stdout for content assertions.
+    """
+
+    def run(code: str, devices: int = 8, timeout: int = 560) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={devices}"
+        ).strip()
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True, text=True, timeout=timeout, env=env,
+        )
+        assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+        return out.stdout
+
+    return run

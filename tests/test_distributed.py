@@ -1,32 +1,10 @@
 """Distribution tests.
 
-Multi-device tests run in a SUBPROCESS with
-XLA_FLAGS=--xla_force_host_platform_device_count=8: the placeholder-device
-flag must never leak into the main test process (smoke tests and benches
-must see 1 device, per the dry-run contract).
+Multi-device tests run through the ``mesh_run`` fixture (conftest.py): a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8, so the
+placeholder-device flag never leaks into the main test process (smoke
+tests and benches must see 1 device, per the dry-run contract).
 """
-
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run_subprocess(code: str) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, timeout=560, env=env,
-    )
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
 
 
 def test_sharding_rules_divisibility_fallback():
@@ -56,8 +34,8 @@ def test_sharding_rules_divisibility_fallback():
     assert param_spec("embed/table", (151936, 5120), mesh)[0] == "model"
 
 
-def test_pjit_train_step_runs_on_8_devices():
-    out = _run_subprocess("""
+def test_pjit_train_step_runs_on_8_devices(mesh_run):
+    out = mesh_run("""
         import jax, jax.numpy as jnp
         import numpy as np
         from repro.configs import get_config
@@ -97,10 +75,10 @@ def test_pjit_train_step_runs_on_8_devices():
     assert "LOSSES" in out
 
 
-def test_sharded_equals_single_device_forward():
+def test_sharded_equals_single_device_forward(mesh_run):
     """The same params on a (2,4) mesh and on 1 device give identical
     logits — sharding never changes numerics."""
-    out = _run_subprocess("""
+    out = mesh_run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
         from repro.distributed import sharding as SH
@@ -127,8 +105,8 @@ def test_sharded_equals_single_device_forward():
     assert "ERR" in out
 
 
-def test_multipod_mesh_constructs():
-    out = _run_subprocess("""
+def test_multipod_mesh_constructs(mesh_run):
+    out = mesh_run("""
         import jax
         from repro.launch.mesh import make_mesh, dp_axes
         m = make_mesh(2, 2, pod=2)

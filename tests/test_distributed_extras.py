@@ -1,11 +1,7 @@
 """Tests for the explicit split-KV decode (shard_map) and gradient
-compression. Multi-device parts run in subprocesses (device-count
-isolation, as in test_distributed.py)."""
-
-import os
-import subprocess
-import sys
-import textwrap
+compression. Multi-device parts run through the ``mesh_run`` fixture
+(conftest.py): subprocess device-count isolation, as in
+test_distributed.py."""
 
 import jax
 import jax.numpy as jnp
@@ -14,8 +10,6 @@ import numpy as np
 from repro.training.compression import (
     compress, compress_with_feedback, decompress, init_residuals,
 )
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def test_compress_roundtrip_accuracy():
@@ -48,8 +42,8 @@ def test_error_feedback_unbiased_over_steps():
     assert err <= 2 * single_step_bound, (err, single_step_bound)
 
 
-def test_split_kv_decode_matches_oracle_subprocess():
-    code = """
+def test_split_kv_decode_matches_oracle_subprocess(mesh_run):
+    out = mesh_run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core.distributed import split_kv_decode_attention
         from repro.kernels.ref import dense_attention_ref
@@ -69,13 +63,5 @@ def test_split_kv_decode_matches_oracle_subprocess():
         err = float(jnp.max(jnp.abs(out - ref)))
         print("ERR", err)
         assert err < 2e-5, err
-    """
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, timeout=560, env=env,
-    )
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "ERR" in out.stdout
+    """)
+    assert "ERR" in out
