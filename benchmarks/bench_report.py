@@ -36,6 +36,10 @@ across PRs (ISSUE 2):
                        and the prefix-aware placement counters
                        (benchmarks/sharded_decode.section; runs in a
                        subprocess with forced host devices).
+  * ``telemetry``    — ISSUE 9: steady-state engine decode-step wall-clock
+                       with telemetry disabled vs enabled, interleaved
+                       min-of-repeats (benchmarks/telemetry_overhead).
+                       Gates the zero-cost-when-disabled contract.
   * ``e2e_serving``  — ISSUE 4: trace-replay SLO surface — TTFT/TPOT
                        p50/p95/p99 (deterministic virtual token units +
                        measured wall ms) for chunked vs monolithic prefill
@@ -123,6 +127,7 @@ def collect(
         memory_traffic,
         overhead,
         sharded_decode,
+        telemetry_overhead,
     )
 
     if tuning_cache is None and os.path.exists(DEFAULT_TUNING_PATH):
@@ -170,6 +175,10 @@ def collect(
         "modeled_hbm": hbm,
         "kernel_latency": kern,
         "fused_launch": fused,
+        "telemetry": telemetry_overhead.engine_step_overhead(
+            steps=6 if fast else 10, repeats=2 if fast else 3,
+            verbose=verbose,
+        ),
         "e2e_serving": e2e_serving.serving_section(fast=fast, verbose=verbose),
         "kv_quant": kv_quant_bench.section(
             fast=fast, verbose=verbose, tuning_cache=tuning_cache

@@ -32,9 +32,17 @@ cross-shard split/merge, int8 pools), modeled per-device KV bytes must
 stay <= 1.15x the even single/N split, and prefix-aware placement must
 keep >= 90% of shared-prefix page references shard-local.
 
+ISSUE 9 adds the telemetry gates: the disabled-telemetry engine step is
+held to 1% (+ a small floor) of the committed baseline — tracing off must
+be strictly zero-cost — and the within-artifact enabled/disabled ratio is
+bounded. ``--schema-only`` validates the committed artifact's structure
+(sections, required keys, positive finite timings) without re-running any
+kernels; CI uses it as a cheap artifact-integrity gate.
+
 Usage:
     python benchmarks/check_regression.py [--current PATH] [--baseline PATH]
     python benchmarks/check_regression.py --fresh   # re-measure, then diff
+    python benchmarks/check_regression.py --schema-only  # structure only
 
 `pytest -m slow` runs the same comparison as a perf smoke test
 (tests/test_perf_smoke.py).
@@ -76,6 +84,41 @@ SHARDED_BYTES_RATIO = 1.15
 # Prefix-aware placement must keep shared-prefix page references on the
 # shard that owns the prefix.
 SHARDED_PLACEMENT_FLOOR = 0.90
+# --- telemetry overhead gates (ISSUE 9) -----------------------------------
+# Disabled-path per-step wall-clock is gated at 1% vs the committed
+# baseline — far tighter than the generic 10% gate, because "telemetry off"
+# must be strictly zero-cost (one attribute check per guard site). The
+# absolute floor absorbs container jitter on a ~25ms step; the regression
+# class this catches (tracer work leaking into the disabled path, e.g. span
+# bookkeeping running unguarded) costs well above it.
+TELEMETRY_THRESHOLD = 0.01
+TELEMETRY_FLOOR_MS = 1.0
+# Within-artifact: tracing while ON must stay cheap relative to the step
+# itself (both modes measured interleaved in the same run).
+TELEMETRY_RATIO_CEILING = 1.25
+# --- artifact schema (--schema-only, ISSUE 9) -----------------------------
+# Required sections and per-section required keys of the committed
+# artifact. CI runs ``check_regression.py --schema-only`` to validate the
+# structure without re-running any kernels; every key ending in a timing
+# suffix must additionally be a positive finite number.
+SCHEMA_SECTIONS = {
+    "dispatch": (
+        "batch", "steps", "before_step_ms", "after_step_ms",
+        "jit_retraces_after_warmup",
+    ),
+    "dispatch_split_light": ("batch", "steps", "after_step_ms"),
+    "modeled_hbm": (),
+    "kernel_latency": (),
+    "fused_launch": (),
+    "e2e_serving": (),
+    "kv_quant": (),
+    "sharded_decode": (),
+    "telemetry": (
+        "batch", "steps", "disabled_step_ms", "enabled_step_ms",
+        "overhead_ratio",
+    ),
+}
+_TIMING_SUFFIXES = ("_ms", "_ms_per_step", "_us", "_time_s")
 
 
 def git_baseline(path: str = "benchmarks/BENCH_decode_attention.json") -> Optional[Dict]:
@@ -267,6 +310,37 @@ def compare(baseline: Dict, current: Dict) -> List[str]:
             f"shared-prefix page references are shard-local "
             f"(must be >= {100 * SHARDED_PLACEMENT_FLOOR:.0f}%)"
         )
+    # --- telemetry overhead gates (ISSUE 9) --------------------------------
+    c_t, b_t = current.get("telemetry", {}), baseline.get("telemetry", {})
+    if c_t:
+        if c_t.get("overhead_ratio", 0.0) > TELEMETRY_RATIO_CEILING:
+            failures.append(
+                f"telemetry: enabled step is {c_t['overhead_ratio']:.2f}x "
+                f"the disabled step (must be <= {TELEMETRY_RATIO_CEILING}x)"
+            )
+        # structural: the enabled pass must have actually attributed steps,
+        # else the A/B silently stopped exercising the tracing hooks
+        if c_t.get("attr_decode_steps", 1) == 0:
+            failures.append(
+                "telemetry.attr_decode_steps is 0 "
+                "(enabled pass traced nothing — A/B not exercised)"
+            )
+        comparable = b_t.get("batch") == c_t.get("batch") and b_t.get(
+            "steps"
+        ) == c_t.get("steps")
+        if comparable and "disabled_step_ms" in b_t:
+            base_v, cur_v = b_t["disabled_step_ms"], c_t["disabled_step_ms"]
+            if (
+                cur_v > base_v * (1 + TELEMETRY_THRESHOLD)
+                and cur_v - base_v > TELEMETRY_FLOOR_MS
+            ):
+                failures.append(
+                    f"telemetry.disabled_step_ms: {base_v:.3f} -> "
+                    f"{cur_v:.3f} ms "
+                    f"(+{100 * (cur_v / max(base_v, 1e-12) - 1):.1f}% > "
+                    f"{100 * TELEMETRY_THRESHOLD:.0f}% — telemetry off "
+                    f"must be zero-cost)"
+                )
     for wl, bal in sorted(c_f.get("balance", {}).items()):
         # acceptance bound: rebalanced max-item step count within 2x mean
         if bal.get("ratio_after", 0.0) > 2.0 + 1e-9:
@@ -284,6 +358,61 @@ def compare(baseline: Dict, current: Dict) -> List[str]:
     return failures
 
 
+def validate_schema(doc: Dict) -> List[str]:
+    """Structural validation of the artifact (no kernels re-run).
+
+    Checks the schema version, that every required section and key is
+    present, and that every timing-suffixed number anywhere in the
+    document is a positive finite float (a 0.0 or NaN timing means a
+    benchmark silently failed to measure).
+    """
+    problems: List[str] = []
+    if doc.get("schema") != bench_report.SCHEMA:
+        problems.append(
+            f"schema version is {doc.get('schema')!r} "
+            f"(expected {bench_report.SCHEMA})"
+        )
+    for section, keys in SCHEMA_SECTIONS.items():
+        s = doc.get(section)
+        if not isinstance(s, dict) or not s:
+            problems.append(f"section {section!r} missing or empty")
+            continue
+        for k in keys:
+            if k not in s:
+                problems.append(f"{section}.{k} missing")
+    for scen in ("shared", "split_light"):
+        f = doc.get("fused_launch", {}).get(scen, {})
+        if f:
+            for k in ("fused_ms_per_step", "groups_ms_per_step",
+                      "launches_fused"):
+                if k not in f:
+                    problems.append(f"fused_launch.{scen}.{k} missing")
+    for key, row in doc.get("modeled_hbm", {}).items():
+        for k in ("kv_bytes", "inter_bytes_split_aware"):
+            if k not in row:
+                problems.append(f"modeled_hbm.{key}.{k} missing")
+    for key, row in doc.get("kernel_latency", {}).items():
+        if "pat_us" not in row:
+            problems.append(f"kernel_latency.{key}.pat_us missing")
+
+    def walk(node, path: str):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{path}.{k}" if path else str(k))
+            return
+        if isinstance(node, bool) or not isinstance(node, (int, float)):
+            return
+        leaf = path.rsplit(".", 1)[-1]
+        if any(leaf.endswith(sfx) for sfx in _TIMING_SUFFIXES):
+            ok = node > 0 and node == node and node != float("inf")
+            if not ok:
+                problems.append(f"{path} = {node!r} is not a positive "
+                                f"finite timing")
+
+    walk(doc, "")
+    return problems
+
+
 def main(argv: List[str]) -> int:
     cur_path = bench_report.DEFAULT_PATH
     base: Optional[Dict] = None
@@ -294,6 +423,15 @@ def main(argv: List[str]) -> int:
         elif a == "--baseline":
             with open(argv[i + 1]) as f:
                 base = json.load(f)
+    if "--schema-only" in argv:
+        problems = validate_schema(bench_report.load(cur_path))
+        if problems:
+            print("ARTIFACT SCHEMA INVALID:")
+            for p in problems:
+                print("  -", p)
+            return 1
+        print(f"artifact schema valid ({cur_path})")
+        return 0
     if base is None:
         base = git_baseline()
     if base is None:

@@ -93,9 +93,11 @@ def mixed_longprompt_report(
         t0 = time.perf_counter()
         summary = replay_trace(eng, reqs)
         summary["wall_s"] = time.perf_counter() - t0
-        summary["steps"] = eng.metrics.steps
-        summary["idle_steps"] = eng.metrics.idle_steps
-        summary["prefill_chunks"] = eng.metrics.prefill_chunks
+        # engine counters via the one public surface (ISSUE 9 registry)
+        snap = eng.metrics_snapshot()
+        summary["steps"] = int(snap["engine.steps"])
+        summary["idle_steps"] = int(snap["engine.idle_steps"])
+        summary["prefill_chunks"] = int(snap["engine.prefill_chunks"])
         out[name] = summary
         if verbose:
             print(
@@ -131,7 +133,7 @@ def policy_report(
             ),
         )
         summary = replay_trace(eng, reqs, max_new_cap=8)
-        summary["plan_hit_rate"] = eng.backend.cache.stats.hit_rate
+        summary["plan_hit_rate"] = eng.metrics_snapshot()["plan_cache.hit_rate"]
         out[policy] = summary
         if verbose:
             print(
@@ -199,7 +201,7 @@ def run(
                 if not eng.step():
                     break
                 if eng.running:
-                    wp = eng.backend.cache._plan
+                    wp = eng.backend.cache.current_plan
                     if wp is not None and wp.groups:
                         # model at FULL-arch scale: the plan's page/sharing
                         # structure is scale-invariant, so full head dims +
@@ -227,7 +229,7 @@ def run(
                 "p99_tpot_ms": 1e3 * float(np.percentile(tpot, 99)) if tpot else 0.0,
                 "modeled_attn_ms": modeled_attn_s * 1e3,
                 "wall_s": wall,
-                "plan_hit_rate": eng.backend.cache.stats.hit_rate,
+                "plan_hit_rate": eng.metrics_snapshot()["plan_cache.hit_rate"],
             }
             rows.append(row)
             if verbose:

@@ -1,0 +1,115 @@
+"""ISSUE 9: telemetry overhead A/B — is tracing really zero-cost when off?
+
+Measures steady-state decode-step wall-clock of the SAME engine workload
+twice: telemetry disabled (the default NULL_TRACER path — one ``enabled``
+attribute check per guard site) and telemetry enabled (per-request span
+events, per-step events, and per-step HBM attribution all live).
+
+Both engines run with ``synced_timing=False`` so the timed section is the
+host-side step work (schedule + plan service + dispatch) where every
+tracing hook lives; device completion is asynchronous and identical on
+both sides. Timing interleaves the two modes across repeats (disabled,
+enabled, disabled, ...) with a fresh engine per pass — jit caches are
+process-global, so only the very first pass compiles — and reports the
+MINIMUM single-step time per mode, the standard noisy-timer discipline.
+
+benchmarks/check_regression.py gates two things on this section:
+  * within-artifact: enabled/disabled ratio stays bounded (tracing is
+    cheap even when on),
+  * across PRs: disabled_step_ms vs the committed baseline at 1% + a
+    small absolute floor (the regression class this catches — tracer work
+    leaking into the disabled path — costs far more than the floor).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.attention import PatConfig
+from repro.models import transformer as T
+from repro.serving.engine import Engine
+
+
+def engine_step_overhead(
+    batch: int = 8, prompt_len: int = 24, steps: int = 10, repeats: int = 3,
+    verbose: bool = True,
+) -> Dict:
+    """Interleaved disabled/enabled per-decode-step wall-clock A/B."""
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    # shared 16-token prefix so the enabled side's attribution sees real
+    # packing savings (the counterfactual differs from actual bytes)
+    shared = rng.integers(0, cfg.vocab_size, 16).tolist()
+    prompts = [
+        shared + rng.integers(0, cfg.vocab_size, prompt_len - 16).tolist()
+        for _ in range(batch)
+    ]
+
+    def fresh(telemetry: bool) -> Engine:
+        eng = Engine(
+            params, cfg, num_pages=512,
+            pat_config=PatConfig(impl="xla", merge_impl="xla"),
+            eos_id=-1, telemetry=telemetry, synced_timing=False,
+        )
+        for p in prompts:
+            eng.submit(p, max_new_tokens=steps + 6)
+        # drain prefill so every timed step is a pure full-batch decode
+        guard = 0
+        while len(eng.running) < batch:
+            eng.step()
+            guard += 1
+            assert guard < 64, "prefill did not converge"
+        eng.step()  # one settling decode step
+        return eng
+
+    # warm: compile the decode bucket before any timed pass
+    fresh(False)
+
+    t = {"disabled": float("inf"), "enabled": float("inf")}
+    last_enabled = None
+    for _ in range(repeats):
+        for mode, flag in (("disabled", False), ("enabled", True)):
+            eng = fresh(flag)
+            for _ in range(steps):
+                t0 = time.perf_counter()
+                eng.step()
+                t[mode] = min(t[mode], time.perf_counter() - t0)
+            if flag:
+                last_enabled = eng
+
+    snap = last_enabled.metrics_snapshot()
+    res = {
+        "batch": batch,
+        "steps": steps,
+        "repeats": repeats,
+        "disabled_step_ms": t["disabled"] * 1e3,
+        "enabled_step_ms": t["enabled"] * 1e3,
+        "overhead_ratio": t["enabled"] / max(t["disabled"], 1e-12),
+        # sanity that the enabled side actually traced + attributed
+        "attr_decode_steps": snap.get("attr.decode_steps", 0),
+        "attr_savings_fraction": snap.get("attr.savings_fraction", 0.0),
+        "step_events": len(last_enabled.tracer.steps),
+    }
+    if verbose:
+        print(
+            f"telemetry B={batch}: disabled={res['disabled_step_ms']:.3f}"
+            f"ms/step enabled={res['enabled_step_ms']:.3f}ms/step "
+            f"ratio={res['overhead_ratio']:.2f}x "
+            f"(attributed {res['attr_decode_steps']} steps, "
+            f"savings={res['attr_savings_fraction']:.2f})",
+            flush=True,
+        )
+    return res
+
+
+if __name__ == "__main__":
+    res = engine_step_overhead()
+    from benchmarks import bench_report
+
+    bench_report.update_section("telemetry", res)

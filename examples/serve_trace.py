@@ -10,6 +10,7 @@ Run:
 """
 
 import argparse
+import json
 import os
 
 import jax
@@ -17,9 +18,9 @@ import jax
 from repro.configs import get_config
 from repro.core.attention import PatConfig
 from repro.models import transformer as T
+from repro.obs import format_snapshot, render_summary
 from repro.serving.engine import Engine
 from repro.serving.scheduler import POLICIES, SchedulerConfig
-from repro.serving.stream import summarize
 from repro.workloads.traces import conversation_trace
 
 BACKENDS = {"PAT": "pat", "FLASH": "query_centric", "RELAY": "relay"}
@@ -37,6 +38,12 @@ def main():
                     choices=["float32", "bfloat16", "int8", "fp8"],
                     help="paged KV pool dtype (int8/fp8 = quantized pages "
                          "with per-page scales, dequantized in-kernel)")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="pretty-print the full metrics snapshot (every "
+                         "registry metric, grouped by namespace) after "
+                         "the summary")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="also dump the snapshot as JSON")
     args = ap.parse_args()
     backend = args.backend or BACKENDS.get(
         os.environ.get("PAT_ATTENTION_BACKEND", "PAT").upper(), "pat"
@@ -55,21 +62,26 @@ def main():
         eos_id=-1,
         scheduler=SchedulerConfig(policy=args.policy,
                                   chunk_tokens=args.chunk_tokens),
+        telemetry=bool(args.snapshot or args.metrics_out),
     )
     rids = [eng.submit(r.tokens, max_new_tokens=args.max_new) for r in reqs]
     # stream the first request's tokens as they are produced (the iterator
     # pumps the engine; the other requests decode in the same steps)
     first = [ev.token for ev in eng.stream(rids[0])]
-    m = eng.run()  # drain the rest
-    s = summarize(m.finished)
-    st = eng.backend.cache.stats
-    print(f"backend={backend} policy={args.policy} finished={len(m.finished)}")
-    print(f"TTFT p50/p95 {s['ttft_ms_p50']:.0f}/{s['ttft_ms_p95']:.0f} ms   "
-          f"TPOT p50/p95 {s['tpot_ms_p50']:.1f}/{s['tpot_ms_p95']:.1f} ms   "
-          f"(virtual: TPOT p95 {s['tpot_vt_p95']:.0f}vt)")
-    print(f"pack plans: {st.misses} scheduled, {st.hits} lazy hits "
-          f"({st.hit_rate:.0%}), {st.refreshes} length refreshes")
+    eng.run()  # drain the rest
+    # same rendering path as launch/serve.py: obs.report over the one
+    # registry snapshot (no private-field reach-ins, no summary drift)
+    reg = eng.metrics_registry()
+    snap = reg.snapshot()
+    print(render_summary(snap, dict(backend=backend, policy=args.policy)))
     print("streamed output:", first[:8])
+    if args.snapshot:
+        print(format_snapshot(snap, reg.owners()))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"snapshot": snap, "owners": reg.owners(),
+                       "spans": eng.tracer.span_dicts()}, f, indent=1)
+        print(f"metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -103,6 +103,13 @@ class PlanCache:
         self._plan: Optional[work_plan.WorkPlan] = None
         self._kv_lens: Optional[np.ndarray] = None
 
+    @property
+    def current_plan(self) -> Optional[work_plan.WorkPlan]:
+        """The cached plan of the live fingerprint (None before the first
+        ``get``). The public read the bench harness and telemetry use —
+        callers must not mutate it."""
+        return self._plan
+
     def _selector_for(
         self, batch_size: int, max_kv_len: int, page_size: int
     ) -> TileSelector:

@@ -431,9 +431,10 @@ def _seq_callable(
             num_kv_heads=num_kv_heads, interpret=interpret,
             kv_quant=kv_quant,
         )
-        out = cross_shard_merge(
-            num, m, l, axis, merge_impl=merge_impl, interpret=interpret
-        )
+        with jax.named_scope("pat_cross_shard_merge"):
+            out = cross_shard_merge(
+                num, m, l, axis, merge_impl=merge_impl, interpret=interpret
+            )
         B, Hq, _ = q.shape
         return out.reshape(B, Hq, -1).astype(q.dtype)
 

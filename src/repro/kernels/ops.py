@@ -371,38 +371,42 @@ def _forward_merge(
                 step_kscale = k_scales[:, ga.step_pages]  # [Hkv, S, ppb]
                 if v_scales is not None:
                     step_vscale = v_scales[:, ga.step_pages]
-            o, st = pat_decode.pat_decode_forward(
-                qp,
-                k_pages,
-                v_pages,
-                ga.step_item,
-                ga.step_pages,
-                ga.step_npages,
-                ga.step_len,
-                ga.step_start,
-                ga.step_end,
-                ga.step_ord,
-                ga.act_steps,
-                ga.act_total,
-                ga.row_sole,
-                step_mclass=ga.step_mclass,
-                m_classes=ga.m_classes,
-                kv_tile=ga.kv_tile,
-                scale=scale,
-                v_head_dim=dv,
-                interpret=interpret,
-                kv_quant=kv_quant,
-                step_kscale=step_kscale,
-                step_vscale=step_vscale,
-            )
+            # named_scope: trace-time label only (zero steady-state cost
+            # under jit) so xprof/Perfetto profiles name the fused launch
+            with jax.named_scope("pat_forward"):
+                o, st = pat_decode.pat_decode_forward(
+                    qp,
+                    k_pages,
+                    v_pages,
+                    ga.step_item,
+                    ga.step_pages,
+                    ga.step_npages,
+                    ga.step_len,
+                    ga.step_start,
+                    ga.step_end,
+                    ga.step_ord,
+                    ga.act_steps,
+                    ga.act_total,
+                    ga.row_sole,
+                    step_mclass=ga.step_mclass,
+                    m_classes=ga.m_classes,
+                    kv_tile=ga.kv_tile,
+                    scale=scale,
+                    v_head_dim=dv,
+                    interpret=interpret,
+                    kv_quant=kv_quant,
+                    step_kscale=step_kscale,
+                    step_vscale=step_vscale,
+                )
         elif impl == "xla":
             quant = dict(kv_quant=kv_quant, k_scales=k_scales, v_scales=v_scales)
             if len(ga.m_classes) == 1:
-                o, st = xla_group_forward(
-                    qp, k_pages, v_pages, ga.item_pages, ga.item_kv_len,
-                    scale=scale, v_head_dim=dv, row_sole=ga.row_sole,
-                    **quant,
-                )
+                with jax.named_scope("pat_forward"):
+                    o, st = xla_group_forward(
+                        qp, k_pages, v_pages, ga.item_pages, ga.item_kv_len,
+                        scale=scale, v_head_dim=dv, row_sole=ga.row_sole,
+                        **quant,
+                    )
             else:
                 # Per-m-class compute: each class's items run at the class
                 # width mc instead of the plan-wide m_max — the padded-MMA
@@ -458,13 +462,14 @@ def _forward_merge(
             split_st = split_st.at[ga.split_dst].set(rows_st, mode="drop")
 
     if use_slow:
-        if merge_impl == "pallas":
-            merged = merge_mod.merge_rows(
-                split_o, split_st, split_table, interpret=interpret
-            )
-        else:
-            merged = ref_mod.merge_rows_ref(split_o, split_st, split_table)
-        out = out.at[split_qh].set(merged, mode="drop")
+        with jax.named_scope("pat_merge"):
+            if merge_impl == "pallas":
+                merged = merge_mod.merge_rows(
+                    split_o, split_st, split_table, interpret=interpret
+                )
+            else:
+                merged = ref_mod.merge_rows_ref(split_o, split_st, split_table)
+            out = out.at[split_qh].set(merged, mode="drop")
     return out.reshape(B, Hq, dv).astype(q.dtype)
 
 

@@ -17,6 +17,8 @@ Run:
 """
 
 import argparse
+import contextlib
+import json
 import os
 import sys
 
@@ -25,11 +27,15 @@ import jax
 from repro.configs import get_config
 from repro.core.attention import PatConfig
 from repro.models import transformer as T
+from repro.obs import render_summary
 from repro.serving.engine import Engine
 from repro.serving.replay import replay_trace
 from repro.serving.scheduler import POLICIES, SchedulerConfig
-from repro.serving.stream import summarize
-from repro.workloads.traces import conversation_trace, toolagent_trace
+from repro.workloads.traces import (
+    conversation_trace,
+    mixed_longprompt_trace,
+    toolagent_trace,
+)
 
 BACKENDS = {"PAT": "pat", "FLASH": "query_centric", "RELAY": "relay"}
 
@@ -38,7 +44,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--trace", default="conversation",
-                    choices=["conversation", "toolagent"])
+                    choices=["conversation", "toolagent", "mixed_longprompt"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--backend", default=None)
@@ -79,6 +85,26 @@ def main():
                     help="kv mesh parallelism: head (GQA KV-head "
                          "parallel) / seq (KV-sequence parallel, MLA and "
                          "long prefixes) / auto")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable per-request span tracing and per-step "
+                         "HBM attribution (implied by the output flags "
+                         "below); off = strictly zero tracing cost")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the end-of-run metrics snapshot (plus "
+                         "per-request spans) as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace.json of request "
+                         "spans and engine steps on the virtual clock")
+    ap.add_argument("--step-log", default=None, metavar="PATH",
+                    help="write the per-step JSONL event log")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the metrics registry in Prometheus text "
+                         "exposition format")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="wrap the run in jax.profiler.trace(DIR) for "
+                         "xprof/TensorBoard; kernel regions are labeled "
+                         "(pat_forward, pat_merge, pat_prefix_gather, "
+                         "pat_cross_shard_merge)")
     args = ap.parse_args()
     if args.mesh > 1 and jax.device_count() < args.mesh:
         # The device count is fixed at backend init, so a too-small host
@@ -106,16 +132,25 @@ def main():
 
     cfg = get_config(args.arch).reduced(dtype="float32")
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
-    fn = conversation_trace if args.trace == "conversation" else toolagent_trace
-    kw = (
-        dict(prefix_lens=(16, 48, 160), prompt_mean=24, output_mean=12)
-        if args.trace == "conversation"
-        else dict(tool_prompt_range=(96, 256), session_template=32,
-                  prompt_mean=24, output_mean=12)
+    if args.trace == "mixed_longprompt":
+        # the chunked-prefill acceptance workload; per-request output
+        # budgets are part of the trace shape, so --max-new is not applied
+        reqs = mixed_longprompt_trace(vocab=cfg.vocab_size, seed=1)
+    else:
+        fn = (conversation_trace if args.trace == "conversation"
+              else toolagent_trace)
+        kw = (
+            dict(prefix_lens=(16, 48, 160), prompt_mean=24, output_mean=12)
+            if args.trace == "conversation"
+            else dict(tool_prompt_range=(96, 256), session_template=32,
+                      prompt_mean=24, output_mean=12)
+        )
+        reqs = fn(num_requests=args.requests, vocab=cfg.vocab_size, seed=1,
+                  arrival=args.arrival, **kw)
+    telemetry = bool(
+        args.telemetry or args.metrics_out or args.trace_out
+        or args.step_log or args.prom_out
     )
-    reqs = fn(num_requests=args.requests, vocab=cfg.vocab_size, seed=1,
-              arrival=args.arrival, **kw)
-
     eng = Engine(
         params, cfg, num_pages=args.num_pages,
         pat_config=PatConfig(impl=args.impl,
@@ -131,50 +166,61 @@ def main():
             chunk_tokens=args.chunk_tokens,
             step_token_budget=args.token_budget,
         ),
+        telemetry=telemetry,
     )
-    if args.stream:
-        rids = [eng.submit(r.tokens, max_new_tokens=args.max_new) for r in reqs]
-        # the stream pumps the engine; remaining requests drain via run()
-        for ev in eng.stream(rids[0]):
-            print(f"  rid {rids[0]} token[{ev.index}] = {ev.token} "
-                  f"(vt={ev.t_virtual:.0f})", flush=True)
-        eng.run()
-    else:
-        for r in reqs:
-            r.max_new_tokens = args.max_new
-        replay_trace(eng, reqs, tokens_per_sec=args.tokens_per_sec)
-    m = eng.metrics
-    s = summarize(m.finished)
-    st = eng.backend.cache.stats
-    print(f"backend={backend} impl={args.impl} trace={args.trace} "
-          f"policy={args.policy} chunk={args.chunk_tokens} "
-          f"finished={len(m.finished)}/{len(reqs)}")
-    print(f"TTFT p50/p95/p99 {s['ttft_ms_p50']:.0f}/{s['ttft_ms_p95']:.0f}/"
-          f"{s['ttft_ms_p99']:.0f} ms   TPOT p50/p95/p99 "
-          f"{s['tpot_ms_p50']:.1f}/{s['tpot_ms_p95']:.1f}/"
-          f"{s['tpot_ms_p99']:.1f} ms")
-    print(f"virtual (deterministic): TTFT p95 {s['ttft_vt_p95']:.0f}vt  "
-          f"TPOT p95 {s['tpot_vt_p95']:.0f}vt  max gap {s['max_gap_vt']:.0f}vt")
-    print(f"steps={m.steps} idle={m.idle_steps} chunks={m.prefill_chunks} "
-          f"prefill_tokens={m.prefill_tokens}")
-    print(f"pack: {st.misses} schedules, {st.hits} lazy hits, "
-          f"{st.refreshes} refreshes, sched {1e3*st.schedule_time_s:.1f}ms total")
+    profile = (
+        jax.profiler.trace(args.profile_dir)
+        if args.profile_dir else contextlib.nullcontext()
+    )
+    with profile:
+        if args.stream:
+            rids = [
+                eng.submit(r.tokens, max_new_tokens=args.max_new) for r in reqs
+            ]
+            # the stream pumps the engine; remaining requests drain via run()
+            for ev in eng.stream(rids[0]):
+                print(f"  rid {rids[0]} token[{ev.index}] = {ev.token} "
+                      f"(vt={ev.t_virtual:.0f})", flush=True)
+            eng.run()
+        else:
+            if args.trace != "mixed_longprompt":
+                for r in reqs:
+                    r.max_new_tokens = args.max_new
+            replay_trace(eng, reqs, tokens_per_sec=args.tokens_per_sec)
+
+    # one rendering path (obs.report), shared with examples/serve_trace.py,
+    # fed from the same registry snapshot the machine artifacts persist
+    reg = eng.metrics_registry()
+    snap = reg.snapshot()
+    meta = dict(backend=backend, impl=args.impl, trace=args.trace,
+                policy=args.policy, chunk=args.chunk_tokens)
     if eng.shard is not None:
-        free = getattr(eng.kv.allocator, "free_per_shard", None)
-        placement = getattr(eng.kv.allocator, "placement", None)
-        print(f"mesh: {eng.shard.tag} over {jax.device_count()} devices"
-              + (f", free/shard={free()}" if free else ""))
-        if placement:
-            hits, reqs = placement["prefer_hits"], placement["prefer_requests"]
-            print(f"placement: {placement['allocs']} allocs, "
-                  f"{hits}/{reqs} prefix-affine, "
-                  f"{placement['spilled_pages']} pages spilled")
-    tc = eng.backend.tuning
-    if tc is not None:
-        status = f"load_error={tc.load_error}" if tc.load_error else \
-            f"{len(tc)} entries"
-        print(f"tuning: {args.tuning_cache} ({status}), "
-              f"{tc.stats['hits']} hits / {tc.stats['misses']} misses")
+        meta["shard_tag"] = eng.shard.tag
+    if args.tuning_cache is not None:
+        meta["tuning_cache"] = args.tuning_cache
+    print(render_summary(snap, meta))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(
+                {
+                    "meta": meta,
+                    "snapshot": snap,
+                    "owners": reg.owners(),
+                    "spans": eng.tracer.span_dicts(),
+                },
+                f, indent=1,
+            )
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        eng.tracer.write_chrome_trace(args.trace_out)
+        print(f"perfetto trace -> {args.trace_out}")
+    if args.step_log:
+        eng.tracer.write_step_log(args.step_log)
+        print(f"step log -> {args.step_log}")
+    if args.prom_out:
+        with open(args.prom_out, "w") as f:
+            f.write(reg.prometheus_text())
+        print(f"prometheus exposition -> {args.prom_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,45 @@
+"""Decode telemetry: per-request spans, unified metrics, HBM attribution.
+
+Three pieces (DESIGN.md §11):
+
+- ``trace``: per-request span tracer on the virtual clock with
+  Chrome/Perfetto ``trace.json`` export and a JSONL step log; strictly
+  zero-cost when disabled (``NULL_TRACER``).
+- ``metrics``: one registry of counters/gauges/histograms unifying the
+  engine, plan-cache, radix, allocator, dispatch, tuning, and sharding
+  stats behind dotted canonical names, with ``snapshot()`` and
+  Prometheus text exposition.
+- ``attribution``: per-step modeled HBM bytes vs the one-query-per-CTA
+  counterfactual — "bytes saved by packing" as a first-class gauge.
+"""
+
+from .attribution import StepAttribution, attribute_step, counterfactual_page_fetches
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    parse_prometheus_text,
+    prom_name,
+)
+from .report import format_snapshot, render_summary
+from .trace import NULL_TRACER, NullTracer, Span, StepEvent, Tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "parse_prometheus_text",
+    "prom_name",
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "Span",
+    "StepEvent",
+    "StepAttribution",
+    "attribute_step",
+    "counterfactual_page_fetches",
+    "render_summary",
+    "format_snapshot",
+]

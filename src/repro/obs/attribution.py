@@ -1,0 +1,116 @@
+"""Prefix-sharing effectiveness attribution, per decode step.
+
+PAT's claim is byte-shaped: packing queries that share a prefix means
+the shared KV pages are streamed from HBM once instead of once per
+query. This module prices a live ``WorkPlan`` against the
+**one-query-per-CTA counterfactual** — the naive kernel where every
+query independently fetches its full KV range — using the same modeled
+cost primitives as ``latmodel``/``memory_traffic`` (``page_hbm_bytes``
+charges real payload + scale-sidecar bytes per (head, page), so the
+attribution is dtype-aware and agrees with the bench reports).
+
+The counterfactual is exactly what ``pack_scheduler.schedule(...,
+strategy="query_centric")`` would fetch: query q touches
+``ceil(kv_len[q] / page_size)`` pages, each across all Hkv KV heads,
+with no sharing. The actual side is ``WorkPlan.dma_page_fetches()``,
+which already counts live pages of active steps per KV head and skips
+zero-token steps and tile padding. Their difference is "bytes saved by
+packing" — a first-class gauge, not a bench-only artifact.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..core import kv_quant
+
+__all__ = ["StepAttribution", "attribute_step", "counterfactual_page_fetches"]
+
+
+@dataclass
+class StepAttribution:
+    """Modeled HBM traffic of one decode step vs the unpacked baseline."""
+
+    actual_bytes: int  # what the planned kernel fetches
+    counterfactual_bytes: int  # one-query-per-CTA baseline
+    bytes_saved: int
+    actual_page_fetches: int  # (head, page) fetches, planned
+    counterfactual_page_fetches: int
+    fast_path_queries: int  # sole-partial rows: in-kernel normalize
+    split_queries: int  # rows taking the compact merge
+    launches: int  # pallas_call launches this step
+
+    @property
+    def savings_fraction(self) -> float:
+        if self.counterfactual_bytes == 0:
+            return 0.0
+        return self.bytes_saved / self.counterfactual_bytes
+
+    @property
+    def fast_path_fraction(self) -> float:
+        total = self.fast_path_queries + self.split_queries
+        return 1.0 if total == 0 else self.fast_path_queries / total
+
+    def to_dict(self) -> dict:
+        return {
+            "actual_bytes": self.actual_bytes,
+            "counterfactual_bytes": self.counterfactual_bytes,
+            "bytes_saved": self.bytes_saved,
+            "savings_fraction": self.savings_fraction,
+            "actual_page_fetches": self.actual_page_fetches,
+            "counterfactual_page_fetches": self.counterfactual_page_fetches,
+            "fast_path_queries": self.fast_path_queries,
+            "split_queries": self.split_queries,
+            "fast_path_fraction": self.fast_path_fraction,
+            "launches": self.launches,
+        }
+
+
+def counterfactual_page_fetches(
+    kv_lens: np.ndarray, page_size: int, num_kv_heads: int
+) -> int:
+    """(head, page) fetches if every query streamed its own full KV."""
+    lens = np.asarray(kv_lens, dtype=np.int64)
+    pages = (lens + page_size - 1) // page_size
+    return int(pages.sum()) * int(num_kv_heads)
+
+
+def attribute_step(
+    wp,
+    kv_lens: np.ndarray,
+    *,
+    head_dim: int,
+    v_head_dim: Optional[int] = None,
+    kv_dtype: str = "bfloat16",
+    share_kv: bool = False,
+) -> StepAttribution:
+    """Price a planned step against the one-query-per-CTA counterfactual.
+
+    ``wp`` is the live ``WorkPlan`` the engine just built (or refreshed);
+    ``kv_lens`` are the per-query KV lengths that went into it. Both
+    sides are modeled bytes from the same ``kv_quant.page_hbm_bytes``
+    price, so quantized pools attribute consistently with the
+    ``memory_traffic``/``latmodel`` benches.
+    """
+    page_bytes = kv_quant.page_hbm_bytes(
+        wp.page_size, head_dim, v_head_dim, kv_dtype, share_kv=share_kv
+    )
+    actual_fetches = wp.dma_page_fetches()
+    cf_fetches = counterfactual_page_fetches(
+        kv_lens, wp.page_size, wp.num_kv_heads
+    )
+    n_split = wp.num_split_queries
+    launches = 1 if wp.unified is not None else max(len(wp.groups), 1)
+    return StepAttribution(
+        actual_bytes=actual_fetches * page_bytes,
+        counterfactual_bytes=cf_fetches * page_bytes,
+        bytes_saved=max(cf_fetches - actual_fetches, 0) * page_bytes,
+        actual_page_fetches=actual_fetches,
+        counterfactual_page_fetches=cf_fetches,
+        fast_path_queries=wp.batch_size - n_split,
+        split_queries=n_split,
+        launches=launches,
+    )

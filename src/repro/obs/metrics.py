@@ -1,0 +1,295 @@
+"""Unified metrics registry: counters / gauges / histograms, one namespace.
+
+Before this subsystem every layer kept its own ad-hoc stats object —
+``EngineMetrics``, ``PlanCache.stats``, ``ops._DISPATCH_STATS``, the
+allocator's placement dict, TuningCache hit counters — and every consumer
+(serve.py's end-of-run print, the bench harness, the tests) reached into
+a different private field. The registry is the one namespace they all
+publish into (DESIGN.md §11 documents every exported name): dotted
+canonical names owned by a subsystem (``engine.steps``,
+``plan_cache.hit_rate``, ``attr.bytes_saved``), a ``snapshot()`` dict for
+machine-readable artifacts (``serve.py --metrics-out``), and Prometheus
+text exposition for scrape-style consumers.
+
+The registry is *pull-friendly*: subsystems either hold a metric handle
+and update it on their hot path (cheap — an attribute store), or are
+polled at snapshot time by ``Engine.metrics_snapshot()``, which copies
+their existing stats objects into gauges. Nothing here runs per-step
+unless a caller explicitly updates a metric per step, so an engine with
+telemetry disabled pays zero registry cost.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "parse_prometheus_text",
+    "prom_name",
+]
+
+# Prometheus metric names: [a-zA-Z_:][a-zA-Z0-9_:]*. Canonical dotted
+# names map by replacing separators; the prefix namespaces the exporter.
+PROM_PREFIX = "pat"
+_PROM_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def prom_name(name: str) -> str:
+    """Canonical dotted name -> Prometheus exposition name."""
+    return f"{PROM_PREFIX}_{_PROM_BAD.sub('_', name.replace('.', '_'))}"
+
+
+@dataclass
+class Counter:
+    """Monotone counter. ``inc`` on the hot path is one float add."""
+
+    name: str
+    help: str = ""
+    owner: str = ""
+    value: float = 0.0
+
+    kind = "counter"
+
+    def inc(self, v: float = 1.0) -> None:
+        if v < 0:
+            raise ValueError(f"counter {self.name} cannot decrease (inc {v})")
+        self.value += v
+
+
+@dataclass
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    name: str
+    help: str = ""
+    owner: str = ""
+    value: float = 0.0
+
+    kind = "gauge"
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+# Default buckets cover the per-step latencies this repo measures
+# (sub-ms host dispatch up to multi-second cold prefills), in ms.
+DEFAULT_BUCKETS = (0.5, 1, 2.5, 5, 10, 25, 50, 100, 250, 500, 1000, 2500)
+
+
+@dataclass
+class Histogram:
+    """Fixed-bucket histogram with Prometheus cumulative semantics."""
+
+    name: str
+    help: str = ""
+    owner: str = ""
+    buckets: Sequence[float] = DEFAULT_BUCKETS
+    counts: List[int] = field(default_factory=list)  # per finite bucket
+    inf_count: int = 0
+    sum: float = 0.0
+    count: int = 0
+
+    kind = "histogram"
+
+    def __post_init__(self):
+        self.buckets = tuple(sorted(float(b) for b in self.buckets))
+        if not self.counts:
+            self.counts = [0] * len(self.buckets)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.sum += v
+        self.count += 1
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                self.counts[i] += 1
+                return
+        self.inf_count += 1
+
+    def cumulative(self) -> List[Tuple[float, int]]:
+        """[(le, cumulative_count)], ending with (+Inf, count)."""
+        out, acc = [], 0
+        for b, c in zip(self.buckets, self.counts):
+            acc += c
+            out.append((b, acc))
+        out.append((math.inf, self.count))
+        return out
+
+    def snapshot_value(self) -> Dict:
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "buckets": {
+                ("+Inf" if math.isinf(le) else repr(le)): c
+                for le, c in self.cumulative()
+            },
+        }
+
+
+class MetricsRegistry:
+    """Process-local registry of named metrics.
+
+    ``counter`` / ``gauge`` / ``histogram`` are get-or-create: repeated
+    registration with the same name returns the same object, so subsystems
+    can resolve handles independently without threading the instance
+    everywhere. Name collisions across metric kinds are errors.
+    """
+
+    def __init__(self):
+        self._metrics: "Dict[str, object]" = {}
+
+    def _get_or_create(self, cls, name: str, help: str, owner: str, **kw):
+        m = self._metrics.get(name)
+        if m is not None:
+            if not isinstance(m, cls):
+                raise ValueError(
+                    f"metric {name!r} already registered as {m.kind}"
+                )
+            return m
+        m = cls(name=name, help=help, owner=owner, **kw)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str = "", owner: str = "") -> Counter:
+        return self._get_or_create(Counter, name, help, owner)
+
+    def gauge(self, name: str, help: str = "", owner: str = "") -> Gauge:
+        return self._get_or_create(Gauge, name, help, owner)
+
+    def histogram(
+        self,
+        name: str,
+        help: str = "",
+        owner: str = "",
+        buckets: Sequence[float] = DEFAULT_BUCKETS,
+    ) -> Histogram:
+        return self._get_or_create(
+            Histogram, name, help, owner, buckets=buckets
+        )
+
+    def set_many(self, values: Dict[str, float], owner: str = "") -> None:
+        """Bulk gauge update — the pull-side bridge for existing stats
+        objects (``Engine.metrics_snapshot`` copies each subsystem's
+        counters in with its owner tag)."""
+        for k, v in values.items():
+            if v is None:
+                continue
+            self.gauge(k, owner=owner).set(float(v))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def __len__(self) -> int:
+        return len(self._metrics)
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def metrics(self) -> List[object]:
+        return [self._metrics[k] for k in sorted(self._metrics)]
+
+    # --- export -------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        """Flat {canonical name: value} dict; histograms expand to
+        {count, sum, buckets}. This is the machine-readable artifact
+        ``serve.py --metrics-out`` and the bench harness persist."""
+        out: Dict[str, object] = {}
+        for m in self.metrics():
+            if isinstance(m, Histogram):
+                out[m.name] = m.snapshot_value()
+            else:
+                out[m.name] = m.value
+        return out
+
+    def owners(self) -> Dict[str, str]:
+        return {m.name: m.owner for m in self.metrics()}
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition format (v0.0.4)."""
+        lines: List[str] = []
+        for m in self.metrics():
+            pn = prom_name(m.name)
+            if m.help or m.owner:
+                owner = f" [{m.owner}]" if m.owner else ""
+                lines.append(f"# HELP {pn} {m.help}{owner}".rstrip())
+            lines.append(f"# TYPE {pn} {m.kind}")
+            if isinstance(m, Histogram):
+                for le, c in m.cumulative():
+                    le_s = "+Inf" if math.isinf(le) else _fmt(le)
+                    lines.append(f'{pn}_bucket{{le="{le_s}"}} {c}')
+                lines.append(f"{pn}_sum {_fmt(m.sum)}")
+                lines.append(f"{pn}_count {m.count}")
+            else:
+                lines.append(f"{pn} {_fmt(m.value)}")
+        return "\n".join(lines) + "\n"
+
+
+def _fmt(v: float) -> str:
+    if isinstance(v, float) and v.is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+_SAMPLE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$"
+)
+
+
+def parse_prometheus_text(text: str) -> Dict[str, Dict]:
+    """Parses exposition text back into {prom_name: {kind, value | hist}}.
+
+    The inverse used by the round-trip test: every metric the registry
+    exposes must survive exposition -> parse with its value (and, for
+    histograms, its cumulative bucket counts) intact.
+    """
+    out: Dict[str, Dict] = {}
+    types: Dict[str, str] = {}
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            _, _, rest = line.partition("# TYPE ")
+            name, _, kind = rest.partition(" ")
+            types[name] = kind.strip()
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE.match(line)
+        if m is None:
+            raise ValueError(f"unparseable exposition line: {raw!r}")
+        name, labels, value = m["name"], m["labels"], float(m["value"])
+        base: Optional[str] = None
+        for suffix in ("_bucket", "_sum", "_count"):
+            cand = name[: -len(suffix)]
+            if name.endswith(suffix) and types.get(cand) == "histogram":
+                base = cand
+                ent = out.setdefault(
+                    base, {"kind": "histogram", "buckets": {}, "sum": 0.0,
+                           "count": 0}
+                )
+                if suffix == "_bucket":
+                    le = dict(
+                        p.split("=", 1) for p in (labels or "").split(",") if p
+                    )["le"].strip('"')
+                    ent["buckets"][le] = int(value)
+                elif suffix == "_sum":
+                    ent["sum"] = value
+                else:
+                    ent["count"] = int(value)
+                break
+        if base is None:
+            out[name] = {"kind": types.get(name, "untyped"), "value": value}
+    return out

@@ -1,0 +1,144 @@
+"""Shared end-of-run rendering from a metrics-registry snapshot.
+
+`launch/serve.py` and `examples/serve_trace.py` used to carry separate
+hand-rolled print blocks, each reaching into a different set of private
+fields (`eng.metrics`, `eng.backend.cache.stats`, allocator placement
+dicts, tuning stats) — and they had drifted. Both now render through
+this module from the one artifact that also goes to `--metrics-out`:
+the `Engine.metrics_snapshot()` dict. Anything the console summary
+shows is by construction also in the machine-readable snapshot.
+
+All getters are tolerant of missing keys so the renderer works on
+partial snapshots (e.g. a replayed artifact from an older run).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+__all__ = ["render_summary", "format_snapshot"]
+
+
+def _g(snap: Dict, key: str, default=0):
+    v = snap.get(key, default)
+    return default if v is None else v
+
+
+def render_summary(snap: Dict, meta: Optional[Dict] = None) -> str:
+    """Multi-line human summary of a registry snapshot.
+
+    ``meta`` carries run configuration that is not a metric (backend,
+    policy, trace name, chunk size) for the header line.
+    """
+    lines: List[str] = []
+    meta = meta or {}
+    head = " ".join(f"{k}={v}" for k, v in meta.items() if v is not None)
+    finished = int(_g(snap, "engine.finished"))
+    submitted = int(_g(snap, "engine.submitted", finished))
+    lines.append(f"{head + ' ' if head else ''}finished={finished}/{submitted}")
+
+    if "slo.ttft_ms_p50" in snap:
+        lines.append(
+            "TTFT p50/p95/p99 "
+            f"{_g(snap, 'slo.ttft_ms_p50'):.0f}/"
+            f"{_g(snap, 'slo.ttft_ms_p95'):.0f}/"
+            f"{_g(snap, 'slo.ttft_ms_p99'):.0f} ms   "
+            "TPOT p50/p95/p99 "
+            f"{_g(snap, 'slo.tpot_ms_p50'):.1f}/"
+            f"{_g(snap, 'slo.tpot_ms_p95'):.1f}/"
+            f"{_g(snap, 'slo.tpot_ms_p99'):.1f} ms"
+        )
+        lines.append(
+            "virtual (deterministic): "
+            f"TTFT p95 {_g(snap, 'slo.ttft_vt_p95'):.0f}vt  "
+            f"TPOT p95 {_g(snap, 'slo.tpot_vt_p95'):.0f}vt  "
+            f"max gap {_g(snap, 'slo.max_gap_vt'):.0f}vt"
+        )
+
+    lines.append(
+        f"steps={int(_g(snap, 'engine.steps'))} "
+        f"idle={int(_g(snap, 'engine.idle_steps'))} "
+        f"chunks={int(_g(snap, 'engine.prefill_chunks'))} "
+        f"prefill_tokens={int(_g(snap, 'engine.prefill_tokens'))} "
+        f"decode_tokens={int(_g(snap, 'engine.decode_tokens'))}"
+    )
+    sync = "synced" if _g(snap, "engine.timing_synced") else "async (skewed)"
+    lines.append(
+        f"phase wall ({sync}): "
+        f"prefill {1e3 * _g(snap, 'engine.prefill_time_s'):.1f}ms  "
+        f"decode {1e3 * _g(snap, 'engine.decode_time_s'):.1f}ms  "
+        f"plan {1e3 * _g(snap, 'engine.plan_time_s'):.1f}ms"
+    )
+    lines.append(
+        f"pack: {int(_g(snap, 'plan_cache.misses'))} schedules, "
+        f"{int(_g(snap, 'plan_cache.hits'))} lazy hits "
+        f"({_g(snap, 'plan_cache.hit_rate'):.0%}), "
+        f"{int(_g(snap, 'plan_cache.refreshes'))} refreshes, "
+        f"sched {1e3 * _g(snap, 'plan_cache.schedule_time_s'):.1f}ms total"
+    )
+    if "attr.bytes_saved_total" in snap:
+        saved = _g(snap, "attr.bytes_saved_total")
+        cf = _g(snap, "attr.bytes_counterfactual_total")
+        frac = saved / cf if cf else 0.0
+        lines.append(
+            f"packing: saved {saved / 1e6:.1f} MB of {cf / 1e6:.1f} MB "
+            f"counterfactual HBM ({frac:.0%}); "
+            f"fast-path {_g(snap, 'attr.fast_path_fraction'):.0%}, "
+            f"{_g(snap, 'attr.launches_per_step'):.2f} launches/step"
+        )
+    if "radix.lookups" in snap:
+        lines.append(
+            f"radix: {int(_g(snap, 'radix.lookups'))} lookups, "
+            f"{int(_g(snap, 'radix.hit_tokens'))} prefix tokens reused, "
+            f"{int(_g(snap, 'radix.evictions'))} evictions "
+            f"({int(_g(snap, 'radix.evicted_pages'))} pages)"
+        )
+    if _g(snap, "shard.devices"):
+        line = (
+            f"mesh: {meta.get('shard_tag', 'kv')} over "
+            f"{int(_g(snap, 'shard.devices'))} devices"
+        )
+        if "shard.placement_allocs" in snap:
+            line += (
+                f"; placement: {int(_g(snap, 'shard.placement_allocs'))} "
+                f"allocs, {int(_g(snap, 'shard.prefix_affine_hits'))}/"
+                f"{int(_g(snap, 'shard.prefix_affine_requests'))} "
+                f"prefix-affine, "
+                f"{int(_g(snap, 'shard.spilled_pages'))} pages spilled"
+            )
+        lines.append(line)
+    if "tuning.entries" in snap or "tuning.hits" in snap:
+        status = (
+            "load_error" if _g(snap, "tuning.load_error")
+            else f"{int(_g(snap, 'tuning.entries'))} entries"
+        )
+        lines.append(
+            f"tuning: {meta.get('tuning_cache', '<none>')} ({status}), "
+            f"{int(_g(snap, 'tuning.hits'))} hits / "
+            f"{int(_g(snap, 'tuning.misses'))} misses"
+        )
+    return "\n".join(lines)
+
+
+def format_snapshot(snap: Dict, owners: Optional[Dict[str, str]] = None) -> str:
+    """Pretty-print every metric in the snapshot, grouped by namespace."""
+    owners = owners or {}
+    groups: Dict[str, List[str]] = {}
+    for name in sorted(snap):
+        ns = name.split(".", 1)[0]
+        v = snap[name]
+        if isinstance(v, dict):  # histogram
+            body = f"count={v.get('count')} sum={v.get('sum'):.3f}"
+        elif isinstance(v, float) and not float(v).is_integer():
+            body = f"{v:.6g}"
+        else:
+            body = str(int(v)) if isinstance(v, (int, float)) else str(v)
+        owner = owners.get(name)
+        groups.setdefault(ns, []).append(
+            f"  {name} = {body}" + (f"  [{owner}]" if owner else "")
+        )
+    out: List[str] = []
+    for ns in sorted(groups):
+        out.append(f"{ns}:")
+        out.extend(groups[ns])
+    return "\n".join(out)

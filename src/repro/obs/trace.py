@@ -1,0 +1,280 @@
+"""Per-request span tracer with Chrome/Perfetto export and a JSONL step log.
+
+Timestamps live on the engine's **virtual clock** (token units: prefill
+tokens + decode batch size per step), the same deterministic axis the SLO
+harness uses — so traces are machine-independent and reproducible, and
+two runs of the same trace produce byte-identical span timelines. Wall
+clock, when measured, rides along in event ``args`` instead of being the
+timeline. For Perfetto we emit vclock units directly as microseconds:
+one token of virtual time renders as 1 µs.
+
+Span model (one track per request, plus a step track):
+
+    submit ──(queued)── admit ──> prefill chunk*ₙ ──> decode ──> finish
+
+- ``queued``: submit→admit window (covers arrival-before-service and
+  blocked-admission time; replay's explicit idle fast-forwards are also
+  recorded as ``blocked`` instants with the window length).
+- Each prefill chunk and the request's decode phase are "X" (complete)
+  events on the request's track.
+- Per-step engine events (plan build vs PlanCache hit, device uploads,
+  fused launch count, merge path, sharded all_gather) are "X"/"i" events
+  on a dedicated step track and are simultaneously appended to the JSONL
+  step log.
+
+Zero-cost-when-disabled contract: the engine holds ``NULL_TRACER``
+(``enabled = False``) by default; hot paths guard with a single
+truthiness check on ``tracer.enabled`` and never build event payloads.
+``NullTracer`` also swallows any method call, so forgetting a guard
+degrades to one no-op call rather than an error.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+__all__ = ["Tracer", "NullTracer", "NULL_TRACER", "Span", "StepEvent"]
+
+# Perfetto pid/tid layout: requests each get a tid under the "requests"
+# process; engine-step events share one tid under the "engine" process.
+ENGINE_PID = 1
+REQUEST_PID = 2
+STEP_TID = 1
+
+
+@dataclass
+class Span:
+    """Lifecycle record for one request, in vclock units."""
+
+    rid: int
+    submit_v: float
+    admit_v: Optional[float] = None
+    finish_v: Optional[float] = None
+    prefill_chunks: List[Dict] = field(default_factory=list)  # {v0, v1, tokens}
+    decode_v0: Optional[float] = None
+    decode_tokens: int = 0
+    blocked_v: float = 0.0  # explicit blocked/idle window total
+
+    @property
+    def queued_v(self) -> Optional[float]:
+        if self.admit_v is None:
+            return None
+        return self.admit_v - self.submit_v
+
+    def to_dict(self) -> Dict:
+        return {
+            "rid": self.rid,
+            "submit_v": self.submit_v,
+            "admit_v": self.admit_v,
+            "finish_v": self.finish_v,
+            "queued_v": self.queued_v,
+            "blocked_v": self.blocked_v,
+            "prefill_chunks": list(self.prefill_chunks),
+            "decode_v0": self.decode_v0,
+            "decode_tokens": self.decode_tokens,
+        }
+
+
+@dataclass
+class StepEvent:
+    """One engine-step record: vclock interval plus phase payloads."""
+
+    step: int
+    v0: float
+    v1: float
+    payload: Dict = field(default_factory=dict)
+
+    def to_dict(self) -> Dict:
+        d = {"step": self.step, "v0": self.v0, "v1": self.v1}
+        d.update(self.payload)
+        return d
+
+
+class Tracer:
+    """Collects spans + step events; exports Perfetto JSON and JSONL."""
+
+    enabled = True
+
+    def __init__(self):
+        self.spans: Dict[int, Span] = {}
+        self.steps: List[StepEvent] = []
+        self._events: List[Dict] = []  # extra instant/counter events
+
+    # --- request lifecycle --------------------------------------------------
+
+    def submit(self, rid: int, v: float) -> None:
+        self.spans[rid] = Span(rid=rid, submit_v=float(v))
+
+    def admit(self, rid: int, v: float) -> None:
+        sp = self.spans.get(rid)
+        if sp is not None and sp.admit_v is None:
+            sp.admit_v = float(v)
+
+    def prefill_chunk(self, rid: int, v0: float, v1: float, tokens: int) -> None:
+        sp = self.spans.get(rid)
+        if sp is not None:
+            sp.prefill_chunks.append(
+                {"v0": float(v0), "v1": float(v1), "tokens": int(tokens)}
+            )
+
+    def decode_token(self, rid: int, v: float) -> None:
+        sp = self.spans.get(rid)
+        if sp is not None:
+            if sp.decode_v0 is None:
+                sp.decode_v0 = float(v)
+            sp.decode_tokens += 1
+
+    def finish(self, rid: int, v: float) -> None:
+        sp = self.spans.get(rid)
+        if sp is not None:
+            sp.finish_v = float(v)
+
+    def blocked_window(self, v0: float, v1: float, reason: str = "idle") -> None:
+        """Explicit blocked/idle window (replay fast-forward): charged to
+        every submitted-but-unfinished request and recorded as an engine
+        instant."""
+        dv = float(v1) - float(v0)
+        if dv <= 0:
+            return
+        for sp in self.spans.values():
+            if sp.finish_v is None:
+                sp.blocked_v += dv
+        self._events.append(
+            {
+                "name": f"blocked:{reason}",
+                "ph": "X",
+                "pid": ENGINE_PID,
+                "tid": STEP_TID,
+                "ts": float(v0),
+                "dur": dv,
+                "args": {"reason": reason, "vclock_window": dv},
+            }
+        )
+
+    # --- per-step engine events ---------------------------------------------
+
+    def step_event(self, step: int, v0: float, v1: float, **payload) -> StepEvent:
+        ev = StepEvent(step=int(step), v0=float(v0), v1=float(v1),
+                       payload=payload)
+        self.steps.append(ev)
+        return ev
+
+    def instant(self, name: str, v: float, **args) -> None:
+        self._events.append(
+            {
+                "name": name,
+                "ph": "i",
+                "pid": ENGINE_PID,
+                "tid": STEP_TID,
+                "ts": float(v),
+                "s": "t",
+                "args": args,
+            }
+        )
+
+    # --- export -------------------------------------------------------------
+
+    def chrome_trace(self) -> Dict:
+        """Chrome/Perfetto ``trace.json`` dict (vclock unit == 1 µs)."""
+        ev: List[Dict] = [
+            _meta(ENGINE_PID, None, "process_name", name="engine"),
+            _meta(REQUEST_PID, None, "process_name", name="requests"),
+            _meta(ENGINE_PID, STEP_TID, "thread_name", name="steps"),
+        ]
+        for rid in sorted(self.spans):
+            sp = self.spans[rid]
+            tid = rid + 1  # Perfetto dislikes tid 0
+            ev.append(_meta(REQUEST_PID, tid, "thread_name",
+                            name=f"req {rid}"))
+            if sp.admit_v is not None and sp.admit_v > sp.submit_v:
+                ev.append(
+                    _x("queued", REQUEST_PID, tid, sp.submit_v,
+                       sp.admit_v - sp.submit_v,
+                       rid=rid, blocked_v=sp.blocked_v)
+                )
+            for i, ch in enumerate(sp.prefill_chunks):
+                ev.append(
+                    _x(f"prefill[{i}]", REQUEST_PID, tid, ch["v0"],
+                       max(ch["v1"] - ch["v0"], 0.001),
+                       rid=rid, tokens=ch["tokens"])
+                )
+            if sp.decode_v0 is not None:
+                end = sp.finish_v if sp.finish_v is not None else (
+                    sp.decode_v0 + sp.decode_tokens)
+                ev.append(
+                    _x("decode", REQUEST_PID, tid, sp.decode_v0,
+                       max(end - sp.decode_v0, 0.001),
+                       rid=rid, tokens=sp.decode_tokens)
+                )
+            ev.append(
+                {
+                    "name": "submit", "ph": "i", "pid": REQUEST_PID,
+                    "tid": tid, "ts": sp.submit_v, "s": "t",
+                    "args": {"rid": rid},
+                }
+            )
+            if sp.finish_v is not None:
+                ev.append(
+                    {
+                        "name": "finish", "ph": "i", "pid": REQUEST_PID,
+                        "tid": tid, "ts": sp.finish_v, "s": "t",
+                        "args": {"rid": rid, "tokens": sp.decode_tokens},
+                    }
+                )
+        for st in self.steps:
+            ev.append(
+                _x(f"step {st.step}", ENGINE_PID, STEP_TID, st.v0,
+                   max(st.v1 - st.v0, 0.001), **st.payload)
+            )
+        ev.extend(self._events)
+        return {"traceEvents": ev, "displayTimeUnit": "ms"}
+
+    def write_chrome_trace(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+
+    def step_log_lines(self) -> List[str]:
+        return [json.dumps(st.to_dict(), sort_keys=True) for st in self.steps]
+
+    def write_step_log(self, path: str) -> None:
+        with open(path, "w") as f:
+            for line in self.step_log_lines():
+                f.write(line + "\n")
+
+    def span_dicts(self) -> List[Dict]:
+        return [self.spans[rid].to_dict() for rid in sorted(self.spans)]
+
+
+class NullTracer:
+    """No-op stand-in. ``enabled`` is False so hot paths skip payload
+    construction with one attribute check; any method slipping through
+    resolves to a cached no-op callable."""
+
+    enabled = False
+    spans: Dict[int, Span] = {}
+    steps: List[StepEvent] = []
+
+    def _noop(self, *a, **k):
+        return None
+
+    def __getattr__(self, name):
+        return self._noop
+
+
+NULL_TRACER = NullTracer()
+
+
+def _x(name: str, pid: int, tid: int, ts: float, dur: float, **args) -> Dict:
+    return {
+        "name": name, "ph": "X", "pid": pid, "tid": tid,
+        "ts": float(ts), "dur": float(dur), "args": args,
+    }
+
+
+def _meta(pid: int, tid: Optional[int], kind: str, **args) -> Dict:
+    ev = {"name": kind, "ph": "M", "pid": pid, "args": args}
+    if tid is not None:
+        ev["tid"] = tid
+    return ev

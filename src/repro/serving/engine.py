@@ -48,6 +48,7 @@ from repro.configs.base import ModelConfig
 from repro.core import kv_quant
 from repro.core.attention import PatAttentionBackend, PatConfig
 from repro.core.shard_spec import ShardSpec
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer, attribute_step
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models import attention as A
@@ -66,6 +67,15 @@ __all__ = ["Engine", "EngineMetrics", "Request"]
 
 @dataclass
 class EngineMetrics:
+    # Phase wall-clock attribution. In the default (async) mode these are
+    # stamped with perf_counter around JAX dispatch WITHOUT a
+    # block_until_ready, so device work enqueued in one phase may actually
+    # complete inside a later phase's implicit sync point (e.g. prefill
+    # compute finishing during decode's np.asarray) — the per-phase split
+    # is attribution-skewed even though the total is right. Telemetry runs
+    # enable synced timing (Engine(synced_timing=True)), which blocks at
+    # each phase boundary for honest attribution at the cost of losing
+    # dispatch/compute overlap.
     prefill_time: float = 0.0
     decode_time: float = 0.0
     plan_time: float = 0.0
@@ -79,6 +89,7 @@ class EngineMetrics:
     # fraction of the batch that pays ZERO intermediate HBM traffic.
     fast_path_queries: int = 0
     split_queries: int = 0
+    decode_tokens: int = 0
     finished: List[Request] = field(default_factory=list)
 
     @property
@@ -99,6 +110,9 @@ class Engine:
         seed: int = 0,
         temperature: float = 0.0,
         scheduler: Optional[SchedulerConfig] = None,
+        telemetry: bool = False,
+        tracer: Optional[Tracer] = None,
+        synced_timing: Optional[bool] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -196,6 +210,23 @@ class Engine:
         )
         self.running: List[Request] = []
         self.metrics = EngineMetrics()
+        # Telemetry (DESIGN.md §11). Disabled is strictly zero-cost: hot
+        # paths guard on `tracer.enabled` (one attribute check) and never
+        # build payloads; NULL_TRACER swallows stray calls. Synced timing
+        # defaults to following telemetry (see EngineMetrics docstring).
+        self.tracer = tracer if tracer is not None else (
+            Tracer() if telemetry else NULL_TRACER
+        )
+        self.synced_timing = (
+            self.tracer.enabled if synced_timing is None else synced_timing
+        )
+        # per-step HBM attribution totals vs the one-query-per-CTA
+        # counterfactual (obs.attribution); only updated when tracing
+        self._attr = {
+            "actual_bytes": 0, "counterfactual_bytes": 0, "bytes_saved": 0,
+            "launches": 0, "decode_steps": 0,
+        }
+        self._vcursor = 0.0  # chunk/decode sub-spans within the step window
         self.vclock = 0.0  # virtual token-unit clock (see module docstring)
         self._rid = 0
         self._requests: Dict[int, Request] = {}
@@ -226,6 +257,8 @@ class Engine:
         )
         self.scheduler.add(req)
         self._requests[self._rid] = req
+        if self.tracer.enabled:
+            self.tracer.submit(self._rid, req.arrival_v)
         return self._rid
 
     def stream(self, rid: int) -> RequestStream:
@@ -259,17 +292,40 @@ class Engine:
         if not plan.chunks and not self.running:
             self.metrics.idle_steps += 1
             return False
+        v0 = self.vclock
+        for req in plan.admitted:
+            req.admit_v = v0
         # step cost in token units: prefill chunk tokens + one per decode
         # query (requests finishing prefill this step decode this step too)
         finishing = sum(
             1 for req, n in plan.chunks if req.prefilled + n >= len(req.prompt)
         )
-        self.vclock += plan.prefill_tokens + len(self.running) + finishing
+        n_decode = len(self.running) + finishing
+        self.vclock += plan.prefill_tokens + n_decode
+        tr = self.tracer
+        if tr.enabled:
+            for req in plan.admitted:
+                tr.admit(req.rid, v0)
+            self._vcursor = v0
+            st = self.backend.cache.stats
+            pre = (st.hits, st.misses, st.refreshes, st.arrays_uploaded)
         for req, n in plan.chunks:
             self._prefill_chunk(req, n)
         if self.running:
             self._decode_batch()
         self.metrics.steps += 1
+        if tr.enabled:
+            st = self.backend.cache.stats
+            tr.step_event(
+                self.metrics.steps, v0, self.vclock,
+                prefill_tokens=plan.prefill_tokens,
+                decode_batch=n_decode,
+                admitted=len(plan.admitted),
+                plan_hits=st.hits - pre[0],
+                plan_misses=st.misses - pre[1],
+                plan_refreshes=st.refreshes - pre[2],
+                arrays_uploaded=st.arrays_uploaded - pre[3],
+            )
         return True
 
     def _gather_prefix_caches(self, pages: List[int], cached: int):
@@ -280,6 +336,10 @@ class Engine:
         prefill attends over fp32 prefix K/V."""
         cfg = self.cfg
         pids = jnp.asarray(np.asarray(pages, np.int32))
+        with jax.named_scope("pat_prefix_gather"):
+            return self._gather_prefix_caches_impl(cfg, pids, cached)
+
+    def _gather_prefix_caches_impl(self, cfg, pids, cached):
         # [L, Hkv, n, page, dk] -> [L, n*page, Hkv, dk] -> first `cached`
         kg = self.kv.k_pages[:, :, pids]
         if self.kv.quantized:
@@ -361,8 +421,14 @@ class Engine:
         req.prefilled = end
         self.metrics.prefill_chunks += 1
         self.metrics.prefill_tokens += end - start
+        if self.tracer.enabled:
+            vc = self._vcursor
+            self._vcursor = vc + (end - start)
+            self.tracer.prefill_chunk(req.rid, vc, self._vcursor, end - start)
         if end == S:
             self._finish_prefill(req, logits_last)
+        if self.synced_timing:
+            jax.block_until_ready(self.kv.k_pages)
         self.metrics.prefill_time += time.perf_counter() - t0
 
     def _finish_prefill(self, req: Request, logits_last) -> None:
@@ -375,6 +441,9 @@ class Engine:
         req.token_times.append(now)
         req.token_vt.append(self.vclock)
         req.t_first_token = now
+        if self.tracer.enabled:
+            # first token: the request's decode span opens here
+            self.tracer.decode_token(req.rid, self.vclock)
         self.scheduler.finish_prefill(req)
         self.running.append(req)  # decodes this same step
         self._batch_dirty = True
@@ -410,6 +479,168 @@ class Engine:
         if self._batch_dirty:
             self._refresh_batch()
         return self._bt, self._pos + 1
+
+    def _attribute_decode(self, wp, kv_lens) -> None:
+        """Accumulates this step's modeled HBM traffic vs the
+        one-query-per-CTA counterfactual (obs.attribution). Tracing-gated:
+        costs an O(steps) numpy pass per decode step when enabled, nothing
+        when disabled."""
+        a = attribute_step(
+            wp, kv_lens,
+            head_dim=self.kv.cfg.head_dim,
+            v_head_dim=self.kv.cfg.v_head_dim,
+            kv_dtype=self.kv.kv_dtype,
+            share_kv=self.kv.share_kv,
+        )
+        t = self._attr
+        t["actual_bytes"] += a.actual_bytes
+        t["counterfactual_bytes"] += a.counterfactual_bytes
+        t["bytes_saved"] += a.bytes_saved
+        t["launches"] += a.launches
+        t["decode_steps"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "attribution", self.vclock, **a.to_dict()
+            )
+
+    # --- metrics snapshot (DESIGN.md §11) -------------------------------------
+
+    def metrics_registry(self) -> MetricsRegistry:
+        """Pulls every subsystem's stats into one MetricsRegistry under
+        the canonical dotted namespace. Pure pull: nothing here runs
+        per-step, so building the registry is free until asked for."""
+        from repro.kernels import ops
+        from repro.serving.stream import summarize
+
+        reg = MetricsRegistry()
+        m = self.metrics
+        reg.set_many(
+            {
+                "engine.steps": m.steps,
+                "engine.idle_steps": m.idle_steps,
+                "engine.prefill_chunks": m.prefill_chunks,
+                "engine.prefill_tokens": m.prefill_tokens,
+                "engine.decode_tokens": m.decode_tokens,
+                "engine.prefill_time_s": m.prefill_time,
+                "engine.decode_time_s": m.decode_time,
+                "engine.plan_time_s": m.plan_time,
+                "engine.fast_path_queries": m.fast_path_queries,
+                "engine.split_queries": m.split_queries,
+                "engine.submitted": self._rid,
+                "engine.finished": len(m.finished),
+                "engine.running": len(self.running),
+                "engine.waiting": len(self.waiting),
+                "engine.timing_synced": int(self.synced_timing),
+                "engine.vclock": self.vclock,
+            },
+            owner="serving.engine",
+        )
+        if m.finished:
+            reg.set_many(
+                {
+                    f"slo.{k}": v
+                    for k, v in summarize(m.finished).items()
+                    if isinstance(v, (int, float))
+                },
+                owner="serving.stream",
+            )
+        st = self.backend.cache.stats
+        reg.set_many(
+            {
+                "plan_cache.hits": st.hits,
+                "plan_cache.misses": st.misses,
+                "plan_cache.refreshes": st.refreshes,
+                "plan_cache.hit_rate": st.hit_rate,
+                "plan_cache.schedule_time_s": st.schedule_time_s,
+                "plan_cache.refresh_time_s": st.refresh_time_s,
+                "plan_cache.upload_time_s": st.upload_time_s,
+                "plan_cache.full_uploads": st.full_uploads,
+                "plan_cache.refresh_uploads": st.refresh_uploads,
+                "plan_cache.arrays_uploaded": st.arrays_uploaded,
+            },
+            owner="core.lazy_update",
+        )
+        reg.set_many(
+            {f"dispatch.{k}": v for k, v in ops.dispatch_stats().items()},
+            owner="kernels.ops",
+        )
+        reg.set_many(
+            {f"radix.{k}": v for k, v in self.radix.stats().items()},
+            owner="serving.radix_cache",
+        )
+        reg.set_many(
+            {
+                "alloc.pages_total": self.kv.allocator.num_pages,
+                "alloc.pages_free": self.kv.allocator.num_free,
+            },
+            owner="serving.kv_cache",
+        )
+        reg.set_many(
+            {
+                "kv.page_size": self.page,
+                "kv.bytes_per_el": self.kv.kv_bytes,
+                "kv.quantized": int(self.kv.quantized),
+                "kv.page_hbm_bytes": kv_quant.page_hbm_bytes(
+                    self.page, self.kv.cfg.head_dim, self.kv.cfg.v_head_dim,
+                    self.kv.kv_dtype, share_kv=self.kv.share_kv,
+                ),
+            },
+            owner="core.kv_quant",
+        )
+        reg.set_many(
+            {"attr.fast_path_fraction": m.fast_path_fraction},
+            owner="obs.attribution",
+        )
+        t = self._attr
+        if t["decode_steps"]:
+            cf = t["counterfactual_bytes"]
+            reg.set_many(
+                {
+                    "attr.decode_steps": t["decode_steps"],
+                    "attr.bytes_actual_total": t["actual_bytes"],
+                    "attr.bytes_counterfactual_total": cf,
+                    "attr.bytes_saved_total": t["bytes_saved"],
+                    "attr.savings_fraction": (
+                        t["bytes_saved"] / cf if cf else 0.0
+                    ),
+                    "attr.launches_total": t["launches"],
+                    "attr.launches_per_step": t["launches"] / t["decode_steps"],
+                },
+                owner="obs.attribution",
+            )
+        if self.shard is not None:
+            vals = {"shard.devices": self.shard.num_shards}
+            placement = getattr(self.kv.allocator, "placement", None)
+            if placement:
+                vals.update(
+                    {
+                        "shard.placement_allocs": placement["allocs"],
+                        "shard.prefix_affine_hits": placement["prefer_hits"],
+                        "shard.prefix_affine_requests": placement[
+                            "prefer_requests"
+                        ],
+                        "shard.spilled_allocs": placement["spilled_allocs"],
+                        "shard.spilled_pages": placement["spilled_pages"],
+                    }
+                )
+            reg.set_many(vals, owner="distributed.sharded_decode")
+        tc = self.backend.tuning
+        if tc is not None:
+            reg.set_many(
+                {
+                    "tuning.entries": len(tc),
+                    "tuning.hits": tc.stats["hits"],
+                    "tuning.misses": tc.stats["misses"],
+                    "tuning.load_error": int(bool(tc.load_error)),
+                },
+                owner="core.tuning_cache",
+            )
+        return reg
+
+    def metrics_snapshot(self) -> dict:
+        """The machine-readable artifact: one flat dict over the whole
+        namespace (serve.py --metrics-out, bench harness, tests)."""
+        return self.metrics_registry().snapshot()
 
     def placement_report(self) -> Optional[dict]:
         """Prefix-locality report for the current decode batch (ISSUE 8):
@@ -454,6 +685,9 @@ class Engine:
         n_split = wp.num_split_queries
         self.metrics.split_queries += n_split
         self.metrics.fast_path_queries += B - n_split
+        self.metrics.decode_tokens += B
+        if self.tracer.enabled:
+            self._attribute_decode(wp, kv_lens)
 
         logits = self._paged_decode_step(tokens, positions, wp)
         self.key, sub = jax.random.split(self.key)
@@ -463,11 +697,14 @@ class Engine:
         self._ntok += 1
         self._last_tok = next_tokens.astype(np.int32)
         now = time.perf_counter()
+        tr = self.tracer
         for i, r in enumerate(self.running):  # output bookkeeping only
             r.position += 1
             r.generated.append(int(next_tokens[i]))
             r.token_times.append(now)
             r.token_vt.append(self.vclock)
+            if tr.enabled:
+                tr.decode_token(r.rid, self.vclock)
         done = (self._ntok >= self._mnt) | (self._last_tok == self.eos_id)
         if done.any():
             still = []
@@ -476,10 +713,14 @@ class Engine:
                     r.t_finished = now
                     self.kv.allocator.decref(r.pages)
                     self.metrics.finished.append(r)
+                    if tr.enabled:
+                        tr.finish(r.rid, self.vclock)
                 else:
                     still.append(r)
             self.running = still
             self._batch_dirty = True
+        if self.synced_timing:
+            jax.block_until_ready(self.kv.k_pages)
         self.metrics.decode_time += time.perf_counter() - t0
 
     def _paged_decode_step(self, tokens, positions, wp) -> jax.Array:

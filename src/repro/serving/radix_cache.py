@@ -38,6 +38,22 @@ class RadixCache:
         self.alloc = allocator
         self.page = page_size
         self.root = RadixNode((), [])
+        # prefix-reuse observability (DESIGN.md §11): plain int counters,
+        # published as `radix.*` by Engine.metrics_snapshot
+        self.lookups = 0
+        self.hit_tokens = 0
+        self.inserts = 0
+        self.evictions = 0
+        self.evicted_pages = 0
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "lookups": self.lookups,
+            "hit_tokens": self.hit_tokens,
+            "inserts": self.inserts,
+            "evictions": self.evictions,
+            "evicted_pages": self.evicted_pages,
+        }
 
     def match_prefix(self, tokens: List[int]) -> Tuple[List[int], int]:
         """Longest page-aligned cached prefix -> (pages, matched_tokens).
@@ -60,6 +76,8 @@ class RadixCache:
             node = nxt
         if pages:
             self.alloc.incref(pages)
+        self.lookups += 1
+        self.hit_tokens += matched
         return pages, matched
 
     def insert(self, tokens: List[int], pages: List[int]) -> None:
@@ -68,6 +86,7 @@ class RadixCache:
         n_full = len(tokens) // self.page
         tokens = tokens[: n_full * self.page]
         pages = pages[:n_full]
+        self.inserts += 1
         node = self.root
         i = 0
         while i < len(tokens):
@@ -138,4 +157,7 @@ class RadixCache:
                 parent.children.pop(victim.tokens[0], None)
                 if parent is not self.root and parent.is_leaf and evictable(parent):
                     heapq.heappush(heap, (parent.last_used, id(parent), parent))
+        if freed:
+            self.evictions += 1
+            self.evicted_pages += freed
         return freed

@@ -44,14 +44,21 @@ def replay_trace(
             i += 1
         if not eng.has_work:
             # idle until the next arrival: advance the virtual clock
+            v0 = eng.vclock
             eng.vclock = max(eng.vclock, pending[i].arrival * tokens_per_sec)
+            if eng.tracer.enabled:
+                eng.tracer.blocked_window(v0, eng.vclock, reason="idle")
             continue
         if not eng.step():
             if i < len(pending):
                 # admission blocked with arrivals still pending: virtual
                 # time flows to the next arrival (which may unblock the
                 # queue under a non-FCFS policy)
+                v0 = eng.vclock
                 eng.vclock = max(eng.vclock, pending[i].arrival * tokens_per_sec)
+                if eng.tracer.enabled:
+                    eng.tracer.blocked_window(v0, eng.vclock,
+                                              reason="kv_blocked")
             else:
                 break  # permanently blocked; report what finished
         if eng.metrics.steps >= max_steps:

@@ -50,6 +50,8 @@ class Request:
     max_new_tokens: int
     arrival: float = 0.0  # wall clock (time.perf_counter) at submit
     arrival_v: float = 0.0  # engine virtual clock (token units) at submit
+    admit_v: Optional[float] = None  # virtual clock at admission (the
+    # submit->admit window is the request's queueing + blocked time)
     # filled by the scheduler at admission
     pages: List[int] = field(default_factory=list)
     cached_tokens: int = 0

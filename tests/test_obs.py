@@ -1,0 +1,253 @@
+"""Observability tests (ISSUE 9): span lifecycle on the virtual clock,
+the zero-cost disabled-tracer contract, Prometheus exposition round-trip,
+attribution agreement with the memory_traffic byte model, and Perfetto
+trace validity.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.attention import PatConfig
+from repro.core.kv_quant import page_hbm_bytes
+from repro.core.pack_scheduler import plan_kv_bytes, schedule
+from repro.core.tile_selector import TileSelector
+from repro.core.work_plan import build_work_plan
+from repro.models import transformer as T
+from repro.obs import (
+    NULL_TRACER,
+    MetricsRegistry,
+    Tracer,
+    attribute_step,
+    counterfactual_page_fetches,
+    parse_prometheus_text,
+    prom_name,
+    render_summary,
+)
+from repro.serving.engine import Engine
+
+KEY = jax.random.PRNGKey(0)
+PAGE = 16
+
+
+def _run_engine(telemetry: bool):
+    """Tiny shared-prefix workload through the real engine; returns the
+    engine and {rid: generated tokens} (greedy, so deterministic)."""
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(KEY, cfg)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(3, cfg.vocab_size, 24).tolist()
+    prompts = [
+        shared + rng.integers(3, cfg.vocab_size, 6 + i).tolist()
+        for i in range(3)
+    ]
+    eng = Engine(
+        params, cfg, num_pages=256,
+        pat_config=PatConfig(impl="xla", merge_impl="xla"),
+        eos_id=-1, telemetry=telemetry,
+    )
+    rids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    eng.run()
+    outs = {r.rid: list(r.generated) for r in eng.metrics.finished}
+    return eng, dict(zip(rids, prompts)), outs
+
+
+@pytest.fixture(scope="module")
+def traced_engine():
+    return _run_engine(telemetry=True)
+
+
+def test_span_lifecycle_golden(traced_engine):
+    eng, prompts, outs = traced_engine
+    spans = eng.tracer.spans
+    assert sorted(spans) == sorted(prompts)
+    for rid, sp in spans.items():
+        # ordering along the virtual clock:
+        # submit <= admit <= prefill* <= decode <= finish
+        assert sp.admit_v is not None and sp.admit_v >= sp.submit_v
+        assert sp.queued_v == sp.admit_v - sp.submit_v
+        assert sp.prefill_chunks, "prefill never traced"
+        v = sp.admit_v
+        for ch in sp.prefill_chunks:
+            assert ch["v0"] >= v and ch["v1"] >= ch["v0"]
+            v = ch["v1"]
+        # chunk tokens cover the prompt minus whatever the radix cache
+        # already held (page-granular prefix reuse)
+        assert 0 < sum(ch["tokens"] for ch in sp.prefill_chunks) \
+            <= len(prompts[rid])
+        assert sp.decode_v0 is not None and sp.decode_v0 >= v
+        assert sp.finish_v is not None and sp.finish_v >= sp.decode_v0
+        assert sp.decode_tokens == len(outs[rid]) == 4
+    # traced prefill work sums to exactly what the engine counted
+    total_chunk_tokens = sum(
+        ch["tokens"] for sp in spans.values() for ch in sp.prefill_chunks
+    )
+    assert total_chunk_tokens == eng.metrics.prefill_tokens
+    # step events cover every productive step with a monotone window
+    assert len(eng.tracer.steps) == eng.metrics.steps
+    for st in eng.tracer.steps:
+        assert st.v1 >= st.v0
+
+
+def test_blocked_window_accounting():
+    tr = Tracer()
+    tr.submit(0, 0.0)
+    tr.submit(1, 5.0)
+    tr.finish(1, 8.0)  # finished before the stall: must not be charged
+    tr.blocked_window(10.0, 25.0, reason="kv_blocked")
+    tr.blocked_window(30.0, 30.0)  # empty window: no-op
+    assert tr.spans[0].blocked_v == 15.0
+    assert tr.spans[1].blocked_v == 0.0
+    ev = [e for e in tr.chrome_trace()["traceEvents"]
+          if e["name"] == "blocked:kv_blocked"]
+    assert len(ev) == 1 and ev[0]["ph"] == "X" and ev[0]["dur"] == 15.0
+
+
+def test_disabled_tracer_is_noop(traced_engine):
+    _, _, outs_on = traced_engine
+    eng_off, _, outs_off = _run_engine(telemetry=False)
+    # telemetry must not change what the engine generates
+    assert outs_off == outs_on
+    # the disabled engine holds the shared NullTracer: nothing recorded,
+    # any unguarded call swallows silently
+    assert eng_off.tracer is NULL_TRACER
+    assert not NULL_TRACER.enabled
+    assert NULL_TRACER.submit(0, 1.0) is None
+    assert NULL_TRACER.spans == {} and NULL_TRACER.steps == []
+    # and no attribution series appears in the snapshot
+    snap = eng_off.metrics_snapshot()
+    assert "attr.decode_steps" not in snap
+    assert snap["engine.timing_synced"] == 0.0
+
+
+def _assert_round_trip(reg: MetricsRegistry):
+    """Every metric must survive exposition -> parse with kind, value,
+    and (for histograms) cumulative bucket counts intact."""
+    parsed = parse_prometheus_text(reg.prometheus_text())
+    snap = reg.snapshot()
+    assert len(parsed) == len(reg)
+    for m in reg.metrics():
+        got, want = parsed[prom_name(m.name)], snap[m.name]
+        assert got["kind"] == m.kind
+        if m.kind == "histogram":
+            assert got["count"] == want["count"]
+            assert got["sum"] == pytest.approx(want["sum"])
+            # bucket keys render differently ("1" vs "1.0"): compare as le
+            def le(d):
+                return {
+                    (k if k == "+Inf" else float(k)): v for k, v in d.items()
+                }
+            assert le(got["buckets"]) == le(want["buckets"])
+        else:
+            assert got["value"] == pytest.approx(want)
+
+
+def test_registry_prometheus_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("engine.steps", help="steps").inc(7)
+    reg.gauge("attr.savings_fraction").set(0.25)
+    h = reg.histogram("slo.ttft_vt", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 3.0, 42.0, 500.0):  # incl. one past the last bucket
+        h.observe(v)
+    text = reg.prometheus_text()
+    assert "# TYPE pat_engine_steps counter" in text
+    assert "pat_slo_ttft_vt_bucket" in text
+    _assert_round_trip(reg)
+
+
+def test_engine_snapshot_round_trips_through_prometheus(traced_engine):
+    eng, _, _ = traced_engine
+    reg = eng.metrics_registry()
+    _assert_round_trip(reg)
+    # the render path consumes the same snapshot without raising
+    out = render_summary(reg.snapshot(), {"backend": "pat"})
+    assert "finished" in out and "HBM" in out
+
+
+def _shared_batch(batch=6, shared_pages=3, priv=2):
+    rows, kv = [], np.zeros(batch, np.int64)
+    nxt = shared_pages
+    for b in range(batch):
+        mine = list(range(nxt, nxt + priv))
+        nxt += priv
+        rows.append(list(range(shared_pages)) + mine)
+        kv[b] = (shared_pages + priv - 1) * PAGE + 1 + b
+    bt = -np.ones((batch, shared_pages + priv), np.int32)
+    for b, r in enumerate(rows):
+        bt[b, : len(r)] = r
+    return bt, kv
+
+
+def test_attribution_agrees_with_memory_traffic_model():
+    """attr.actual_bytes must equal the memory_traffic/bench byte model
+    (plan_kv_bytes) on the same plan — one price, two consumers."""
+    Hq, Hkv, dk = 8, 4, 64
+    bt, kv = _shared_batch()
+    sel = TileSelector(head_dim=dk, page_size=PAGE)
+    pack = schedule(bt, kv, PAGE, strategy="pat",
+                    rows_per_query=Hq // Hkv,
+                    max_query_rows=sel.max_query_rows)
+    wp = build_work_plan(pack, sel, Hq, Hkv, kv_lens=kv, block_tables=bt)
+    a = attribute_step(wp, kv, head_dim=dk, kv_dtype="bfloat16")
+    assert a.actual_bytes == plan_kv_bytes(pack, dk, Hkv, kv_dtype="bfloat16")
+    # counterfactual: every query streams its own full KV range
+    pages = (kv + PAGE - 1) // PAGE
+    assert a.counterfactual_page_fetches == int(pages.sum()) * Hkv
+    assert a.counterfactual_bytes == a.counterfactual_page_fetches * \
+        page_hbm_bytes(PAGE, dk, None, "bfloat16")
+    # shared prefix pages are fetched once, not once per query
+    assert a.bytes_saved > 0
+    assert a.actual_bytes + a.bytes_saved == a.counterfactual_bytes
+    # no sharing -> the counterfactual IS the plan
+    bt2 = np.arange(12, dtype=np.int32).reshape(6, 2)
+    kv2 = np.full(6, PAGE + 3, np.int64)
+    pack2 = schedule(bt2, kv2, PAGE, strategy="pat",
+                     rows_per_query=Hq // Hkv,
+                     max_query_rows=sel.max_query_rows)
+    wp2 = build_work_plan(pack2, sel, Hq, Hkv, kv_lens=kv2, block_tables=bt2)
+    a2 = attribute_step(wp2, kv2, head_dim=dk)
+    assert a2.bytes_saved == 0
+    assert a2.actual_bytes == a2.counterfactual_bytes
+    assert counterfactual_page_fetches(kv2, PAGE, Hkv) == 6 * 2 * Hkv
+
+
+def test_perfetto_trace_valid(traced_engine):
+    eng, _, _ = traced_engine
+    doc = json.loads(json.dumps(eng.tracer.chrome_trace()))
+    evs = doc["traceEvents"]
+    assert evs, "empty trace"
+    for e in evs:
+        assert e["ph"] in ("X", "i", "M")
+        assert isinstance(e["name"], str) and "pid" in e
+        if e["ph"] == "M":
+            continue  # metadata carries no timestamp
+        assert e["ts"] >= 0
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+        if e["ph"] == "i":
+            assert e["s"] in ("t", "p", "g")
+    # step-log lines are one valid JSON object per productive step
+    lines = eng.tracer.step_log_lines()
+    assert len(lines) == eng.metrics.steps
+    for ln in lines:
+        d = json.loads(ln)
+        assert d["v1"] >= d["v0"]
+
+
+def test_attribution_gauges_in_snapshot(traced_engine):
+    eng, _, outs = traced_engine
+    snap = eng.metrics_snapshot()
+    assert snap["attr.decode_steps"] > 0
+    assert 0.0 < snap["attr.savings_fraction"] < 1.0
+    assert snap["attr.bytes_actual_total"] + snap["attr.bytes_saved_total"] \
+        == snap["attr.bytes_counterfactual_total"]
+    assert snap["attr.launches_per_step"] == 1.0
+    assert 0.0 <= snap["attr.fast_path_fraction"] <= 1.0
+    assert snap["plan_cache.hit_rate"] > 0.0
+    # batched decode-step tokens: each request's first token is sampled
+    # by prefill, the rest by _decode_batch
+    assert snap["engine.decode_tokens"] == \
+        sum(len(v) for v in outs.values()) - len(outs)
