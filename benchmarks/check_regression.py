@@ -241,6 +241,44 @@ def compare(baseline: Dict, current: Dict) -> List[str]:
                 "e2e_serving.mixed_longprompt.chunked.tpot_ms_p95",
                 b_ch["tpot_ms_p95"], ch["tpot_ms_p95"],
             )
+    # --- host-tier KV tiering gates (ISSUE 10) -----------------------------
+    tiering = c_e.get("kv_tiering", {})
+    tiered, evict = tiering.get("tiered", {}), tiering.get("evict", {})
+    if tiered and evict:
+        # acceptance bound, within-artifact A/B (identical traffic, pool,
+        # and budgets — deterministic virtual-unit surface): demoting cold
+        # prefixes to the host tier must beat evict-and-re-prefill on TTFT
+        # p95, and must actually shrink prefill work (the FLOPs it saves)
+        if tiered.get("ttft_vt_p95", 0.0) > evict.get("ttft_vt_p95", 0.0) + 1e-9:
+            failures.append(
+                f"e2e_serving.kv_tiering: tiered ttft_vt_p95 "
+                f"{tiered['ttft_vt_p95']:.1f} exceeds evict baseline "
+                f"{evict['ttft_vt_p95']:.1f}"
+            )
+        if tiered.get("prefill_tokens", 0) >= evict.get("prefill_tokens", 1):
+            failures.append(
+                f"e2e_serving.kv_tiering: tiered prefill_tokens "
+                f"{tiered.get('prefill_tokens')} not below evict baseline "
+                f"{evict.get('prefill_tokens')} (restores saved no work)"
+            )
+        # structural: the pressure trace must actually drive the tier —
+        # zero restores means it silently stopped exercising the H2D path
+        if tiered.get("restore_pages", 0) == 0:
+            failures.append(
+                "e2e_serving.kv_tiering.tiered.restore_pages is 0 "
+                "(host-tier restore path not exercised)"
+            )
+        b_tier = b_e.get("kv_tiering", {})
+        comparable = b_tier.get("trace") == tiering.get("trace")
+        b_tiered = b_tier.get("tiered", {})
+        if comparable and "ttft_vt_p95" in b_tiered:
+            base_v, cur_v = b_tiered["ttft_vt_p95"], tiered["ttft_vt_p95"]
+            if cur_v > base_v * (1 + WALL_CLOCK_THRESHOLD):
+                failures.append(
+                    f"e2e_serving.kv_tiering.tiered.ttft_vt_p95: "
+                    f"{base_v:.1f} -> {cur_v:.1f} "
+                    f"(+{100 * (cur_v / max(base_v, 1e-12) - 1):.1f}%)"
+                )
 
     # --- quantized KV datapath gates (ISSUE 7) -----------------------------
     # All within-artifact: the dtypes are measured interleaved in the same
@@ -387,6 +425,20 @@ def validate_schema(doc: Dict) -> List[str]:
                       "launches_fused"):
                 if k not in f:
                     problems.append(f"fused_launch.{scen}.{k} missing")
+    # e2e_serving.kv_tiering (ISSUE 10): both arms of the tiering A/B with
+    # the keys its regression gates read
+    tiering = doc.get("e2e_serving", {}).get("kv_tiering")
+    if not isinstance(tiering, dict) or not tiering:
+        problems.append("e2e_serving.kv_tiering missing or empty")
+    else:
+        for arm in ("evict", "tiered"):
+            row = tiering.get(arm)
+            if not isinstance(row, dict):
+                problems.append(f"e2e_serving.kv_tiering.{arm} missing")
+                continue
+            for k in ("ttft_vt_p95", "prefill_tokens", "restore_pages"):
+                if k not in row:
+                    problems.append(f"e2e_serving.kv_tiering.{arm}.{k} missing")
     for key, row in doc.get("modeled_hbm", {}).items():
         for k in ("kv_bytes", "inter_bytes_split_aware"):
             if k not in row:

@@ -33,6 +33,7 @@ from repro.serving.scheduler import POLICIES, SchedulerConfig
 from repro.serving.stream import summarize
 from repro.workloads.traces import (
     TraceRequest,
+    cache_pressure_trace,
     conversation_trace,
     mixed_longprompt_trace,
     toolagent_trace,
@@ -145,6 +146,65 @@ def policy_report(
     return out
 
 
+def kv_tiering_report(
+    num_pages: int = 24,
+    host_tier_pages: int = 64,
+    chunk_tokens: int = 32,
+    step_token_budget: int = 48,
+    verbose: bool = True,
+) -> Dict[str, Dict]:
+    """Host-tier demotion vs evict-and-re-prefill on the cache-pressure
+    trace (DESIGN.md §12): round-robin multi-tenant shared prefixes whose
+    combined working set exceeds the device pool, so plain LRU eviction
+    always drops the prefix the next request needs. The tiered engine
+    must beat the evict baseline on TTFT p95 (virtual clock) by paying
+    async H2D restores instead of re-prefill FLOPs — gated by
+    ``check_regression.py``. Identical traffic, pool, and chunk budgets;
+    only ``host_tier_pages`` differs (0 = today's drop-on-evict path)."""
+    cfg = get_config("tinyllama-1.1b").reduced(dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    reqs = cache_pressure_trace(vocab=cfg.vocab_size, seed=0)
+    out: Dict[str, Dict] = {
+        "trace": {
+            "num_requests": len(reqs),
+            "num_tenants": len({r.prefix_levels for r in reqs}),
+            "prompt_tokens": max(len(r.tokens) for r in reqs),
+            "device_pages": num_pages,
+            "host_tier_pages": host_tier_pages,
+            "chunk_tokens": chunk_tokens,
+            "step_token_budget": step_token_budget,
+        }
+    }
+    for name, tier in (("evict", 0), ("tiered", host_tier_pages)):
+        eng = Engine(
+            params, cfg, num_pages=num_pages,
+            pat_config=PatConfig(impl="xla", merge_impl="xla", page_size=PAGE),
+            eos_id=-1,
+            scheduler=SchedulerConfig(
+                chunk_tokens=chunk_tokens, step_token_budget=step_token_budget
+            ),
+            host_tier_pages=tier,
+        )
+        t0 = time.perf_counter()
+        summary = replay_trace(eng, reqs)
+        summary["wall_s"] = time.perf_counter() - t0
+        snap = eng.metrics_snapshot()
+        summary["steps"] = int(snap["engine.steps"])
+        summary["prefill_tokens"] = int(snap["engine.prefill_tokens"])
+        summary["restore_pages"] = int(snap.get("tier.restore_pages", 0))
+        summary["offload_pages"] = int(snap.get("tier.offload_pages", 0))
+        summary["hit_host_tokens"] = int(snap.get("tier.hit_host", 0))
+        out[name] = summary
+        if verbose:
+            print(
+                f"kv_tiering {name:7s}: ttft_p95={summary['ttft_vt_p95']:.0f}vt "
+                f"prefill_tokens={summary['prefill_tokens']} "
+                f"restores={summary['restore_pages']}",
+                flush=True,
+            )
+    return out
+
+
 def serving_section(fast: bool = False, verbose: bool = True) -> Dict:
     """The ``e2e_serving`` section of BENCH_decode_attention.json. The
     workload is identical in fast and full collections so the virtual-unit
@@ -152,6 +212,7 @@ def serving_section(fast: bool = False, verbose: bool = True) -> Dict:
     return {
         "mixed_longprompt": mixed_longprompt_report(verbose=verbose),
         "policies": policy_report(verbose=verbose),
+        "kv_tiering": kv_tiering_report(verbose=verbose),
     }
 
 

@@ -40,9 +40,39 @@ class HwModel:
     launch_s: float = 5e-6  # kernel launch overhead
     # effective fraction of peak BW decode attention sustains (paper: 83-94%)
     bw_eff: float = 0.85
+    # pinned-host -> HBM upload bandwidth (PCIe 4.0 x16 effective): prices
+    # host-tier page restores (obs.attribution.attribute_restore)
+    h2d_bw: float = 25e9
 
 
 TPU_V5E = HwModel(name="tpu_v5e", mem_bw=819e9, peak_flops=197e12, launch_s=2e-6)
+
+
+def restore_latency(
+    num_pages: int,
+    page_size: int,
+    head_dim: int,
+    *,
+    v_head_dim: Optional[int] = None,
+    kv_dtype: str = "bfloat16",
+    share_kv: bool = False,
+    num_layers: int = 1,
+    num_kv_heads: int = 1,
+    flops_per_token: float = 0.0,
+    hw: HwModel = HwModel(),
+) -> Dict[str, float]:
+    """Host-tier restore vs re-prefill counterfactual on this hardware
+    model (DESIGN.md §12) — thin wrapper over
+    ``obs.attribution.attribute_restore`` with the HwModel's constants."""
+    from repro.obs.attribution import attribute_restore
+
+    return attribute_restore(
+        num_pages, page_size,
+        head_dim=head_dim, v_head_dim=v_head_dim, kv_dtype=kv_dtype,
+        share_kv=share_kv, num_layers=num_layers, num_kv_heads=num_kv_heads,
+        flops_per_token=flops_per_token, h2d_bw=hw.h2d_bw,
+        peak_flops=hw.peak_flops, launch_s=hw.launch_s,
+    ).to_dict()
 
 
 def plan_latency(

@@ -55,6 +55,21 @@ def main():
                          "write time and dequantize in-kernel against "
                          "per-page scales (default: float32)")
     ap.add_argument("--num-pages", type=int, default=4096)
+    ap.add_argument("--host-tier-pages", type=int, default=0, metavar="N",
+                    help="host-memory KV tier capacity in pages (DESIGN.md "
+                         "§12). Eviction demotes cold radix prefixes to "
+                         "pinned host buffers instead of dropping them; a "
+                         "later hit restores them with async H2D page "
+                         "uploads overlapped with chunked prefill, so the "
+                         "request pays restore bytes, not re-prefill "
+                         "FLOPs. 0 (default) disables the tier and keeps "
+                         "the step path byte-identical to the untiered "
+                         "engine")
+    ap.add_argument("--restore-pages-per-step", type=int, default=None,
+                    metavar="N",
+                    help="cap host-tier restore uploads at N pages per "
+                         "engine step (models finite H2D bandwidth; "
+                         "default: drain the queue each step)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES))
     ap.add_argument("--tuning-cache", default=None, metavar="PATH",
@@ -165,8 +180,10 @@ def main():
             policy=args.policy,
             chunk_tokens=args.chunk_tokens,
             step_token_budget=args.token_budget,
+            restore_pages_per_step=args.restore_pages_per_step,
         ),
         telemetry=telemetry,
+        host_tier_pages=args.host_tier_pages,
     )
     profile = (
         jax.profiler.trace(args.profile_dir)

@@ -13,7 +13,13 @@ Three pieces (DESIGN.md §11):
   counterfactual — "bytes saved by packing" as a first-class gauge.
 """
 
-from .attribution import StepAttribution, attribute_step, counterfactual_page_fetches
+from .attribution import (
+    RestoreAttribution,
+    StepAttribution,
+    attribute_restore,
+    attribute_step,
+    counterfactual_page_fetches,
+)
 from .metrics import (
     Counter,
     Gauge,
@@ -40,6 +46,8 @@ __all__ = [
     "StepAttribution",
     "attribute_step",
     "counterfactual_page_fetches",
+    "RestoreAttribution",
+    "attribute_restore",
     "render_summary",
     "format_snapshot",
 ]

@@ -27,7 +27,13 @@ import numpy as np
 
 from ..core import kv_quant
 
-__all__ = ["StepAttribution", "attribute_step", "counterfactual_page_fetches"]
+__all__ = [
+    "StepAttribution",
+    "attribute_step",
+    "counterfactual_page_fetches",
+    "RestoreAttribution",
+    "attribute_restore",
+]
 
 
 @dataclass
@@ -113,4 +119,73 @@ def attribute_step(
         fast_path_queries=wp.batch_size - n_split,
         split_queries=n_split,
         launches=launches,
+    )
+
+
+@dataclass
+class RestoreAttribution:
+    """Modeled cost of restoring host-tier pages vs the counterfactual of
+    re-prefilling the same tokens (DESIGN.md §12). The restore side is
+    pure H2D bytes over the interconnect; the counterfactual is prefill
+    FLOPs for the tokens those pages hold — the two prices admission
+    trades when it treats a host hit as cheap."""
+
+    restore_pages: int
+    restore_bytes: int
+    restore_s: float  # modeled H2D upload time
+    reprefill_tokens: int
+    reprefill_flops: float
+    reprefill_s: float  # modeled recompute time
+    speedup: float  # reprefill_s / restore_s
+
+    def to_dict(self) -> dict:
+        return {
+            "restore_pages": self.restore_pages,
+            "restore_bytes": self.restore_bytes,
+            "restore_s": self.restore_s,
+            "reprefill_tokens": self.reprefill_tokens,
+            "reprefill_flops": self.reprefill_flops,
+            "reprefill_s": self.reprefill_s,
+            "speedup": self.speedup,
+        }
+
+
+def attribute_restore(
+    num_pages: int,
+    page_size: int,
+    *,
+    head_dim: int,
+    v_head_dim: Optional[int] = None,
+    kv_dtype: str = "bfloat16",
+    share_kv: bool = False,
+    num_layers: int = 1,
+    num_kv_heads: int = 1,
+    flops_per_token: float = 0.0,
+    h2d_bw: float = 25e9,
+    peak_flops: float = 312e12,
+    launch_s: float = 5e-6,
+) -> RestoreAttribution:
+    """Price `num_pages` restored host-tier pages against re-prefilling
+    the tokens they hold. Restore bytes use the same dtype-aware
+    ``page_hbm_bytes`` price as every other byte gauge (sidecars
+    included), scaled by layers x KV heads (a host slot spans the whole
+    model); `flops_per_token` is the model's prefill cost (~2 x active
+    params), `h2d_bw` the pinned-host->HBM interconnect (PCIe 4.0 x16
+    effective by default, matching ``latmodel.HwModel.h2d_bw``)."""
+    page_bytes = num_layers * num_kv_heads * kv_quant.page_hbm_bytes(
+        page_size, head_dim, v_head_dim, kv_dtype, share_kv=share_kv
+    )
+    restore_bytes = num_pages * page_bytes
+    restore_s = launch_s + restore_bytes / h2d_bw
+    tokens = num_pages * page_size
+    flops = tokens * flops_per_token
+    reprefill_s = launch_s + flops / peak_flops
+    return RestoreAttribution(
+        restore_pages=num_pages,
+        restore_bytes=restore_bytes,
+        restore_s=restore_s,
+        reprefill_tokens=tokens,
+        reprefill_flops=flops,
+        reprefill_s=reprefill_s,
+        speedup=reprefill_s / restore_s if restore_s > 0 else 0.0,
     )

@@ -93,6 +93,23 @@ def render_summary(snap: Dict, meta: Optional[Dict] = None) -> str:
             f"{int(_g(snap, 'radix.evictions'))} evictions "
             f"({int(_g(snap, 'radix.evicted_pages'))} pages)"
         )
+    if "tier.pages_total" in snap:
+        line = (
+            f"host tier: {int(_g(snap, 'tier.pages_used'))}/"
+            f"{int(_g(snap, 'tier.pages_total'))} pages held, "
+            f"{int(_g(snap, 'tier.offload_pages'))} offloaded "
+            f"({int(_g(snap, 'tier.dropped_pages'))} dropped), "
+            f"{int(_g(snap, 'tier.restore_pages'))} restored "
+            f"({_g(snap, 'tier.restore_bytes') / 1e6:.1f} MB H2D); "
+            f"hits {int(_g(snap, 'tier.hit_device'))} device / "
+            f"{int(_g(snap, 'tier.hit_host'))} host tokens"
+        )
+        if "tier.restore_speedup" in snap:
+            line += (
+                f"; restore vs re-prefill "
+                f"{_g(snap, 'tier.restore_speedup'):.1f}x (modeled)"
+            )
+        lines.append(line)
     if _g(snap, "shard.devices"):
         line = (
             f"mesh: {meta.get('shard_tag', 'kv')} over "

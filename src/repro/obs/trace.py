@@ -56,6 +56,8 @@ class Span:
     decode_v0: Optional[float] = None
     decode_tokens: int = 0
     blocked_v: float = 0.0  # explicit blocked/idle window total
+    # host-tier restore batches landed for this request: {v, pages}
+    restores: List[Dict] = field(default_factory=list)
 
     @property
     def queued_v(self) -> Optional[float]:
@@ -74,6 +76,7 @@ class Span:
             "prefill_chunks": list(self.prefill_chunks),
             "decode_v0": self.decode_v0,
             "decode_tokens": self.decode_tokens,
+            "restores": list(self.restores),
         }
 
 
@@ -130,6 +133,15 @@ class Tracer:
         sp = self.spans.get(rid)
         if sp is not None:
             sp.finish_v = float(v)
+
+    def restore(self, rid: int, v: float, pages: int) -> None:
+        """Host-tier restore batch landed for `rid` (DESIGN.md §12): the
+        engine pump uploaded `pages` KV pages at vclock `v`. Rendered as
+        an instant on the request track — it marks where the chunk gate
+        could lift."""
+        sp = self.spans.get(rid)
+        if sp is not None:
+            sp.restores.append({"v": float(v), "pages": int(pages)})
 
     def blocked_window(self, v0: float, v1: float, reason: str = "idle") -> None:
         """Explicit blocked/idle window (replay fast-forward): charged to
@@ -207,6 +219,14 @@ class Tracer:
                     _x("decode", REQUEST_PID, tid, sp.decode_v0,
                        max(end - sp.decode_v0, 0.001),
                        rid=rid, tokens=sp.decode_tokens)
+                )
+            for r in sp.restores:
+                ev.append(
+                    {
+                        "name": "restore", "ph": "i", "pid": REQUEST_PID,
+                        "tid": tid, "ts": r["v"], "s": "t",
+                        "args": {"rid": rid, "pages": r["pages"]},
+                    }
                 )
             ev.append(
                 {

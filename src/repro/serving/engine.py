@@ -113,6 +113,7 @@ class Engine:
         telemetry: bool = False,
         tracer: Optional[Tracer] = None,
         synced_timing: Optional[bool] = None,
+        host_tier_pages: int = 0,
     ):
         self.params = params
         self.cfg = cfg
@@ -197,6 +198,22 @@ class Engine:
         self.page = page_size
         # chunked (suffix) prefill needs every layer to hold paged KV
         self._chunkable = all_paged
+        # Host-memory KV tier (DESIGN.md §12): 0 disables it, leaving the
+        # step path byte-identical to the untiered engine (the A/B parity
+        # test pins this). Restores re-enter through the chunked suffix-
+        # prefill path, so the tier needs paged KV on every layer too.
+        self.host_tier = None
+        if host_tier_pages:
+            if not all_paged:
+                raise ValueError(
+                    f"host_tier_pages needs paged KV on every layer, but "
+                    f"arch {cfg.name!r} has non-attention (or enc-dec) "
+                    "layers that decode through dense state"
+                )
+            from repro.serving.host_tier import HostTier
+
+            self.host_tier = HostTier(self.kv, host_tier_pages)
+            self.radix.host_tier = self.host_tier
         # A tuned LaunchConfig may carry a prefill chunk size; it fills in
         # only when the caller left chunk_tokens unset (explicit CLI/config
         # choices always win over the tuning cache).
@@ -279,17 +296,51 @@ class Engine:
         return bool(self.scheduler.has_work or self.running)
 
     def run(self, max_steps: int = 10_000) -> EngineMetrics:
+        stalls = 0
         while self.has_work and self.metrics.steps < max_steps:
-            if not self.step():
-                break  # nothing schedulable (KV admission blocked)
+            if self.step():
+                stalls = 0
+                continue
+            # Nothing schedulable this step. Only terminate when that is
+            # provably permanent (head-of-line demand exceeds free +
+            # evictable pages and no restore is in flight) — the old
+            # break-on-first-False declared block while eviction could
+            # still have reclaimed pages. The stall counter is a backstop
+            # against any liveness bug looping on no-op steps.
+            stalls += 1
+            if self.scheduler.blocked_forever(len(self.running)) or stalls >= 3:
+                break
         return self.metrics
 
     # --- engine internals -----------------------------------------------------
 
     def step(self) -> bool:
-        """One scheduler-driven step. Returns True iff work was done."""
+        """One scheduler-driven step. Returns True iff work was done.
+
+        With a host tier, queued restores are pumped FIRST: the pump
+        clears uploaded pages from the tier's pending set, so the very
+        same step's `dep_met` can lift the restore gate and hand the
+        request a chunk — restore latency hides behind whatever chunks
+        and decodes share the step (DESIGN.md §12)."""
+        restored = 0
+        if self.host_tier is not None:
+            restored = self._pump_restores()
         plan = self.scheduler.schedule(len(self.running))
         if not plan.chunks and not self.running:
+            if restored:
+                # restore-only step: pages uploaded but every request is
+                # still gated — real work (H2D traffic), charged one token
+                # unit so gated TTFT sees the restore latency
+                v0 = self.vclock
+                self.vclock += 1.0
+                self.metrics.steps += 1
+                if self.tracer.enabled:
+                    self.tracer.step_event(
+                        self.metrics.steps, v0, self.vclock,
+                        prefill_tokens=0, decode_batch=0, admitted=0,
+                        restored_pages=restored,
+                    )
+                return True
             self.metrics.idle_steps += 1
             return False
         v0 = self.vclock
@@ -316,6 +367,11 @@ class Engine:
         self.metrics.steps += 1
         if tr.enabled:
             st = self.backend.cache.stats
+            extra = {}
+            if self.host_tier is not None:
+                # only with a tier: the disabled-engine step payload must
+                # stay byte-identical to the untiered build (parity test)
+                extra["restored_pages"] = restored
             tr.step_event(
                 self.metrics.steps, v0, self.vclock,
                 prefill_tokens=plan.prefill_tokens,
@@ -325,8 +381,22 @@ class Engine:
                 plan_misses=st.misses - pre[1],
                 plan_refreshes=st.refreshes - pre[2],
                 arrays_uploaded=st.arrays_uploaded - pre[3],
+                **extra,
             )
         return True
+
+    def _pump_restores(self) -> int:
+        """Uploads up to `restore_pages_per_step` queued host-tier pages
+        (all of them when unset) and traces per-request restore progress.
+        Returns pages uploaded. Runs before scheduling so gates lift in
+        the same step the payload lands."""
+        per_rid = self.host_tier.pump(self.scheduler.cfg.restore_pages_per_step)
+        if not per_rid:
+            return 0
+        if self.tracer.enabled:
+            for rid, pages in per_rid.items():
+                self.tracer.restore(rid, self.vclock, pages)
+        return sum(per_rid.values())
 
     def _gather_prefix_caches(self, pages: List[int], cached: int):
         """Per-layer K/V of the pool-resident prefix (radix-cached pages
@@ -568,6 +638,33 @@ class Engine:
             {f"radix.{k}": v for k, v in self.radix.stats().items()},
             owner="serving.radix_cache",
         )
+        if self.host_tier is not None:
+            ht = self.host_tier
+            reg.set_many(
+                {f"tier.{k}": v for k, v in ht.stats().items()},
+                owner="serving.host_tier",
+            )
+            if ht.restore_pages:
+                from repro.obs.attribution import attribute_restore
+
+                ra = attribute_restore(
+                    ht.restore_pages, self.page,
+                    head_dim=self.kv.cfg.head_dim,
+                    v_head_dim=self.kv.cfg.v_head_dim,
+                    kv_dtype=self.kv.kv_dtype,
+                    share_kv=self.kv.share_kv,
+                    num_layers=self.kv.cfg.num_layers,
+                    num_kv_heads=self.kv.cfg.num_kv_heads,
+                    flops_per_token=2.0 * self.cfg.active_params(),
+                )
+                reg.set_many(
+                    {
+                        "tier.restore_modeled_s": ra.restore_s,
+                        "tier.reprefill_modeled_s": ra.reprefill_s,
+                        "tier.restore_speedup": ra.speedup,
+                    },
+                    owner="obs.attribution",
+                )
         reg.set_many(
             {
                 "alloc.pages_total": self.kv.allocator.num_pages,

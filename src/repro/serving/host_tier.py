@@ -1,0 +1,201 @@
+"""Host-memory KV tier: offload target for cold radix prefixes.
+
+Under multi-tenant cache pressure, the single-pass LRU evict (DESIGN.md
+§7) used to *drop* exactly the shared-prefix pages the next co-tenant
+request would re-prefill — full prefill FLOPs plus HBM writes for KV the
+pool already held. The host tier turns eviction into *demotion*: evicted
+pages move their payload (storage dtype, plus the per-page quant scale
+sidecars for int8/fp8 pools) into preallocated host buffers, and a later
+radix hit on a host-resident prefix brings them back with an H2D page
+upload instead of recompute — restore **bytes**, not prefill **FLOPs**.
+
+The restore path is asynchronous by construction: admission enqueues the
+uploads and the engine pumps a bounded number of pages per step
+(``SchedulerConfig.restore_pages_per_step``) while other requests'
+chunks and decodes run; the scheduler gates the restoring request's own
+chunks on upload completion through the same dependency mechanism as
+co-arrival sharing (``Request.restore_wait`` mirrors ``share_from``).
+The ``pending`` set — device page ids whose payload has not landed yet —
+is the one gating surface: no prefill chunk may attend over a page still
+in it (tested property, tests/test_host_tier.py).
+
+Buffers are plain preallocated numpy arrays: on the CPU container that
+IS host memory; on an accelerator backend the same arrays are what
+``jax.device_put`` with a pinned-host memory kind would wrap, and the
+transfer accounting (``offload_bytes``/``restore_bytes`` at
+``kv_quant.page_hbm_bytes`` prices) stands in for the PCIe DMA either
+way. Capacity is fixed at construction (``--host-tier-pages``); a full
+tier makes ``offload`` decline, and eviction falls back to dropping —
+the tier can only ever *add* recoverability, never block reclaim.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import kv_quant
+
+__all__ = ["HostTier"]
+
+
+class HostTier:
+    """Fixed-capacity pinned-host page store + async restore queue.
+
+    One host slot holds one KV page across ALL layers and KV heads
+    (payload ``[L, Hkv, page, d]`` per stream, scale sidecar ``[L, Hkv]``
+    when the pool is quantized) — the unit ``RadixCache`` offloads and
+    restores, matching its one-page-per-node granularity.
+    """
+
+    def __init__(self, kv, num_pages: int):
+        if num_pages < 1:
+            raise ValueError("host tier needs at least one page")
+        self.kv = kv
+        cfg = kv.cfg
+        self.num_pages = num_pages
+        dt = kv.k_pages.dtype
+        self._k = np.zeros(
+            (num_pages, cfg.num_layers, cfg.num_kv_heads, cfg.page_size,
+             cfg.head_dim), dt,
+        )
+        self._v = None
+        if not kv.share_kv:
+            self._v = np.zeros(
+                (num_pages, cfg.num_layers, cfg.num_kv_heads, cfg.page_size,
+                 cfg.v_head_dim), dt,
+            )
+        self._ks = self._vs = None
+        if kv.quantized:
+            ss = (num_pages, cfg.num_layers, cfg.num_kv_heads)
+            self._ks = np.zeros(ss, np.float32)
+            if not kv.share_kv:
+                self._vs = np.zeros(ss, np.float32)
+        # descending so .pop() hands out slot 0 first (stable LRU-order
+        # slot assignment, asserted by the offload-order test)
+        self._free = list(range(num_pages - 1, -1, -1))
+        # async restore state: queued (rid, host_slot, device_page)
+        # transfers plus the set of device pages awaiting upload — the
+        # scheduler's chunk-gating surface
+        self.queue: Deque[Tuple[int, int, int]] = deque()
+        self.pending: set = set()
+        # transfer bytes are priced per (layer, head, page) with the same
+        # dtype-aware model the HBM attribution uses — sidecars included
+        self._page_bytes = (
+            cfg.num_layers * cfg.num_kv_heads * kv_quant.page_hbm_bytes(
+                cfg.page_size, cfg.head_dim, cfg.v_head_dim, kv.kv_dtype,
+                share_kv=kv.share_kv,
+            )
+        )
+        self.offload_pages = 0
+        self.restore_pages = 0
+        self.dropped_pages = 0  # offload declined: tier full, page dropped
+        self.hit_device = 0  # tokens matched on device-resident nodes
+        self.hit_host = 0  # tokens matched on host-resident nodes
+        self.offload_bytes = 0
+        self.restore_bytes = 0
+
+    # --- capacity -----------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def has_pending(self) -> bool:
+        return bool(self.pending)
+
+    # --- offload (D2H) ------------------------------------------------------
+
+    def offload(self, dev_pages: List[int]) -> Optional[List[int]]:
+        """Demotes device pages into host slots; returns the slots in page
+        order, or None when the tier cannot hold them all (the caller
+        then falls back to dropping — eviction never blocks on the tier).
+        The device pages themselves stay owned by the caller, which
+        decrefs them after this returns."""
+        n = len(dev_pages)
+        if n == 0 or len(self._free) < n:
+            if n:
+                self.dropped_pages += n
+            return None
+        slots = [self._free.pop() for _ in range(n)]
+        k, v, ks, vs = self.kv.export_pages(dev_pages)
+        sl = np.asarray(slots)
+        self._k[sl] = k
+        if self._v is not None and v is not None:
+            self._v[sl] = v
+        if self._ks is not None and ks is not None:
+            self._ks[sl] = ks
+        if self._vs is not None and vs is not None:
+            self._vs[sl] = vs
+        self.offload_pages += n
+        self.offload_bytes += n * self._page_bytes
+        return slots
+
+    # --- restore (H2D), async -----------------------------------------------
+
+    def enqueue_restore(
+        self, rid: int, transfers: List[Tuple[int, int]]
+    ) -> None:
+        """Queues (host_slot, device_page) uploads for request ``rid``.
+        The device pages enter ``pending`` immediately: they are already
+        wired into the radix tree and the request's block table, but
+        carry no payload until ``pump`` uploads them."""
+        for slot, dev in transfers:
+            self.queue.append((rid, slot, dev))
+            self.pending.add(dev)
+
+    def pump(self, budget: Optional[int] = None) -> Dict[int, int]:
+        """Uploads up to ``budget`` queued pages (all of them when None)
+        in one batched import, frees their host slots, and clears them
+        from ``pending``. Returns {rid: pages restored} for tracing."""
+        n = len(self.queue) if budget is None else min(budget, len(self.queue))
+        if n <= 0:
+            return {}
+        batch = [self.queue.popleft() for _ in range(n)]
+        slots = [s for _, s, _ in batch]
+        devs = [d for _, _, d in batch]
+        sl = np.asarray(slots)
+        self.kv.import_pages(
+            devs,
+            self._k[sl],
+            None if self._v is None else self._v[sl],
+            None if self._ks is None else self._ks[sl],
+            None if self._vs is None else self._vs[sl],
+        )
+        self.pending.difference_update(devs)
+        self._free.extend(slots)
+        self.restore_pages += n
+        self.restore_bytes += n * self._page_bytes
+        per_rid: Dict[int, int] = {}
+        for rid, _, _ in batch:
+            per_rid[rid] = per_rid.get(rid, 0) + 1
+        return per_rid
+
+    def free_slots(self, slots: List[int]) -> None:
+        """Releases host slots without restoring (node dropped from the
+        tree, or its content recomputed by a request that was admitted
+        before the restore could be scheduled)."""
+        self._free.extend(slots)
+
+    # --- observability ------------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "offload_pages": self.offload_pages,
+            "restore_pages": self.restore_pages,
+            "dropped_pages": self.dropped_pages,
+            "hit_device": self.hit_device,
+            "hit_host": self.hit_host,
+            "offload_bytes": self.offload_bytes,
+            "restore_bytes": self.restore_bytes,
+            "pages_total": self.num_pages,
+            "pages_used": self.num_used,
+            "pending_pages": len(self.pending),
+        }

@@ -383,6 +383,61 @@ class PagedKVCache:
             return payload.astype(jnp.float32)
         return kv_quant.dequantize_pages(payload, scales, self.kv_dtype)
 
+    # --- host-tier page transfer (DESIGN.md §12) ----------------------------
+
+    def export_pages(self, pages: List[int]):
+        """Host (numpy) copies of whole pages in the pool's STORAGE dtype:
+        payloads ``[n, L, Hkv, page, d]`` plus, for quantized pools, the
+        per-page scale sidecars ``[n, L, Hkv]``. Returns
+        ``(k, v, k_scales, v_scales)`` with None for absent streams
+        (share_kv has no v; direct-storage pools have no sidecars).
+
+        Exporting raw storage + sidecar — never a dequantized view —
+        makes offload/restore a bit-identical round trip for any
+        ``kv_dtype``: import_pages writes the same bits back with no
+        requantisation step to compound error."""
+        pids = jnp.asarray(np.asarray(pages, np.int32))
+        k = np.moveaxis(np.asarray(self.k_pages[:, :, pids]), 2, 0)
+        v = None
+        if not self.share_kv:
+            v = np.moveaxis(np.asarray(self.v_pages[:, :, pids]), 2, 0)
+        ks = vs = None
+        if self.quantized:
+            ks = np.moveaxis(np.asarray(self.k_scales[:, :, pids]), 2, 0)
+            if not self.share_kv:
+                vs = np.moveaxis(np.asarray(self.v_scales[:, :, pids]), 2, 0)
+        return k, v, ks, vs
+
+    def import_pages(
+        self,
+        pages: List[int],
+        k: np.ndarray,
+        v: Optional[np.ndarray] = None,
+        k_scales: Optional[np.ndarray] = None,
+        v_scales: Optional[np.ndarray] = None,
+    ) -> None:
+        """Writes previously exported pages back (H2D restore): storage
+        payload and sidecars land verbatim — no dequant/requant cycle —
+        so a restored page is bit-identical to the page that was
+        offloaded. Layouts match export_pages."""
+        pids = jnp.asarray(np.asarray(pages, np.int32))
+        self.k_pages = self.k_pages.at[:, :, pids].set(
+            jnp.asarray(np.moveaxis(k, 0, 2))
+        )
+        if not self.share_kv and v is not None:
+            self.v_pages = self.v_pages.at[:, :, pids].set(
+                jnp.asarray(np.moveaxis(v, 0, 2))
+            )
+        if self.quantized and k_scales is not None:
+            self.k_scales = self.k_scales.at[:, :, pids].set(
+                jnp.asarray(np.moveaxis(k_scales, 0, 2))
+            )
+            if not self.share_kv and v_scales is not None:
+                self.v_scales = self.v_scales.at[:, :, pids].set(
+                    jnp.asarray(np.moveaxis(v_scales, 0, 2))
+                )
+        self._reshard()
+
 
 def token_to_page_slots(
     pages: List[int], start_token: int, num_tokens: int, page_size: int

@@ -8,6 +8,18 @@ of the pack scheduler's prefix forest.
 
 Sharing is page-granular: only full pages are ever shared (the invariant
 the prefix forest relies on). LRU eviction recycles unreferenced subtrees.
+
+Hierarchical tiering (DESIGN.md §12): with a ``HostTier`` attached, a
+node's page lives in one of two locations — **device** (``pages`` holds
+the pool page id) or **host** (``host_slots`` holds the tier slot;
+``pages`` is empty). Eviction *demotes* cold nodes to host instead of
+dropping them; a later match on a host-resident run re-adopts the nodes
+onto fresh device pages (``restore_nodes``) whose payload arrives
+asynchronously. The structural invariant along every root→leaf path is
+device-prefix / host-suffix: only "device-leaf" nodes (no device-resident
+children) are ever offloaded, so the cascade that made LRU eviction a
+single pass keeps working — demoting a child turns its parent into the
+next device-leaf.
 """
 
 from __future__ import annotations
@@ -23,20 +35,29 @@ from repro.serving.kv_cache import PageAllocator
 @dataclass
 class RadixNode:
     tokens: Tuple[int, ...]  # token run of this edge (page-aligned)
-    pages: List[int]  # physical pages backing the run
+    pages: List[int]  # physical pages backing the run (empty when host)
     children: Dict[int, "RadixNode"] = field(default_factory=dict)
     parent: Optional["RadixNode"] = None
     last_used: float = 0.0
+    # host-tier slots when the run is offloaded (None = device-resident)
+    host_slots: Optional[List[int]] = None
 
     @property
     def is_leaf(self) -> bool:
         return not self.children
 
+    @property
+    def on_host(self) -> bool:
+        return self.host_slots is not None
+
 
 class RadixCache:
-    def __init__(self, allocator: PageAllocator, page_size: int):
+    def __init__(self, allocator: PageAllocator, page_size: int, host_tier=None):
         self.alloc = allocator
         self.page = page_size
+        # optional serving.host_tier.HostTier; None keeps every path (and
+        # every stat) byte-identical to the untiered cache
+        self.host_tier = host_tier
         self.root = RadixNode((), [])
         # prefix-reuse observability (DESIGN.md §11): plain int counters,
         # published as `radix.*` by Engine.metrics_snapshot
@@ -56,12 +77,46 @@ class RadixCache:
         }
 
     def match_prefix(self, tokens: List[int]) -> Tuple[List[int], int]:
-        """Longest page-aligned cached prefix -> (pages, matched_tokens).
-        Increfs the returned pages (caller owns one reference)."""
+        """Longest page-aligned DEVICE-resident cached prefix ->
+        (pages, matched_tokens). Increfs the returned pages (caller owns
+        one reference). Stops at the first host-resident node — callers
+        that can schedule restores use match_prefix_tiered instead."""
+        pages, matched, _, _ = self._walk(tokens, tiered=False)
+        if pages:
+            self.alloc.incref(pages)
+        self.lookups += 1
+        self.hit_tokens += matched
+        return pages, matched
+
+    def match_prefix_tiered(
+        self, tokens: List[int]
+    ) -> Tuple[List[int], int, List[RadixNode], int]:
+        """Tier-aware match: the device-resident prefix (incref'd, as
+        match_prefix) plus the CONTIGUOUS host-resident continuation ->
+        (pages, matched_tokens, host_nodes, host_tokens). The host nodes
+        are returned in token order for restore_nodes; no reference is
+        taken on them (host slots are single-owner). Host hits count into
+        hit_tokens — a restored prefix is a cache hit, just one priced in
+        H2D bytes instead of prefill FLOPs."""
+        pages, matched, host_nodes, host_tokens = self._walk(tokens, tiered=True)
+        if pages:
+            self.alloc.incref(pages)
+        self.lookups += 1
+        self.hit_tokens += matched + host_tokens
+        if self.host_tier is not None:
+            self.host_tier.hit_device += matched
+            self.host_tier.hit_host += host_tokens
+        return pages, matched, host_nodes, host_tokens
+
+    def _walk(self, tokens: List[int], tiered: bool):
         node = self.root
         pages: List[int] = []
         matched = 0
+        host_nodes: List[RadixNode] = []
+        host_tokens = 0
         i = 0
+        now = time.monotonic()
+        in_host = False
         while True:
             nxt = node.children.get(tokens[i]) if i < len(tokens) else None
             if nxt is None:
@@ -69,20 +124,36 @@ class RadixCache:
             run = nxt.tokens
             if len(tokens) - i < len(run) or tuple(tokens[i : i + len(run)]) != run:
                 break
-            pages += nxt.pages
-            matched += len(run)
+            if nxt.on_host:
+                if not tiered:
+                    break
+                in_host = True
+            elif in_host:
+                # a device node below a host run would violate the
+                # device-prefix/host-suffix invariant; defensive stop
+                break
+            if in_host:
+                host_nodes.append(nxt)
+                host_tokens += len(run)
+            else:
+                pages += nxt.pages
+                matched += len(run)
             i += len(run)
-            nxt.last_used = time.monotonic()
+            nxt.last_used = now
             node = nxt
-        if pages:
-            self.alloc.incref(pages)
-        self.lookups += 1
-        self.hit_tokens += matched
-        return pages, matched
+        return pages, matched, host_nodes, host_tokens
 
     def insert(self, tokens: List[int], pages: List[int]) -> None:
         """Registers a computed prefix (full pages only). Takes one extra
-        reference on behalf of the tree."""
+        reference on behalf of the tree.
+
+        A matching HOST-resident node on the walk is re-adopted onto the
+        freshly computed device page (content is deterministic, so the
+        recompute is bit-identical to the host copy): its host slots are
+        released and the walk continues through it. This happens when a
+        request was admitted without a tiered match (or its restore never
+        got scheduled) and re-prefilled tokens the tier still held — and
+        it preserves the device-above-host path invariant."""
         n_full = len(tokens) // self.page
         tokens = tokens[: n_full * self.page]
         pages = pages[:n_full]
@@ -93,6 +164,12 @@ class RadixCache:
             key = tokens[i]
             nxt = node.children.get(key)
             if nxt is not None and tuple(tokens[i : i + len(nxt.tokens)]) == nxt.tokens:
+                if nxt.on_host:
+                    if self.host_tier is not None:
+                        self.host_tier.free_slots(nxt.host_slots)
+                    nxt.host_slots = None
+                    nxt.pages = [pages[i // self.page]]
+                    self.alloc.incref(nxt.pages)
                 node = nxt
                 i += len(nxt.tokens)
                 continue
@@ -108,11 +185,30 @@ class RadixCache:
                 i += self.page
             return
 
+    def restore_nodes(
+        self, nodes: List[RadixNode], dev_pages: List[int]
+    ) -> List[Tuple[int, int]]:
+        """Re-adopts host-resident nodes onto freshly allocated device
+        pages (one page per node, token order). The tree takes its usual
+        reference on each page; the payload upload is queued by the
+        caller via HostTier.enqueue_restore. Returns the
+        (host_slot, device_page) transfer pairs."""
+        transfers: List[Tuple[int, int]] = []
+        for node, pg in zip(nodes, dev_pages):
+            assert node.on_host and len(node.host_slots) == 1
+            transfers.append((node.host_slots[0], pg))
+            node.host_slots = None
+            node.pages = [pg]
+            self.alloc.incref([pg])
+        return transfers
+
     def match_len(self, tokens: List[int]) -> int:
         """Length of the longest page-aligned cached prefix, WITHOUT taking
         a reference or touching LRU timestamps — a pure probe, used by the
         prefix-affinity scheduling policy (DESIGN.md §7) to rank waiting
-        requests by how deep their radix match runs."""
+        requests by how deep their radix match runs. Host-resident runs
+        count: a restore is priced as a (cheap) hit by admission, so the
+        policy must rank it like one."""
         node = self.root
         i = 0
         while True:
@@ -125,39 +221,97 @@ class RadixCache:
             i += len(run)
             node = nxt
 
-    def evict(self, num_pages: int) -> int:
-        """LRU-evicts unreferenced leaves until `num_pages` freed (refcount
-        1 = only the tree holds it). Returns pages actually freed.
+    @property
+    def num_evictable(self) -> int:
+        """Device pages eviction could reclaim right now: tree-held pages
+        whose only reference is the tree itself. With nothing in flight
+        this is EXACT for the cascaded single-pass evict (a refcount-1
+        page's whole subtree is refcount-1 below it — request references
+        pin entire root paths, so refcounts never increase with depth).
+        A host tier doesn't change the count: offload and drop both free
+        the device page (a full tier falls back to dropping), host-
+        resident nodes hold no device pages, and restoring a host hit
+        consumes fresh device pages exactly like re-prefilling it would —
+        so free + num_evictable is the right feasibility bound for the
+        blocked-replay termination check (Scheduler.blocked_forever)."""
+        total = 0
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root:
+                total += sum(1 for p in n.pages if self.alloc.refs[p] == 1)
+        return total
 
-        One tree traversal per call: all currently-evictable leaves go into
-        a min-heap keyed by last_used, and evicting a leaf pushes its parent
-        when that parent just became an evictable leaf itself — no re-walk
-        per freed page (the old per-victim full walk was
-        O(leaves x freed-pages)). No external incref can interleave within a
-        call, so heap-entry evictability is decided once at push time.
+    def evict(self, num_pages: int) -> int:
+        """LRU-evicts unreferenced device leaves until `num_pages` freed
+        (refcount 1 = only the tree holds it). Returns pages actually
+        freed. With a host tier attached, victims are DEMOTED — payload
+        moves to a host slot, the device page frees either way — falling
+        back to dropping when the tier is full.
+
+        One tree traversal per call: all currently-evictable device-leaf
+        nodes go into a min-heap keyed by last_used, and evicting a leaf
+        pushes its parent when that parent just became an evictable
+        device-leaf itself — no re-walk per freed page (the old
+        per-victim full walk was O(leaves x freed-pages)). No external
+        incref can interleave within a call, so heap-entry evictability
+        is decided once at push time. "Device-leaf" = every child is
+        host-resident (a host node's subtree is all-host by invariant),
+        so demotion preserves the leaf-up cascade order.
         """
         freed = 0
+        tier = self.host_tier
 
         def evictable(n: RadixNode) -> bool:
-            return all(self.alloc.refs[p] == 1 for p in n.pages)
+            return bool(n.pages) and all(self.alloc.refs[p] == 1 for p in n.pages)
+
+        def device_leaf(n: RadixNode) -> bool:
+            return all(c.on_host for c in n.children.values())
 
         heap = []
         stack = [self.root]
         while stack:
             n = stack.pop()
             stack.extend(n.children.values())
-            if n is not self.root and n.is_leaf and evictable(n):
+            if n is not self.root and device_leaf(n) and evictable(n):
                 heapq.heappush(heap, (n.last_used, id(n), n))
         while freed < num_pages and heap:
             _, _, victim = heapq.heappop(heap)
+            slots = tier.offload(victim.pages) if tier is not None else None
             self.alloc.decref(victim.pages)
             freed += len(victim.pages)
             parent = victim.parent
-            if parent:
-                parent.children.pop(victim.tokens[0], None)
-                if parent is not self.root and parent.is_leaf and evictable(parent):
-                    heapq.heappush(heap, (parent.last_used, id(parent), parent))
+            if slots is not None:
+                # demoted: the node stays in the tree, payload on host
+                victim.host_slots = slots
+                victim.pages = []
+            else:
+                # dropped (no tier, or tier full): detach the node — and
+                # any host-resident descendants, whose path just lost its
+                # device anchor (their slots are released, not leaked)
+                if victim.children and tier is not None:
+                    self._free_host_subtree(victim)
+                if parent:
+                    parent.children.pop(victim.tokens[0], None)
+            if (
+                parent
+                and parent is not self.root
+                and device_leaf(parent)
+                and evictable(parent)
+            ):
+                heapq.heappush(heap, (parent.last_used, id(parent), parent))
         if freed:
             self.evictions += 1
             self.evicted_pages += freed
         return freed
+
+    def _free_host_subtree(self, node: RadixNode) -> None:
+        stack = list(node.children.values())
+        node.children = {}
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n.on_host:
+                self.host_tier.free_slots(n.host_slots)
+                n.host_slots = None

@@ -31,6 +31,7 @@ def replay_trace(
     (summarize them with serving.stream.summarize)."""
     pending = sorted(reqs, key=lambda r: r.arrival)
     i = 0
+    stalls = 0
     while i < len(pending) or eng.has_work:
         while i < len(pending) and pending[i].arrival * tokens_per_sec <= eng.vclock:
             r = pending[i]
@@ -60,7 +61,21 @@ def replay_trace(
                     eng.tracer.blocked_window(v0, eng.vclock,
                                               reason="kv_blocked")
             else:
-                break  # permanently blocked; report what finished
+                # No arrivals left and nothing scheduled this step. Only
+                # give up when the block is provably permanent — the
+                # scheduler's feasibility check counts free PLUS
+                # evictable pages and in-flight host-tier restores, where
+                # the old check read `alloc.num_free` alone and bailed
+                # while eviction could still have unblocked the head
+                # request. Stall counter backstops liveness bugs.
+                stalls += 1
+                if (
+                    eng.scheduler.blocked_forever(len(eng.running))
+                    or stalls >= 3
+                ):
+                    break  # permanently blocked; report what finished
+        else:
+            stalls = 0
         if eng.metrics.steps >= max_steps:
             break
     return eng.metrics.finished

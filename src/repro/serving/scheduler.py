@@ -68,6 +68,11 @@ class Request:
     # request still mid-prefill — chunks are gated until the provider has
     # written that many tokens
     share_from: Optional[tuple] = None
+    # host-tier restore gating (DESIGN.md §12): device page ids in this
+    # request's block table whose payload is still uploading from the
+    # host tier — chunks are gated until the tier pump clears them, the
+    # same dependency shape as share_from (empty = no gate)
+    restore_wait: set = field(default_factory=set)
 
 
 @dataclass
@@ -84,12 +89,18 @@ class SchedulerConfig:
     max_running: Optional[int] = None  # cap on running + prefilling
     kv_headroom_pages: int = 0  # pages kept free past admission demand
     allow_evict: bool = True  # evict unreferenced radix subtrees on demand
+    # Max host-tier pages uploaded per engine step; None = drain the whole
+    # restore queue each step. Bounding it models finite H2D bandwidth and
+    # is what makes restores actually overlap chunked prefill.
+    restore_pages_per_step: Optional[int] = None
 
     def __post_init__(self):
         if self.chunk_tokens is not None and self.chunk_tokens < 1:
             raise ValueError("chunk_tokens must be >= 1")
         if self.step_token_budget is not None and self.step_token_budget < 1:
             raise ValueError("step_token_budget must be >= 1")
+        if self.restore_pages_per_step is not None and self.restore_pages_per_step < 1:
+            raise ValueError("restore_pages_per_step must be >= 1")
 
 
 @dataclass
@@ -233,14 +244,19 @@ class Scheduler:
         def dep_met(req: Request) -> bool:
             """A request borrowing in-flight prefix pages may only chunk
             once its provider has written (or will have written, earlier
-            in this very plan) the shared tokens."""
-            if req.share_from is None:
-                return True
-            prov, k = req.share_from
-            if projected.get(id(prov), prov.prefilled) >= k:
-                req.share_from = None  # provider progress is monotone
-                return True
-            return False
+            in this very plan) the shared tokens; one restoring pages
+            from the host tier, once the pump has uploaded them. Both
+            gates clear permanently (progress is monotone)."""
+            if req.share_from is not None:
+                prov, k = req.share_from
+                if projected.get(id(prov), prov.prefilled) < k:
+                    return False
+                req.share_from = None
+            if req.restore_wait:
+                req.restore_wait &= self.radix.host_tier.pending
+                if req.restore_wait:
+                    return False
+            return True
 
         def assign_chunk(req: Request) -> None:
             remaining = len(req.prompt) - req.prefilled
@@ -290,6 +306,36 @@ class Scheduler:
                 assign_chunk(req)
         return plan
 
+    def blocked_forever(self, num_running: int) -> bool:
+        """True when no future step can make progress without new
+        arrivals: nothing is running or prefilling, no restore is in
+        flight, and the head-of-line waiting request can never fit even
+        if every reclaimable page were evicted. Used by the replay loops
+        in place of the old `alloc.num_free`-only check, which declared
+        permanent block while eviction (or a host-tier restore) could
+        still have unblocked admission. Exact when nothing is in flight:
+        with no request references, every tree-held page is refcount-1
+        and so counted by `num_evictable`; the host tier never shrinks
+        reclaim (a full tier falls back to dropping) and host hits don't
+        shrink page demand (restored pages occupy fresh device pages
+        exactly like re-prefilled ones)."""
+        if num_running or self.prefilling or not self.waiting:
+            return False
+        tier = self.radix.host_tier
+        if tier is not None and tier.has_pending:
+            return False
+        ctx = SchedContext(
+            free_pages=self.alloc.num_free,
+            num_running=num_running,
+            num_prefilling=0,
+            page_size=self.page,
+            radix=self.radix,
+        )
+        head = self.policy.order(self.waiting, ctx)[0]
+        n_pages = -(-(len(head.prompt) + head.max_new_tokens) // self.page)
+        reclaimable = self.radix.num_evictable if self.cfg.allow_evict else 0
+        return n_pages > self.alloc.num_free + reclaimable - self.cfg.kv_headroom_pages
+
     # --- admission ----------------------------------------------------------
 
     def _page_aligned_common(self, a: List[int], b: List[int]) -> int:
@@ -311,15 +357,34 @@ class Scheduler:
         common prefix (content is deterministic, so borrowed pages are
         bit-identical to a recompute). The borrower records a
         `share_from` dependency; `schedule` gates its chunks until the
-        provider has written that many tokens."""
+        provider has written that many tokens.
+
+        Host-tier hits (DESIGN.md §12) are priced as CHEAP: the host-
+        resident continuation counts into `cached_tokens`, so those
+        tokens never enter the prefill budget or the virtual clock — the
+        request pays restore bytes (pumped by the engine) instead of
+        prefill FLOPs. Its chunks gate on the upload via
+        `restore_wait`, the same mechanism as co-arrival sharing."""
         S = len(req.prompt)
         n_pages = -(-(S + req.max_new_tokens) // self.page)
-        cached_pages, cached = self.radix.match_prefix(req.prompt)
-        provider, shared = None, cached
+        tier = self.radix.host_tier
+        if tier is not None:
+            cached_pages, cached, host_nodes, host_tokens = (
+                self.radix.match_prefix_tiered(req.prompt)
+            )
+        else:
+            cached_pages, cached = self.radix.match_prefix(req.prompt)
+            host_nodes, host_tokens = [], 0
+        provider, shared = None, cached + host_tokens
         for other in self.prefilling:
             k = self._page_aligned_common(req.prompt, other.prompt)
             if k > shared:
                 provider, shared = other, k
+        if provider is not None:
+            # borrowing the provider's live pages covers at least as many
+            # tokens as device cache + host restore would; the host nodes
+            # stay offloaded, untouched, for a later request
+            host_nodes, host_tokens = [], 0
         base_pages = (
             provider.pages[: shared // self.page]
             if provider is not None
@@ -354,7 +419,21 @@ class Scheduler:
         shard_of = getattr(self.alloc, "shard_of", None)
         if shard_of is not None and base_pages:
             prefer = shard_of(base_pages[-1])
-        req.pages = base_pages + self.alloc.alloc(new_needed, prefer=prefer)
+        fresh = self.alloc.alloc(new_needed, prefer=prefer)
+        req.pages = base_pages + fresh
+        req.restore_wait = set()
+        if host_nodes:
+            # the host continuation lands on the leading fresh pages (they
+            # sit right after the device-cached prefix in the block table,
+            # i.e. in token order); payload arrives via the engine's pump
+            restored = fresh[: len(host_nodes)]
+            transfers = self.radix.restore_nodes(host_nodes, restored)
+            tier.enqueue_restore(req.rid, transfers)
+            req.restore_wait = set(restored)
+        if tier is not None and tier.pending:
+            # follower gating: the device prefix may include pages another
+            # request's restore re-adopted but the pump hasn't uploaded yet
+            req.restore_wait |= tier.pending.intersection(base_pages)
         req.cached_tokens = shared
         # chunked prefill resumes after the shared prefix; at least one
         # prompt token is always recomputed so the final chunk emits the

@@ -193,6 +193,42 @@ def mixed_longprompt_trace(
     return out
 
 
+def cache_pressure_trace(
+    num_tenants: int = 4,
+    rounds: int = 3,
+    prefix_tokens: int = 160,
+    prompt_tokens: int = 16,
+    new_tokens: int = 8,
+    gap: float = 0.06,
+    vocab: int = 32000,
+    seed: int = 0,
+) -> List[TraceRequest]:
+    """Multi-tenant radix-thrash workload (DESIGN.md §12): `num_tenants`
+    tenants, each with its own `prefix_tokens`-token shared prefix, send
+    requests round-robin — tenant 0, 1, ..., N-1, tenant 0 again — for
+    `rounds` rounds. Size the device pool BELOW the combined prefix
+    working set and LRU eviction always drops the least-recently-used
+    tenant's prefix, which round-robin makes exactly the one the NEXT
+    request needs: every revisit re-prefills its whole prefix. A host
+    tier turns each of those re-prefills into an async page restore —
+    the tiering-vs-evict bench (benchmarks/e2e_serving.py) replays this
+    trace both ways. Arrivals are a fixed `gap` apart so successive
+    tenants never co-arrive (co-arrival sharing would mask the thrash)."""
+    out = []
+    prefixes = [
+        _toks(np.random.default_rng(seed + 100 + t), prefix_tokens, vocab)
+        for t in range(num_tenants)
+    ]
+    rng = np.random.default_rng(seed)
+    for i in range(num_tenants * rounds):
+        t = i % num_tenants
+        toks = prefixes[t] + _toks(rng, prompt_tokens, vocab)
+        out.append(
+            TraceRequest(i * gap, toks, new_tokens, prefix_levels=(t,))
+        )
+    return out
+
+
 def trace_to_decode_batch(
     reqs: List[TraceRequest],
     page_size: int = 16,
